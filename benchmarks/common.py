@@ -1,0 +1,124 @@
+"""Shared benchmark harness: train small BWQ-A / BSQ / float models on the
+synthetic datasets so every paper table is computed from *actual trained
+quantization state*, not canned numbers.
+
+BSQ is exactly BWQ-A with one whole-layer block (BlockingSpec(0, 0)) —
+the paper's own framing of the baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY
+from repro.core.policy import BWQSchedule
+from repro.data import SyntheticCIFAR, SyntheticLM, make_lm_pipeline
+from repro.models.api import build
+from repro.models.cnn import cnn_loss, resnet_init, resnet_apply, vgg_init, vgg_apply
+from repro.models.common import QuantConfig
+from repro.optim import adamw, cosine_schedule, sgd
+from repro.train import Trainer, TrainerConfig
+from repro.train.step import quant_stats
+
+PAPER_WB = dict(wb_rows=9, wb_cols=8)      # OU-sized blocks (paper)
+BSQ_WB = dict(wb_rows=0, wb_cols=0)        # whole-layer blocks (BSQ)
+
+
+def lm_quality(api, params, cfg, steps=4, seq=64, batch=16) -> float:
+    """Negative CE (higher is better) on held-out synthetic batches."""
+    gen = SyntheticLM(cfg.vocab, seq, batch, seed=1234)
+    tot = 0.0
+    for i in range(steps):
+        loss, m = api.loss(params, gen.batch_at(10_000 + i))
+        tot += float(m["ce"])
+    return -tot / steps
+
+
+def train_quantized_lm(scheme: str, steps: int = 240, alpha: float = 5e-3,
+                       requant: int = 40, act_bits: int = 8,
+                       arch: str = "phi3-mini-3.8b", seed: int = 0):
+    """Train a tiny LM under a quantization scheme; return (api, trainer)."""
+    wb = {"bwq": PAPER_WB, "bsq": BSQ_WB}.get(scheme)
+    if scheme == "float":
+        qc = QuantConfig(mode="none")
+    else:
+        qc = QuantConfig(mode="bitplane", n_bits=8, act_bits=act_bits, **wb)
+    cfg = REGISTRY[arch].tiny(dtype="float32").with_quant(qc)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    tr = Trainer(lambda p, b: api.loss(p, b), adamw(weight_decay=0.0),
+                 cosine_schedule(2e-3, steps), params,
+                 TrainerConfig(total_steps=steps, ckpt_every=0,
+                               ckpt_dir=None, log_every=max(steps // 6, 1),
+                               requant_interval=requant if qc.enabled else 0,
+                               alpha_round_steps=requant if qc.enabled else 0,
+                               delta_alpha=alpha if qc.enabled else 0.0),
+                 alpha=0.0)
+    data = make_lm_pipeline(cfg, seq_len=64, batch=16, seed=seed)
+    tr.run(data, steps=steps)
+    return cfg, api, tr
+
+
+def train_quantized_cnn(scheme: str, model: str = "resnet20",
+                        steps: int = 200, alpha: float = 5e-3,
+                        requant: int = 40, act_bits: int = 8, seed: int = 0):
+    """Train a small CIFAR-style CNN under a quantization scheme."""
+    wb = {"bwq": PAPER_WB, "bsq": BSQ_WB}.get(scheme)
+    if scheme == "float":
+        qc = QuantConfig(mode="none")
+    else:
+        qc = QuantConfig(mode="bitplane", n_bits=8, act_bits=act_bits, **wb)
+    key = jax.random.PRNGKey(seed)
+    if model.startswith("resnet"):
+        params = resnet_init(key, qc, depth=8)
+        apply_fn = resnet_apply
+    else:
+        params = vgg_init(key, qc, depth=11)
+        apply_fn = vgg_apply
+
+    def loss_fn(p, b):
+        return cnn_loss(apply_fn, p, b, qc)
+
+    tr = Trainer(loss_fn, sgd(momentum=0.9, weight_decay=1e-4),
+                 cosine_schedule(0.05, steps), params,
+                 TrainerConfig(total_steps=steps, ckpt_every=0,
+                               ckpt_dir=None, log_every=max(steps // 6, 1),
+                               requant_interval=requant if qc.enabled else 0,
+                               alpha_round_steps=requant if qc.enabled else 0,
+                               delta_alpha=alpha if qc.enabled else 0.0))
+    gen = SyntheticCIFAR(batch=64, noise=0.5, seed=seed)
+
+    def data():
+        step = 0
+        while True:
+            yield step, gen.batch_at(step)
+            step += 1
+
+    tr.run(data(), steps=steps)
+    return qc, apply_fn, tr
+
+
+def cnn_accuracy(apply_fn, params, qc, batches=4, seed=999) -> float:
+    gen = SyntheticCIFAR(batch=128, noise=0.5, seed=0)
+    accs = []
+    for i in range(batches):
+        b = gen.batch_at(50_000 + i)
+        logits = apply_fn(params, b["images"], qc)
+        accs.append(float(jnp.mean(
+            (jnp.argmax(logits, -1) == b["labels"]).astype(jnp.float32))))
+    return float(np.mean(accs))
+
+
+def timed(fn, *args, n=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6  # us

@@ -1,0 +1,71 @@
+"""Kernel-level benchmark: HBM weight-bytes per layout + interpret-mode
+correctness timing.  Wall-clock on CPU interpret mode is NOT TPU time; the
+derived column (bytes/weight) is the roofline-relevant quantity."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BlockingSpec, adjust_precision, from_float, requantize
+from repro.kernels import (bwq_dense_bitplane, bwq_dense_packed,
+                           to_bitplane_layout, to_packed_layout)
+
+
+def layout_bytes(k: int = 1024, n: int = 1024, pruned_frac: float = 0.5
+                 ) -> List[Dict]:
+    """Weight bytes streamed from HBM per matmul for each storage layout."""
+    import dataclasses
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.05
+    qt = requantize(from_float(w, 8, BlockingSpec(8, 128)))
+    cut = int(n * pruned_frac) // 128 * 128
+    planes = qt.planes.at[4:, :, :cut].set(0.0)
+    qt = requantize(adjust_precision(dataclasses.replace(qt, planes=planes)))
+
+    bl = to_bitplane_layout(qt)
+    pk8 = to_packed_layout(qt, 8)
+    pk4 = to_packed_layout(qt, 4)
+    rows = [
+        dict(layout="bf16 dense", bytes_per_weight=2.0),
+        dict(layout="f32 dense", bytes_per_weight=4.0),
+        dict(layout="bwq bitplane(packed)+sign",
+             bytes_per_weight=round(
+                 (bl.planes_packed.size + bl.sign_packed.size
+                  + bl.mask.size * 4) / (k * n), 4)),
+        dict(layout="bwq int8 + per-WB scale",
+             bytes_per_weight=round(
+                 (pk8.w_int.size + pk8.scale.size * 4) / (k * n), 4)),
+        dict(layout="bwq int4 + per-WB scale",
+             bytes_per_weight=round(
+                 (pk4.w_int.size + pk4.scale.size * 4) / (k * n), 4)),
+    ]
+    return rows
+
+
+def kernel_timings(m: int = 64, k: int = 512, n: int = 512) -> List[Dict]:
+    import dataclasses
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.05
+    qt = requantize(from_float(w, 8, BlockingSpec(8, 128)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    bl = to_bitplane_layout(qt)
+    pk8 = to_packed_layout(qt, 8)
+
+    def t(f, *a):
+        f(*a)  # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            r = f(*a)
+        jax.block_until_ready(r)
+        return (time.perf_counter() - t0) / 3 * 1e6
+
+    return [
+        dict(kernel="bitplane_matmul(interp)", us=round(t(
+            lambda: bwq_dense_bitplane(x, bl)), 1)),
+        dict(kernel="packed_matmul8(interp)", us=round(t(
+            lambda: bwq_dense_packed(x, pk8)), 1)),
+        dict(kernel="jnp_dense_ref", us=round(t(
+            lambda: jax.jit(lambda: x @ w)()), 1)),
+    ]

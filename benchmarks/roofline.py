@@ -1,0 +1,65 @@
+"""Roofline report: aggregate the dry-run JSON artifacts into the
+EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.dist.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(tag: str = "singlepod") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"{tag}__*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_rows(tag: str = "singlepod") -> List[Dict]:
+    rows = []
+    for r in load_records(tag):
+        t = r["roofline"]
+        total = max(t["compute_s"], 1e-30)
+        dom = r["dominant"]
+        rows.append(dict(
+            arch=r["arch"], cell=r["cell"],
+            compute_s=t["compute_s"], memory_s=t["memory_s"],
+            collective_s=t["collective_s"], dominant=dom,
+            model_flops=r["model_flops_global"],
+            hlo_flops=r["hlo_flops_global"],
+            useful_frac=round(r["useful_flops_frac"], 3),
+            peak_hbm_gib=r["per_device"]["peak_hbm_gib"],
+            roofline_frac=round(
+                t["compute_s"] / max(t["compute_s"], t["memory_s"],
+                                     t["collective_s"]), 4),
+        ))
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | cell | compute_s | memory_s | collective_s | dominant "
+           "| useful_frac | HBM GiB/dev | roofline_frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['cell']} | {r['compute_s']:.4g} "
+                 f"| {r['memory_s']:.4g} | {r['collective_s']:.4g} "
+                 f"| {r['dominant'].replace('_s','')} | {r['useful_frac']} "
+                 f"| {r['peak_hbm_gib']} | {r['roofline_frac']} |\n")
+    return hdr + body
+
+
+def main():
+    rows = roofline_rows()
+    print(markdown_table(rows))
+    print(f"\n{len(rows)} cells; constants: {PEAK_FLOPS/1e12:.0f} TFLOP/s, "
+          f"{HBM_BW/1e9:.0f} GB/s HBM, {ICI_BW/1e9:.0f} GB/s ICI per chip")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper-faithful CNN reproduction: ResNet (CIFAR-style) trained with
+BWQ-A (9x8 WBs) vs BSQ (whole-layer blocks), then evaluated on the
+ReRAM accelerator simulator — the paper's Table II + Fig 9 pipeline.
+
+    PYTHONPATH=src python examples/cifar_bwq.py --steps 150
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import cnn_accuracy, train_quantized_cnn  # noqa
+from repro.hw import (bwq_scheme, isaac_scheme, speedup_and_energy_saving,
+                      workloads_from_params)
+from repro.train.step import quant_stats
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=150)
+args = ap.parse_args()
+
+results = {}
+for scheme in ("float", "bsq", "bwq"):
+    qc, apply_fn, tr = train_quantized_cnn(scheme, steps=args.steps)
+    acc = cnn_accuracy(apply_fn, tr.state.params, qc)
+    st = quant_stats(tr.state.params)
+    results[scheme] = (acc, float(st["compression_x"]), tr.state.params)
+    print(f"{scheme:6s} acc={acc:.3f} compression={st['compression_x']:.1f}x")
+
+wls = workloads_from_params(results["bwq"][2], positions=64, act_bits=3)
+sp, en = speedup_and_energy_saving(wls, bwq_scheme(), isaac_scheme())
+print(f"BWQ-H vs ISAAC on this model: {sp:.2f}x speedup, {en:.2f}x energy")

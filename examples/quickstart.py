@@ -1,0 +1,36 @@
+"""Quickstart: quantize a weight matrix with BWQ-A primitives, inspect the
+learned structures, and run the hardware simulator on it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BlockingSpec, adjust_precision, bitwidths, compose,
+                        from_float, requantize, wb_group_lasso)
+from repro.hw import bwq_scheme, isaac_scheme, simulate, workload_from_qt
+
+# 1. a weight matrix, partitioned into OU-sized (9x8) weight blocks
+key = jax.random.PRNGKey(0)
+w = jax.random.normal(key, (90, 80)) * 0.1
+qt = from_float(w, n_bits=8, spec=BlockingSpec(9, 8))
+print("blocks:", qt.mask.shape[1:], "| recon err:",
+      float(jnp.max(jnp.abs(compose(qt) - w))))
+
+# 2. sparsify some planes (in training, the WB-level group Lasso does this),
+#    re-quantize and run the paper's MSB-down precision adjustment
+planes = qt.planes.at[4:, :45, :].set(0.0)     # top rows become low-precision
+qt = requantize(adjust_precision(dataclasses.replace(qt, planes=planes)))
+bw = np.asarray(bitwidths(qt))
+print("per-WB bit-widths:\n", bw.astype(int))
+print("group lasso:", float(wb_group_lasso(qt)))
+
+# 3. estimate ReRAM-accelerator speedup/energy for this mixed-precision state
+wl = workload_from_qt("layer0", qt, positions=64, act_bits=3)
+rep_bwq = simulate([wl], bwq_scheme())
+rep_isaac = simulate([wl], isaac_scheme())
+print(f"BWQ-H vs ISAAC: {rep_isaac.latency_s / rep_bwq.latency_s:.2f}x "
+      f"speedup, {rep_isaac.energy_j / rep_bwq.energy_j:.2f}x energy saving")

@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing with atomic commit + elastic resharding.
+
+Layout: ``<dir>/step_<N>/{arrays.npz, META}``.  Writes go to a temp dir and
+are renamed into place only after fsync — a crash mid-write never corrupts
+the latest checkpoint.  Restore maps saved arrays onto a *template* pytree
+(from ``api.abstract_params()``) by path, then (optionally) device_puts each
+leaf with the sharding of the *currently live* mesh — which is what lets a
+job restart on a different mesh shape (elastic scaling).  Static pytree
+structure (QuantizedTensor specs etc.) comes from the template, so only
+array data lives on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def _sanitize(key: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.]", "_", key)
+
+
+def save_tree(tree: Any, path: str, extra_meta: Optional[Dict] = None):
+    """Atomic write of all array leaves of ``tree`` to ``path``."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays, manifest = {}, {}
+    for k, v in flat.items():
+        sk = _sanitize(k)
+        manifest[k] = sk
+        arrays[sk] = np.asarray(jax.device_get(v))
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "META"), "w") as f:
+        json.dump({"manifest": manifest, "extra": extra_meta or {}}, f)
+    # fsync the directory contents before the atomic rename
+    for name in os.listdir(tmp):
+        fd = os.open(os.path.join(tmp, name), os.O_RDONLY)
+        os.fsync(fd)
+        os.close(fd)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def restore_tree(template: Any, path: str, mesh=None,
+                 shardings: Any = None) -> Any:
+    """Load arrays onto ``template``'s structure; reshard onto ``mesh``."""
+    with open(os.path.join(path, "META")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    manifest = meta["manifest"]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(shardings)[0]
+    leaves = []
+    for i, (p, leaf) in enumerate(flat):
+        k = jax.tree_util.keystr(p)
+        arr = data[manifest[k]]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Rolling checkpoints + async save thread + latest-step discovery."""
+
+    def __init__(self, directory: str, keep: int = 3, use_async: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.use_async = use_async
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dirs(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "META")):
+                out.append((int(m.group(1)), os.path.join(self.dir, name)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        dirs = self._step_dirs()
+        return dirs[-1][0] if dirs else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, extra_meta: Optional[Dict] = None):
+        self.wait()
+        # device_get synchronously (cheap vs. training step), write async
+        tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)),
+                                      tree)
+        path = os.path.join(self.dir, f"step_{step}")
+
+        def work():
+            save_tree(tree, path, extra_meta)
+            self._gc()
+
+        if self.use_async:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def _gc(self):
+        dirs = self._step_dirs()
+        for _, p in dirs[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)
+
+    def restore_latest(self, template: Any, mesh=None, shardings=None):
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "META")) as f:
+            extra = json.load(f)["extra"]
+        tree = restore_tree(template, path, mesh, shardings)
+        return (step, extra), tree

@@ -1,0 +1,16 @@
+"""BWQ-A: block-wise mixed-precision quantization (the paper's algorithm)."""
+from .blocking import (BlockingSpec, block_view, conv_from_2d, conv_to_2d,
+                       expand_block_map, pad_to_blocks, unblock_view)
+from .bitrep import (QuantizedTensor, bitwidths, compose, compose_int,
+                     extract_planes, from_float, live_bits, param_count)
+from .quantize import PackedWeight, pack, requantize, ste_round, unpack_to_float
+from .precision import adjust_precision, prefix_mask_from_nonzero
+from .group_lasso import (layer_bit_count, model_compression_ratio,
+                          regularization_loss, wb_group_lasso)
+from .pact import (pact, pact_quant, pact_sym, pact_sym_quant,
+                   quantize_signed)
+from .fakequant import (FakeQuantTensor, fq_compose, fq_from_float,
+                        fq_group_lasso, fq_live_bits, fq_maintenance)
+from .policy import BWQSchedule
+from .state import (map_quantized, per_layer_bitwidth_maps, quant_summary,
+                    quantized_leaves)

@@ -1,0 +1,125 @@
+"""Bit-level weight representation (paper Eq. 1).
+
+``W = sign(W) * s / (2^n - 1) * sum_b W_s^(b) * 2^b * m^(g,b)``
+
+The bit tensor ``planes`` is trained as continuous non-negative floats
+(BSQ-style relaxation); re-quantization (``repro.core.quantize``) snaps it
+back to exact binary at scheduled intervals.  The per-(block, bit) mask ``m``
+is binary and non-trainable; precision adjustment only ever clears bits.
+
+A :class:`QuantizedTensor` is a pytree, so it can live inside model params,
+be differentiated (grads flow to ``planes`` and ``scale``) and be sharded by
+pjit like any other leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocking import (BlockingSpec, block_view, expand_block_map,
+                       pad_to_blocks)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Bit-level representation of one weight matrix (or a stacked (L, K, N))."""
+
+    planes: jnp.ndarray        # (n_bits, ..., Kp, Np) non-negative float
+    sign: jnp.ndarray          # (..., Kp, Np) in {-1, +1}
+    scale: jnp.ndarray         # per-layer () / (L,) or per-block (..., GR, GC)
+    mask: jnp.ndarray          # (n_bits, ..., GR, GC) in {0., 1.}
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    spec: BlockingSpec = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_bits(self) -> int:
+        return self.planes.shape[0]
+
+    def astype_planes(self, dtype) -> "QuantizedTensor":
+        return dataclasses.replace(self, planes=self.planes.astype(dtype))
+
+
+def _levels(n_bits: int) -> float:
+    return float(2 ** n_bits - 1)
+
+
+def from_float(w: jnp.ndarray, n_bits: int = 8,
+               spec: Optional[BlockingSpec] = None,
+               per_block_scale: bool = False) -> QuantizedTensor:
+    """Decompose a float matrix (..., K, N) into its bit-level representation."""
+    spec = (spec or BlockingSpec()).resolve(w.shape[-2], w.shape[-1])
+    shape = tuple(w.shape)
+    wp = pad_to_blocks(w, spec)
+    sign = jnp.where(wp < 0, -1.0, 1.0).astype(wp.dtype)
+    absw = jnp.abs(wp)
+    if per_block_scale:
+        bw = block_view(absw, spec)                      # (..., GR, GC, r, c)
+        scale = jnp.max(bw, axis=(-1, -2))               # (..., GR, GC)
+        scale = jnp.maximum(scale, 1e-8)
+        s_full = expand_block_map(scale, spec)
+    else:
+        reduce_axes = tuple(range(absw.ndim - 2, absw.ndim))
+        scale = jnp.maximum(jnp.max(absw, axis=reduce_axes), 1e-8)  # () or (L,)
+        s_full = scale[..., None, None] if scale.ndim else scale
+    q = jnp.round(absw / s_full * _levels(n_bits))
+    q = jnp.clip(q, 0, _levels(n_bits))
+    planes = extract_planes(q, n_bits)                   # (n, ..., Kp, Np)
+    gr, gc = spec.grid(shape[-2], shape[-1])
+    lead = shape[:-2]
+    mask = jnp.ones((n_bits, *lead, gr, gc), dtype=wp.dtype)
+    return QuantizedTensor(planes=planes, sign=sign, scale=scale, mask=mask,
+                           shape=shape, spec=spec)
+
+
+def extract_planes(q_int: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Integer tensor (values in [0, 2^n-1]) -> binary planes (n, ...)."""
+    q = q_int.astype(jnp.int32)
+    planes = [((q >> b) & 1).astype(q_int.dtype) for b in range(n_bits)]
+    return jnp.stack(planes, axis=0)
+
+
+def compose_int(qt: QuantizedTensor) -> jnp.ndarray:
+    """sum_b planes[b] * 2^b * m[b]  (continuous during training)."""
+    n = qt.n_bits
+    weights = (2.0 ** jnp.arange(n, dtype=qt.planes.dtype))
+    m_full = jax.vmap(lambda m: expand_block_map(m, qt.spec))(qt.mask)
+    contrib = qt.planes * m_full                          # (n, ..., Kp, Np)
+    return jnp.tensordot(weights, contrib, axes=(0, 0))   # (..., Kp, Np)
+
+
+def compose(qt: QuantizedTensor, dtype=None) -> jnp.ndarray:
+    """Materialize the float weight matrix (..., K, N) per paper Eq. 1."""
+    q = compose_int(qt)
+    if qt.scale.ndim >= 1 and qt.scale.shape[-2:] == qt.mask.shape[-2:]:
+        s_full = expand_block_map(qt.scale, qt.spec)
+    elif qt.scale.ndim:
+        s_full = qt.scale[..., None, None]
+    else:
+        s_full = qt.scale
+    w = qt.sign * q * (s_full / _levels(qt.n_bits))
+    k, n_ = qt.shape[-2], qt.shape[-1]
+    w = w[..., :k, :n_]
+    return w.astype(dtype) if dtype is not None else w
+
+
+def live_bits(qt: QuantizedTensor) -> jnp.ndarray:
+    """Total live (unmasked) bit count, counting wb elements under each mask."""
+    per_block = float(qt.spec.wb_rows * qt.spec.wb_cols)
+    return jnp.sum(qt.mask) * per_block
+
+
+def bitwidths(qt: QuantizedTensor) -> jnp.ndarray:
+    """Per-block effective bit-width (n_bits axis reduced): (..., GR, GC)."""
+    return jnp.sum(qt.mask, axis=0)
+
+
+def param_count(qt: QuantizedTensor) -> int:
+    k, n_ = qt.shape[-2], qt.shape[-1]
+    lead = 1
+    for d in qt.shape[:-2]:
+        lead *= d
+    return lead * k * n_

@@ -1,0 +1,109 @@
+"""Weight-block (WB) partitioning.
+
+The paper partitions every weight matrix into 2-D Weight Blocks whose shape
+equals the hardware Operation Unit (OU): ``wb_rows`` wordlines (input dim)
+by ``wb_cols`` bitlines (output dim).  Fully-connected weights ``(K, N)``
+(K = fan-in, N = fan-out) are partitioned directly; convolutional weights
+``(C_out, C_in, kh, kw)`` are first flattened to ``(C_in*kh*kw, C_out)``
+following the CSP reshaping (paper §III-A, Fig. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockingSpec:
+    """Shape bookkeeping for partitioning a (K, N) matrix into WBs.
+
+    Paper-faithful OU is 9x8 (9 WLs x 8 BLs).  TPU-aligned variants (e.g.
+    8x128) are supported as the OU-size scalability axis of the paper §VI-D.
+    """
+
+    wb_rows: int = 9   # wordlines  = input-dim rows per block (0 = whole dim)
+    wb_cols: int = 8   # bitlines   = output-dim cols per block (0 = whole dim)
+
+    def resolve(self, k: int, n: int) -> "BlockingSpec":
+        """Concrete spec for a (k, n) matrix; 0-dims become the full extent
+        (whole-layer blocks = the BSQ layer-wise baseline)."""
+        if self.wb_rows and self.wb_cols:
+            return self
+        return BlockingSpec(self.wb_rows or k, self.wb_cols or n)
+
+    def grid(self, k: int, n: int) -> Tuple[int, int]:
+        """Number of blocks (GR, GC) covering a (k, n) matrix (ceil)."""
+        r = self.resolve(k, n)
+        return (-(-k // r.wb_rows), -(-n // r.wb_cols))
+
+    def padded(self, k: int, n: int) -> Tuple[int, int]:
+        gr, gc = self.grid(k, n)
+        return gr * self.wb_rows, gc * self.wb_cols
+
+
+def conv_to_2d(w: jnp.ndarray) -> jnp.ndarray:
+    """CSP reshape: (C_out, C_in, kh, kw) -> (C_in*kh*kw, C_out)."""
+    c_out = w.shape[0]
+    return jnp.transpose(w.reshape(c_out, -1))
+
+
+def conv_from_2d(w2d: jnp.ndarray, conv_shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Inverse of :func:`conv_to_2d`."""
+    c_out = conv_shape[0]
+    return jnp.transpose(w2d).reshape(conv_shape)
+
+
+def pad_to_blocks(w: jnp.ndarray, spec: BlockingSpec) -> jnp.ndarray:
+    """Zero-pad the trailing two dims of ``w`` to block multiples."""
+    k, n = w.shape[-2], w.shape[-1]
+    kp, np_ = spec.padded(k, n)
+    if (kp, np_) == (k, n):
+        return w
+    pad = [(0, 0)] * (w.ndim - 2) + [(0, kp - k), (0, np_ - n)]
+    return jnp.pad(w, pad)
+
+
+def block_view(w: jnp.ndarray, spec: BlockingSpec) -> jnp.ndarray:
+    """(..., Kp, Np) -> (..., GR, GC, wb_rows, wb_cols).
+
+    ``w`` must already be padded to block multiples.
+    """
+    *lead, kp, np_ = w.shape
+    gr, gc = kp // spec.wb_rows, np_ // spec.wb_cols
+    w = w.reshape(*lead, gr, spec.wb_rows, gc, spec.wb_cols)
+    # (..., GR, wb_rows, GC, wb_cols) -> (..., GR, GC, wb_rows, wb_cols)
+    return jnp.moveaxis(w, -3, -2)
+
+
+def unblock_view(wb: jnp.ndarray, spec: BlockingSpec) -> jnp.ndarray:
+    """Inverse of :func:`block_view`: (..., GR, GC, r, c) -> (..., Kp, Np)."""
+    *lead, gr, gc, r, c = wb.shape
+    wb = jnp.moveaxis(wb, -2, -3)  # (..., GR, r, GC, c)
+    return wb.reshape(*lead, gr * r, gc * c)
+
+
+def expand_block_map(per_block: jnp.ndarray, spec: BlockingSpec) -> jnp.ndarray:
+    """Broadcast a per-block map (..., GR, GC) to elements (..., Kp, Np)."""
+    x = jnp.repeat(per_block, spec.wb_rows, axis=-2)
+    return jnp.repeat(x, spec.wb_cols, axis=-1)
+
+
+def block_count(shape_kn: Tuple[int, int], spec: BlockingSpec) -> int:
+    gr, gc = spec.grid(*shape_kn)
+    return int(np.prod((gr, gc)))
+
+
+def block_elem_counts(shape_kn: Tuple[int, int],
+                      spec: BlockingSpec) -> jnp.ndarray:
+    """(GR, GC) count of *real* (unpadded) weight elements in each block.
+
+    Edge blocks are partial when K/N are not block multiples; bit-count and
+    compression-ratio accounting must not bill the padding."""
+    k, n = shape_kn
+    gr, gc = spec.grid(k, n)
+    rows = jnp.clip(k - jnp.arange(gr) * spec.wb_rows, 0, spec.wb_rows)
+    cols = jnp.clip(n - jnp.arange(gc) * spec.wb_cols, 0, spec.wb_cols)
+    return rows[:, None] * cols[None, :]

@@ -1,0 +1,109 @@
+"""Memory-scalable BWQ-A mode for billion-parameter training.
+
+The paper trains weights in bit-level representation (8 float planes per
+weight = 8x weight memory) — fine for CIFAR CNNs, prohibitive for 27B-70B
+LMs.  ``FakeQuantTensor`` keeps one float master weight plus the per-WB
+bit-width LUT and applies the *identical inference-time semantics* through
+a straight-through fake-quantization: round to the layer scale grid and
+saturate each WB at its ``2^bw - 1`` magnitude ceiling.  For exact-binary
+states this composes bit-for-bit the same weight as the bit-plane mode
+(property-tested in tests/test_fakequant.py).
+
+Differences vs. the paper-faithful mode (documented, DESIGN.md §6):
+* the group-Lasso surrogate is a per-WB L2 on the scaled weights (the
+  bit-plane Lasso needs the planes, which are not materialized here);
+* re-quantization snaps the master weight onto the quantization grid.
+Precision adjustment (MSB-down) is exact in both modes and monotone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .bitrep import _levels
+from .blocking import BlockingSpec, block_view, expand_block_map, pad_to_blocks
+from .quantize import ste_round
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FakeQuantTensor:
+    w: jnp.ndarray          # (..., K, N) float master weight
+    scale: jnp.ndarray      # per-layer (lead dims) scale
+    bitwidth: jnp.ndarray   # (..., GR, GC) float live-bit LUT
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    spec: BlockingSpec = dataclasses.field(metadata=dict(static=True))
+    n_bits: int = dataclasses.field(default=8, metadata=dict(static=True))
+
+
+def fq_from_float(w: jnp.ndarray, n_bits: int = 8,
+                  spec: BlockingSpec | None = None) -> FakeQuantTensor:
+    spec = (spec or BlockingSpec()).resolve(w.shape[-2], w.shape[-1])
+    shape = tuple(w.shape)
+    reduce_axes = (w.ndim - 2, w.ndim - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=reduce_axes), 1e-8)
+    gr, gc = spec.grid(shape[-2], shape[-1])
+    bitwidth = jnp.full((*shape[:-2], gr, gc), float(n_bits), dtype=w.dtype)
+    return FakeQuantTensor(w=w, scale=scale, bitwidth=bitwidth, shape=shape,
+                           spec=spec, n_bits=n_bits)
+
+
+def _scale_full(fq: FakeQuantTensor, padded_shape) -> jnp.ndarray:
+    s = fq.scale
+    return s[..., None, None] if s.ndim else s
+
+
+def fq_compose(fq: FakeQuantTensor, dtype=None) -> jnp.ndarray:
+    """STE fake-quantized weight with per-WB saturation (Eq. 1 semantics)."""
+    wp = pad_to_blocks(fq.w, fq.spec)
+    s = _scale_full(fq, wp.shape)
+    levels = _levels(fq.n_bits)
+    q = ste_round(jnp.abs(wp) / s * levels)
+    cap = expand_block_map(2.0 ** fq.bitwidth - 1.0, fq.spec)
+    q = jnp.clip(q, 0.0, cap)
+    w = jnp.where(wp < 0, -1.0, 1.0) * q * (s / levels)
+    k, n = fq.shape[-2], fq.shape[-1]
+    w = w[..., :k, :n]
+    return w.astype(dtype) if dtype is not None else w
+
+
+def fq_maintenance(fq: FakeQuantTensor) -> FakeQuantTensor:
+    """Re-quantize + block-wise precision adjustment (monotone).
+
+    Snaps ``w`` to the grid, recomputes each WB's minimal bit-width
+    (position of the highest set bit over the block) and intersects it
+    with the previous LUT so precision never grows back.
+    """
+    wp = pad_to_blocks(fq.w, fq.spec)
+    s = _scale_full(fq, wp.shape)
+    levels = _levels(fq.n_bits)
+    cap = expand_block_map(2.0 ** fq.bitwidth - 1.0, fq.spec)
+    q = jnp.clip(jnp.round(jnp.abs(wp) / s * levels), 0.0, cap)
+    # highest set bit per WB -> required precision
+    blk_max = jnp.max(block_view(q, fq.spec), axis=(-1, -2))
+    need = jnp.ceil(jnp.log2(blk_max + 1.0))
+    new_bw = jnp.minimum(fq.bitwidth, need)
+    w_snapped = jnp.where(wp < 0, -1.0, 1.0) * q * (s / levels)
+    k, n = fq.shape[-2], fq.shape[-1]
+    w_snapped = w_snapped[..., :k, :n]
+    return dataclasses.replace(fq, w=w_snapped.astype(fq.w.dtype),
+                               bitwidth=new_bw)
+
+
+def fq_group_lasso(fq: FakeQuantTensor) -> jnp.ndarray:
+    """Per-WB L2 surrogate of the bit-level group Lasso (scale-normalized)."""
+    wp = pad_to_blocks(fq.w, fq.spec)
+    s = _scale_full(fq, wp.shape)
+    bw = block_view(wp / s, fq.spec)
+    sq = jnp.sum(bw * bw, axis=(-1, -2))
+    alive = (fq.bitwidth > 0).astype(wp.dtype)
+    return jnp.sum(jnp.sqrt(sq + 1e-12) * alive)
+
+
+def fq_live_bits(fq: FakeQuantTensor) -> jnp.ndarray:
+    from .blocking import block_elem_counts
+    elems = block_elem_counts((fq.shape[-2], fq.shape[-1]), fq.spec)
+    return jnp.sum(fq.bitwidth * elems.astype(fq.bitwidth.dtype))

@@ -1,0 +1,63 @@
+"""WB-level group Lasso regularizer (paper Eqs. 2-3).
+
+``B_GL(W^r) = sum_g sum_b || W_s^(g,b) * m^(g,b) ||_2``
+
+The total objective weights each layer's regularizer by
+``#Param(W^r) * #Bit(W^r) / #Param(total)`` so that layers holding more bits
+are penalized harder (Eq. 3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from .bitrep import QuantizedTensor, param_count
+from .blocking import block_view
+
+
+def wb_group_lasso(qt: QuantizedTensor) -> jnp.ndarray:
+    """sum over (block, bit) groups of the L2 norm of the masked plane."""
+    def per_plane(p, m):
+        bw = block_view(p, qt.spec)                         # (..., GR, GC, r, c)
+        sq = jnp.sum(bw * bw, axis=(-1, -2))                # (..., GR, GC)
+        return jnp.sum(jnp.sqrt(sq + 1e-12) * m)
+    vals = jax.vmap(per_plane)(qt.planes, qt.mask)          # (n_bits,)
+    return jnp.sum(vals)
+
+
+def layer_bit_count(qt: QuantizedTensor) -> jnp.ndarray:
+    """Current total live bits in the layer (edge-block padding excluded)."""
+    from .blocking import block_elem_counts
+    elems = block_elem_counts((qt.shape[-2], qt.shape[-1]), qt.spec)
+    elems = elems.astype(qt.mask.dtype)          # (GR, GC), broadcasts over
+    return jnp.sum(qt.mask * elems)              # (n, ..., GR, GC)
+
+
+def regularization_loss(qts: Dict[str, QuantizedTensor],
+                        alpha: float) -> jnp.ndarray:
+    """Paper Eq. 3 second term over all quantized layers.
+
+    The per-layer coefficient uses the *current* (stop-gradient) live bit
+    count so the schedule tracks compression as it happens.
+    """
+    if not qts or alpha == 0.0:
+        return jnp.asarray(0.0)
+    total_params = float(sum(param_count(q) for q in qts.values()))
+    loss = 0.0
+    for q in qts.values():
+        coeff = jax.lax.stop_gradient(layer_bit_count(q)) / total_params
+        loss = loss + coeff * wb_group_lasso(q)
+    return alpha * loss
+
+
+def model_compression_ratio(qts: Iterable[QuantizedTensor],
+                            float_bits: int = 32) -> float:
+    """Compression ratio vs a float baseline (paper Table II 'Comp.')."""
+    qts = list(qts)
+    total_params = sum(param_count(q) for q in qts)
+    total_bits = sum(float(jax.device_get(layer_bit_count(q))) for q in qts)
+    if total_bits == 0:
+        return float("inf")
+    return float_bits * total_params / total_bits

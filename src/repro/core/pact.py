@@ -1,0 +1,61 @@
+"""PACT activation clipping + uniform activation quantization (paper Eq. 4).
+
+``y = PACT(x) = 0.5 (|x| - |x - beta| + beta)``  clips to [0, beta] with a
+trainable clip level beta (gradient flows to beta on the saturated side),
+followed by uniform quantization to ``act_bits`` with a straight-through
+estimator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import ste_round
+
+
+def pact(x: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """Parameterized clipping (Eq. 4); differentiable in x and beta."""
+    return 0.5 * (jnp.abs(x) - jnp.abs(x - beta) + beta)
+
+
+def pact_quant(x: jnp.ndarray, beta: jnp.ndarray, act_bits: int) -> jnp.ndarray:
+    """PACT clip then quantize to ``act_bits`` levels (STE gradients)."""
+    y = pact(x, beta)
+    if act_bits >= 32:
+        return y
+    levels = float(2 ** act_bits - 1)
+    b = jnp.maximum(beta, 1e-6)
+    q = ste_round(y / b * levels)
+    return q * (b / levels)
+
+
+def pact_sym(x: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric PACT (TPU/transformer adaptation): clip to [-beta, beta].
+
+    The paper's PACT (Eq. 4) targets post-ReLU CNN activations; transformer
+    activations are signed, so the clip is mirrored (DESIGN.md §2).
+    """
+    return 0.5 * (jnp.abs(x + beta) - jnp.abs(x - beta))
+
+
+def pact_sym_quant(x: jnp.ndarray, beta: jnp.ndarray,
+                   act_bits: int) -> jnp.ndarray:
+    y = pact_sym(x, beta)
+    if act_bits >= 32:
+        return y
+    levels = float(2 ** (act_bits - 1) - 1)
+    b = jnp.maximum(beta, 1e-6)
+    q = ste_round(y / b * levels)
+    return (q * (b / levels)).astype(x.dtype)
+
+
+def quantize_signed(x: jnp.ndarray, bits: int,
+                    scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Symmetric signed uniform quantization with STE (used for KV cache)."""
+    if bits >= 32:
+        return x
+    levels = float(2 ** (bits - 1) - 1)
+    s = jnp.max(jnp.abs(x)) if scale is None else scale
+    s = jnp.maximum(s, 1e-6)
+    q = ste_round(jnp.clip(x / s, -1.0, 1.0) * levels)
+    return q * (s / levels)

@@ -1,0 +1,47 @@
+"""Block-wise precision adjustment (paper Fig. 3b).
+
+For every WB, scan its bit planes from the MSB downwards; while a plane is
+all-zero inside the block, clear its mask bit; stop at the first non-zero
+plane.  The resulting mask is always a *prefix* mask: ones for bits
+``[0, bitwidth)``, zeros above.  Precision is monotonically non-increasing
+because the new mask is intersected with the old one.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .bitrep import QuantizedTensor
+from .blocking import block_view
+
+
+def plane_block_any(planes: jnp.ndarray, spec) -> jnp.ndarray:
+    """(n, ..., Kp, Np) -> (n, ..., GR, GC): does bit b have any non-zero in WB g?"""
+    def per_plane(p):
+        bw = block_view(p, spec)                     # (..., GR, GC, r, c)
+        return jnp.any(bw != 0, axis=(-1, -2))
+    return jax.vmap(per_plane)(planes)
+
+
+def prefix_mask_from_nonzero(nz: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Build the paper's MSB-down prefix mask from per-(bit, block) nonzeros.
+
+    bitwidth(g) = 1 + max{b : nz[b, g]}  (0 if all planes zero); then
+    mask[b, g] = b < bitwidth(g).
+    """
+    n = nz.shape[0]
+    bit_idx = jnp.arange(n).reshape((n,) + (1,) * (nz.ndim - 1))
+    highest = jnp.max(jnp.where(nz, bit_idx + 1, 0), axis=0)   # (..., GR, GC)
+    return (bit_idx < highest[None]).astype(dtype)
+
+
+def adjust_precision(qt: QuantizedTensor) -> QuantizedTensor:
+    """Apply block-wise precision adjustment; returns a new QuantizedTensor."""
+    nz = plane_block_any(qt.planes * 1.0, qt.spec)
+    # Only planes that are currently live can keep the block alive.
+    nz = jnp.logical_and(nz, qt.mask > 0)
+    new_mask = prefix_mask_from_nonzero(nz, qt.mask.dtype)
+    new_mask = jnp.minimum(new_mask, qt.mask)      # monotone: never re-grow
+    return dataclasses.replace(qt, mask=new_mask)

@@ -1,0 +1,80 @@
+"""Re-quantization (paper Fig. 3a) and deployment packing.
+
+During QAT the bit planes drift away from exact binary; at scheduled epochs
+we *re-quantize*: compose the (masked) integer value of each weight, round
+and clip it to the representable range, and re-extract exact binary planes.
+Pruned planes (mask == 0) contribute nothing and stay zero afterwards, so
+model sparsity is non-decreasing (paper §III-A).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bitrep import QuantizedTensor, compose_int, extract_planes, _levels
+from .blocking import block_view, expand_block_map
+
+
+def requantize(qt: QuantizedTensor, rescale: bool = False) -> QuantizedTensor:
+    """Snap the continuous bit planes back to exact binary values."""
+    q = compose_int(qt)                                   # (..., Kp, Np)
+    q = jnp.clip(jnp.round(q), 0.0, _levels(qt.n_bits))
+    planes = extract_planes(q, qt.n_bits).astype(qt.planes.dtype)
+    new = dataclasses.replace(qt, planes=planes)
+    if rescale:
+        # Optional (beyond-paper): refit per-block scale to the surviving range.
+        bw = block_view(q, qt.spec)
+        blk_max = jnp.max(bw, axis=(-1, -2))
+        if qt.scale.shape[-2:] == qt.mask.shape[-2:] and qt.scale.ndim >= 2:
+            denom = jnp.maximum(blk_max, 1.0)
+            new = dataclasses.replace(
+                new, scale=qt.scale * denom / _levels(qt.n_bits))
+    return new
+
+
+class PackedWeight(NamedTuple):
+    """Deployment layout: integer magnitudes + per-block metadata.
+
+    ``values`` holds sign*magnitude as int8 (covers n_bits <= 7 exactly; for
+    8-bit blocks magnitudes occupy [0, 255] so we keep int16 in that case).
+    ``bitwidth`` is the memory-controller LUT of the paper (per-WB bit count).
+    """
+
+    values: jnp.ndarray     # (..., Kp, Np) int8/int16 signed magnitudes
+    scale: jnp.ndarray      # per-layer or per-block scale
+    bitwidth: jnp.ndarray   # (..., GR, GC) int32
+    shape: tuple
+    n_bits: int
+
+
+def pack(qt: QuantizedTensor) -> PackedWeight:
+    """QAT representation -> deployment representation (after requantize)."""
+    q = jnp.clip(jnp.round(compose_int(qt)), 0.0, _levels(qt.n_bits))
+    signed = (qt.sign * q)
+    dt = jnp.int16 if qt.n_bits >= 8 else jnp.int8
+    values = signed.astype(dt)
+    bw = jnp.sum(qt.mask, axis=0).astype(jnp.int32)
+    return PackedWeight(values=values, scale=qt.scale, bitwidth=bw,
+                        shape=qt.shape, n_bits=qt.n_bits)
+
+
+def unpack_to_float(pw: PackedWeight, spec, dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantize a PackedWeight back to (..., K, N) float (reference path)."""
+    vals = pw.values.astype(dtype)
+    if pw.scale.ndim >= 2 and pw.scale.shape[-2:] == pw.bitwidth.shape[-2:]:
+        s_full = expand_block_map(pw.scale.astype(dtype), spec)
+    elif pw.scale.ndim:
+        s_full = pw.scale.astype(dtype)[..., None, None]
+    else:
+        s_full = pw.scale.astype(dtype)
+    w = vals * (s_full / _levels(pw.n_bits))
+    k, n_ = pw.shape[-2], pw.shape[-1]
+    return w[..., :k, :n_]
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through rounding (identity gradient)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)

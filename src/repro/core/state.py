@@ -1,0 +1,49 @@
+"""Pytree utilities for models whose params contain QuantizedTensor leaves."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .bitrep import QuantizedTensor, bitwidths, param_count
+from .group_lasso import layer_bit_count
+
+_is_qt = lambda x: isinstance(x, QuantizedTensor)
+
+
+def quantized_leaves(params: Any) -> Dict[str, QuantizedTensor]:
+    """All QuantizedTensor leaves keyed by their pytree path string."""
+    out: Dict[str, QuantizedTensor] = {}
+    flat = jax.tree_util.tree_flatten_with_path(params, is_leaf=_is_qt)[0]
+    for path, leaf in flat:
+        if _is_qt(leaf):
+            out[jax.tree_util.keystr(path)] = leaf
+    return out
+
+
+def map_quantized(fn: Callable[[QuantizedTensor], QuantizedTensor],
+                  params: Any) -> Any:
+    """Apply ``fn`` to every QuantizedTensor leaf, pass through the rest."""
+    return jax.tree_util.tree_map(
+        lambda x: fn(x) if _is_qt(x) else x, params, is_leaf=_is_qt)
+
+
+def quant_summary(params: Any) -> Dict[str, float]:
+    """Aggregate compression statistics across all quantized layers."""
+    qts = quantized_leaves(params)
+    if not qts:
+        return dict(layers=0, avg_bitwidth=0.0, compression_x=1.0,
+                    total_params=0)
+    total_params = sum(param_count(q) for q in qts.values())
+    total_bits = sum(float(layer_bit_count(q)) for q in qts.values())
+    avg_bw = total_bits / max(total_params, 1)
+    return dict(layers=len(qts),
+                avg_bitwidth=avg_bw,
+                compression_x=32.0 * total_params / max(total_bits, 1.0),
+                total_params=total_params)
+
+
+def per_layer_bitwidth_maps(params: Any) -> Dict[str, jnp.ndarray]:
+    """Per-layer (GR, GC) bit-width heatmaps (paper Fig. 7)."""
+    return {k: bitwidths(q) for k, q in quantized_leaves(params).items()}

@@ -1,0 +1,2 @@
+from .synthetic import (SyntheticCIFAR, SyntheticLM, lm_batch_for,
+                        make_lm_pipeline)

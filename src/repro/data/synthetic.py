@@ -1,0 +1,120 @@
+"""Deterministic, index-addressable synthetic data.
+
+Every global batch is a pure function of (seed, step) — any host can
+regenerate any batch without coordination.  That property is what makes the
+elastic-restart and straggler-replacement stories work: a replacement host
+joining at step N needs no data replay, it just computes batch(N)
+(DESIGN.md §4).
+
+The LM stream has planted bigram structure (a peaked random transition
+table) so cross-entropy genuinely decreases under training and
+quantization-vs-quality trade-offs are measurable offline.  The CIFAR-like
+stream plants class templates + noise for the paper's CNN experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    branching: int = 4          # candidate successors per token
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.succ = rng.integers(0, self.vocab,
+                                 size=(self.vocab, self.branching))
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        """Pure function of step: (tokens, labels) with labels = next token."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2 = jax.random.split(key)
+        start = jax.random.randint(k1, (self.batch,), 0, self.vocab)
+        choices = jax.random.randint(k2, (self.batch, self.seq_len + 1),
+                                     0, self.branching)
+        succ = jnp.asarray(self.succ)
+
+        def walk(tok, choice):
+            nxt = succ[tok, choice]
+            return nxt, nxt
+
+        def roll(s, ch):
+            _, seq = jax.lax.scan(walk, s, ch)
+            return seq
+
+        seq = jax.vmap(roll)(start, choices)              # (B, S+1)
+        return {"tokens": seq[:, :-1].astype(jnp.int32),
+                "labels": seq[:, 1:].astype(jnp.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass
+class SyntheticCIFAR:
+    num_classes: int = 10
+    image: int = 32
+    batch: int = 128
+    seed: int = 0
+    noise: float = 0.6
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed + 1)
+        self.templates = rng.normal(
+            size=(self.num_classes, self.image, self.image, 3)).astype("f4")
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2 = jax.random.split(key)
+        labels = jax.random.randint(k1, (self.batch,), 0, self.num_classes)
+        base = jnp.asarray(self.templates)[labels]
+        noise = jax.random.normal(k2, base.shape) * self.noise
+        return {"images": base + noise, "labels": labels}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def lm_batch_for(cfg, cell, step: int = 0, seed: int = 0):
+    """Concrete batch matching a ModelAPI train_batch_spec (smoke tests)."""
+    gen = SyntheticLM(cfg.vocab, cell.seq_len, cell.global_batch, seed)
+    b = gen.batch_at(step)
+    if cfg.family == "vlm":
+        tv = cfg.vision_tokens
+        st = cell.seq_len - tv
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 7), step)
+        b = {"tokens": b["tokens"][:, :st], "labels": b["labels"][:, :st],
+             "vision_embeds": jax.random.normal(
+                 key, (cell.global_batch, tv, cfg.d_model), jnp.float32) * .1}
+    if cfg.is_encdec:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 9), step)
+        b = {"tokens": b["tokens"], "labels": b["labels"],
+             "frames": jax.random.normal(
+                 key, (cell.global_batch, cell.seq_len, cfg.d_model),
+                 jnp.float32) * 0.1}
+    return b
+
+
+def make_lm_pipeline(cfg, seq_len: int, batch: int, seed: int = 0,
+                     start_step: int = 0):
+    """Resumable iterator (checkpoint stores the step; restart is exact)."""
+    gen = SyntheticLM(cfg.vocab, seq_len, batch, seed)
+    step = start_step
+    while True:
+        yield step, gen.batch_at(step)
+        step += 1

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for BWQ inference (validated in interpret mode).
+
+bitplane_matmul — bit-plane-sliced mixed-precision matmul (paper layout)
+packed_matmul   — int8/int4 per-WB-scale dequant matmul (deployment)
+pact_quant      — fused symmetric PACT clip + quantize
+"""
+from .bitplane_matmul import bitplane_matmul
+from .packed_matmul import packed_matmul
+from .pact_kernel import pact_quant_pallas
+from .ops import (BitplaneLayout, PackedLayout, bwq_dense_bitplane,
+                  bwq_dense_packed, to_bitplane_layout, to_packed_layout)
+from . import ref

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: bit-plane-sliced mixed-precision matmul (BWQ core).
+
+The digital analogue of BWQ-H's precision-aware OU mapping (paper Fig. 5c):
+weights live in HBM as 1-bit planes (packed 8 rows/byte) plus a packed sign
+plane and the per-WB (bit, block) mask LUT.  Each grid step streams the
+packed tiles HBM->VMEM ((n_bits+1)/8 bytes per weight instead of 2-4),
+decodes them in-register, composes the masked magnitude, and issues ONE MXU
+matmul per (m, n, k) tile.  Masked planes contribute zero exactly as the
+memory controller skips their OUs.
+
+Tiling: wb_rows | block_k and wb_cols | block_n so mask expansion is a
+sublane/lane-aligned broadcast (TPU-native WB geometry 8x128; the paper's
+9x8 geometry stays on the pure-jnp path — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fit(pref: int, total: int, multiple: int) -> int:
+    """Largest block <= pref that divides total and is a multiple-multiple."""
+    best = multiple
+    d = multiple
+    while d <= min(pref, total):
+        if total % d == 0:
+            best = d
+        d += multiple
+    return best
+
+
+def _kernel(x_ref, planes_ref, sign_ref, mask_ref, scale_ref, o_ref, *,
+            n_bits: int, wbr: int, wbc: int, block_k: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # (bm, bk)
+    bn = o_ref.shape[1]
+
+    def unpack(packed):                             # (bk//8, bn) -> (bk, bn)
+        parts = [((packed >> r) & 1) for r in range(8)]
+        st = jnp.stack(parts, axis=1)               # (bk//8, 8, bn)
+        return st.reshape(block_k, bn)
+
+    # compose magnitude = sum_b 2^b * plane_b * mask_b   (masked planes skip)
+    mag = jnp.zeros((block_k, bn), jnp.float32)
+    for b in range(n_bits):
+        plane = unpack(planes_ref[b]).astype(jnp.float32)
+        m = mask_ref[b].astype(jnp.float32)         # (bk//wbr, bn//wbc)
+        m = jnp.repeat(jnp.repeat(m, wbr, axis=0), wbc, axis=1)
+        mag = mag + (2.0 ** b) * plane * m
+
+    sign = 1.0 - 2.0 * unpack(sign_ref[...]).astype(jnp.float32)
+    w = sign * mag * (scale_ref[0] / (2.0 ** n_bits - 1.0))
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "wbr", "wbc",
+                                             "block_m", "block_n", "block_k",
+                                             "interpret"))
+def bitplane_matmul(x, planes_packed, sign_packed, mask, scale, *,
+                    n_bits: int = 8, wbr: int = 8, wbc: int = 128,
+                    block_m: int = 128, block_n: int = 256,
+                    block_k: int = 512, interpret: bool = True):
+    """y[M,N] = x[M,K] @ compose(planes, sign, mask, scale).
+
+    planes_packed: (n_bits, K//8, N) uint8; sign_packed: (K//8, N) uint8;
+    mask: (n_bits, K//wbr, N//wbc); scale: (1,) f32 per-layer.
+    """
+    m, k = x.shape
+    n = planes_packed.shape[-1]
+    block_m = _fit(block_m, m, 1)
+    block_n = _fit(block_n, n, wbc)
+    block_k = _fit(block_k, k, max(8, wbr))
+    assert k % block_k == 0 and n % block_n == 0 and m % block_m == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+
+    kern = functools.partial(_kernel, n_bits=n_bits, wbr=wbr, wbc=wbc,
+                             block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((n_bits, block_k // 8, block_n),
+                         lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((block_k // 8, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((n_bits, block_k // wbr, block_n // wbc),
+                         lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, planes_packed, sign_packed, mask, scale)

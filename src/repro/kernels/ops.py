@@ -1,0 +1,100 @@
+"""High-level jitted wrappers: QuantizedTensor -> kernel-ready layouts.
+
+``to_bitplane_layout`` / ``to_packed_layout`` convert a trained
+QuantizedTensor (after requantization) into the deployment tensors the
+Pallas kernels consume; ``bwq_dense_*`` are drop-in y = x @ W ops.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bitrep import QuantizedTensor, compose_int, _levels
+from ..core.blocking import BlockingSpec
+from .bitplane_matmul import bitplane_matmul
+from .packed_matmul import packed_matmul
+from .ref import pack_bits
+
+
+class BitplaneLayout(NamedTuple):
+    planes_packed: jnp.ndarray   # (n, K//8, N) uint8
+    sign_packed: jnp.ndarray     # (K//8, N) uint8
+    mask: jnp.ndarray            # (n, K//wbr, N//wbc) f32
+    scale: jnp.ndarray           # (1,)
+    n_bits: int
+    wbr: int
+    wbc: int
+
+
+class PackedLayout(NamedTuple):
+    w_int: jnp.ndarray           # int8 (K,N) or uint8 (K//2, N) nibbles
+    scale: jnp.ndarray           # (K//wbr, N//wbc)
+    bits: int
+    wbr: int
+    wbc: int
+
+
+def to_bitplane_layout(qt: QuantizedTensor) -> BitplaneLayout:
+    """Requires a TPU-aligned spec (wb_rows multiple-of-8-compatible: K%8==0)."""
+    assert qt.planes.ndim == 3, "single matrix expected"
+    q = jnp.clip(jnp.round(compose_int(qt)), 0, _levels(qt.n_bits))
+    q = q.astype(jnp.int32)
+    planes = jnp.stack([((q >> b) & 1).astype(jnp.uint8)
+                        for b in range(qt.n_bits)])
+    planes_packed = pack_bits(planes)
+    sign_bits = (qt.sign < 0).astype(jnp.uint8)
+    sign_packed = pack_bits(sign_bits[None])[0]
+    scale = jnp.reshape(qt.scale.astype(jnp.float32), (1,))
+    return BitplaneLayout(planes_packed, sign_packed,
+                          qt.mask.astype(jnp.float32), scale, qt.n_bits,
+                          qt.spec.wb_rows, qt.spec.wb_cols)
+
+
+def to_packed_layout(qt: QuantizedTensor, bits: int = 8) -> PackedLayout:
+    """Per-WB scale folded so each block uses its own bitwidth ceiling.
+
+    A WB with bitwidth bw stores magnitudes in [0, 2^bw-1]; rescaling by
+    2^(n-bw) maps them onto the shared int grid without precision loss when
+    bw <= bits-1 (sign takes one bit in two's complement).
+    """
+    q = jnp.clip(jnp.round(compose_int(qt)), 0, _levels(qt.n_bits))
+    signed = qt.sign * q                                  # (K, N)
+    spec = qt.spec
+    gscale = qt.scale.astype(jnp.float32) / _levels(qt.n_bits)
+    gr, gc = qt.mask.shape[-2], qt.mask.shape[-1]
+    block_scale = jnp.broadcast_to(jnp.reshape(gscale, (1, 1)), (gr, gc))
+    # Blocks whose live bit-width exceeds the container (bits-1 magnitude
+    # bits after the sign) are rescaled by a power of two: exact whenever
+    # bw <= bits-1, drops (bw - bits + 1) LSBs otherwise.
+    from ..core.blocking import expand_block_map
+    bw = jnp.sum(qt.mask, axis=0)                         # (GR, GC)
+    shift = jnp.maximum(bw - float(bits - 1), 0.0)
+    factor = 2.0 ** shift
+    f_full = expand_block_map(factor, spec)
+    lim = 2 ** (bits - 1)
+    wq = jnp.clip(jnp.round(signed / f_full), -lim, lim - 1).astype(jnp.int32)
+    if bits == 8:
+        return PackedLayout(wq.astype(jnp.int8), block_scale * factor, 8,
+                            spec.wb_rows, spec.wb_cols)
+    if bits == 4:
+        lo = wq[0::2] & 0xF
+        hi = wq[1::2] & 0xF
+        packed = (lo | (hi << 4)).astype(jnp.uint8)
+        return PackedLayout(packed, block_scale * factor, 4,
+                            spec.wb_rows, spec.wb_cols)
+    raise ValueError(bits)
+
+
+def bwq_dense_bitplane(x, layout: BitplaneLayout, interpret: bool = True):
+    return bitplane_matmul(x, layout.planes_packed, layout.sign_packed,
+                           layout.mask, layout.scale, n_bits=layout.n_bits,
+                           wbr=layout.wbr, wbc=layout.wbc,
+                           interpret=interpret)
+
+
+def bwq_dense_packed(x, layout: PackedLayout, interpret: bool = True):
+    return packed_matmul(x, layout.w_int, layout.scale, bits=layout.bits,
+                         wbr=layout.wbr, wbc=layout.wbc, interpret=interpret)

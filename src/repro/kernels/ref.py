@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every kernel (the allclose targets).
+
+Layouts (TPU-native WB geometry — see DESIGN.md §2; wb_rows=8, wb_cols=128
+by default so block boundaries align with sublanes/lanes):
+
+* bit-plane: ``planes_packed`` (n, K//8, N) uint8, bit r of byte j = plane
+  value at row 8j+r; ``sign_packed`` (K//8, N) uint8 (1 = negative);
+  ``mask`` (n, K//wbr, N//wbc) {0,1}; ``scale`` () per-layer.
+* packed-int: ``w_int`` int8 (K, N) signed magnitudes (int8 mode) or
+  (K//2, N) uint8 two nibbles (int4 mode, row 2j in low nibble);
+  ``scale`` (K//wbr, N//wbc) per-WB.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_bits(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., K//8, N) uint8 -> (..., K, N) {0,1} float32 (row-major bits)."""
+    bits = [(packed >> r) & 1 for r in range(8)]
+    x = jnp.stack(bits, axis=-2)                   # (..., K//8, 8, N)
+    shape = x.shape[:-3] + (x.shape[-3] * 8, x.shape[-1])
+    return x.reshape(shape).astype(jnp.float32)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """(..., K, N) {0,1} -> (..., K//8, N) uint8."""
+    k = bits.shape[-2]
+    x = bits.reshape(*bits.shape[:-2], k // 8, 8, bits.shape[-1])
+    x = x.astype(jnp.uint8)
+    out = jnp.zeros(x.shape[:-2] + (x.shape[-1],), jnp.uint8)
+    for r in range(8):
+        out = out | (x[..., r, :] << r)
+    return out
+
+
+def expand_mask(mask: jnp.ndarray, wbr: int, wbc: int) -> jnp.ndarray:
+    m = jnp.repeat(mask, wbr, axis=-2)
+    return jnp.repeat(m, wbc, axis=-1)
+
+
+def bitplane_matmul_ref(x, planes_packed, sign_packed, mask, scale,
+                        wbr: int = 8, wbc: int = 128,
+                        out_dtype=jnp.float32) -> jnp.ndarray:
+    """y = x @ W, W = (1-2*sign) * scale/(2^n -1) * sum_b 2^b plane_b*mask_b."""
+    n = planes_packed.shape[0]
+    planes = unpack_bits(planes_packed)            # (n, K, N)
+    sign = 1.0 - 2.0 * unpack_bits(sign_packed)    # (K, N) in {+1,-1}
+    m = jax.vmap(lambda mm: expand_mask(mm, wbr, wbc))(mask)
+    weights = (2.0 ** jnp.arange(n, dtype=jnp.float32))
+    mag = jnp.tensordot(weights, planes * m, axes=(0, 0))
+    w = sign * mag * (scale / (2.0 ** n - 1.0))
+    return (x.astype(jnp.float32) @ w).astype(out_dtype)
+
+
+def packed_matmul_ref(x, w_int, scale, bits: int = 8,
+                      wbr: int = 8, wbc: int = 128,
+                      out_dtype=jnp.float32) -> jnp.ndarray:
+    """y = x @ (dequant(w_int) * per-block scale)."""
+    if bits == 8:
+        w = w_int.astype(jnp.float32)
+    elif bits == 4:
+        lo = (w_int & 0xF).astype(jnp.int8)
+        hi = ((w_int >> 4) & 0xF).astype(jnp.int8)
+        # two's-complement nibbles in [-8, 7]
+        lo = jnp.where(lo >= 8, lo - 16, lo).astype(jnp.float32)
+        hi = jnp.where(hi >= 8, hi - 16, hi).astype(jnp.float32)
+        k2, n_ = w_int.shape
+        w = jnp.stack([lo, hi], axis=1).reshape(2 * k2, n_)
+    else:
+        raise ValueError(bits)
+    s = expand_mask(scale, wbr, wbc)
+    return (x.astype(jnp.float32) @ (w * s)).astype(out_dtype)
+
+
+def pact_quant_ref(x, beta, act_bits: int) -> jnp.ndarray:
+    """Symmetric PACT clip + uniform quantization (forward only)."""
+    levels = float(2 ** (act_bits - 1) - 1)
+    b = jnp.maximum(beta, 1e-6)
+    y = jnp.clip(x, -b, b)
+    return (jnp.round(y / b * levels) * (b / levels)).astype(x.dtype)

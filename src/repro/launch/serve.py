@@ -1,0 +1,59 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Loads (or initializes) a model, optionally converts it to packed integer
+serving weights (BWQ deployment), and runs batched greedy decoding.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import REGISTRY
+from ..models.api import build
+from ..models.common import QuantConfig
+from ..serve import ServeEngine
+from ..serve.deploy import to_serving_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(REGISTRY))
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--no-tiny", dest="tiny", action="store_false")
+    ap.add_argument("--deploy-bits", type=int, default=0,
+                    choices=[0, 4, 8], help="0 = QAT weights")
+    ap.add_argument("--kv-bits", type=int, default=32, choices=[8, 32])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = REGISTRY[args.arch]
+    if args.tiny:
+        cfg = cfg.tiny(dtype="float32")
+    cfg = cfg.with_quant(QuantConfig(mode="fake", n_bits=8, act_bits=8))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    if args.deploy_bits:
+        params = to_serving_params(params, args.deploy_bits)
+        print(f"deployed: packed int{args.deploy_bits} serving weights")
+
+    eng = ServeEngine(api, params, kv_quant_bits=args.kv_bits)
+    prompts = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab).astype(jnp.int32)}
+    if cfg.family == "vlm":
+        prompts["vision_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.vision_tokens, cfg.d_model)) * 0.1
+    if cfg.is_encdec:
+        prompts["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, args.prompt_len, cfg.d_model)) * 0.1
+    out = eng.generate(prompts, max_new=args.max_new)
+    for i, row in enumerate(out.tolist()):
+        print(f"[{i}] {row}")
+
+
+if __name__ == "__main__":
+    main()

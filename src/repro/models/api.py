@@ -1,0 +1,115 @@
+"""Uniform Model API over all families (decoder-only, enc-dec).
+
+Gives the launcher / dry-run / tests one surface:
+  init, loss, prefill, decode_step, input specs per shape-cell.
+Input specs are ShapeDtypeStructs (no allocation) — the dry-run lowers
+against them directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeCell
+from . import encdec, transformer
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+
+    # ---- parameters ---------------------------------------------------
+    def init(self, key) -> Any:
+        if self.cfg.is_encdec:
+            return encdec.init_encdec(key, self.cfg)
+        return transformer.init_lm(key, self.cfg)
+
+    def abstract_params(self) -> Any:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ---- losses / steps ------------------------------------------------
+    def loss(self, params, batch) -> tuple:
+        if self.cfg.is_encdec:
+            return encdec.encdec_loss(params, self.cfg, batch)
+        return transformer.loss_fn(params, self.cfg, batch)
+
+    def prefill(self, params, batch, extra_slots: int = 0) -> tuple:
+        """Full-sequence forward that also fills the decode cache.
+
+        ``extra_slots`` reserves cache headroom for subsequent decode steps
+        (a decode write past the cache end would clamp and corrupt)."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            b, s = batch["tokens"].shape
+            cache = encdec.encdec_init_cache(cfg, b, s + extra_slots)
+            logits, cache, enc_out = encdec.encdec_forward(
+                params, cfg, batch["frames"], batch["tokens"], cache,
+                jnp.asarray(0, jnp.int32))
+            return logits[:, -1], {"cache": cache, "enc_out": enc_out}
+        b, s = batch["tokens"].shape
+        extra = (cfg.vision_tokens if cfg.family == "vlm" else 0) + extra_slots
+        cache = transformer.init_cache(cfg, b, s + extra)
+        logits, _, cache = transformer.forward(
+            params, cfg, batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            positions=batch.get("positions"), cache=cache,
+            index=jnp.asarray(0, jnp.int32))
+        return logits[:, -1], {"cache": cache}
+
+    def decode_step(self, params, tokens, state, index) -> tuple:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            logits, cache = encdec.encdec_decode_step(
+                params, cfg, tokens, state["cache"], index, state["enc_out"])
+            return logits, {**state, "cache": cache}
+        logits, cache = transformer.decode_step(params, cfg, tokens,
+                                                state["cache"], index)
+        return logits, {**state, "cache": cache}
+
+    # ---- abstract input specs per shape cell ----------------------------
+    def train_batch_spec(self, cell: ShapeCell) -> Dict[str, Any]:
+        cfg = self.cfg
+        b, s = cell.global_batch, cell.seq_len
+        if cfg.is_encdec:
+            return {
+                "frames": _sds((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32),
+            }
+        if cfg.family == "vlm":
+            tv = cfg.vision_tokens
+            st = s - tv
+            return {
+                "tokens": _sds((b, st), jnp.int32),
+                "labels": _sds((b, st), jnp.int32),
+                "vision_embeds": _sds((b, tv, cfg.d_model), jnp.bfloat16),
+                "positions": _sds((b, s, 3), jnp.int32),
+            }
+        return {"tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32)}
+
+    def decode_state_spec(self, cell: ShapeCell) -> Dict[str, Any]:
+        cfg = self.cfg
+        b, s = cell.global_batch, cell.seq_len
+        if cfg.is_encdec:
+            cache = jax.eval_shape(
+                lambda: encdec.encdec_init_cache(cfg, b, s))
+            return {"cache": cache,
+                    "enc_out": _sds((b, s, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))}
+        cache = jax.eval_shape(lambda: transformer.init_cache(cfg, b, s))
+        return {"cache": cache}
+
+    def decode_token_spec(self, cell: ShapeCell):
+        return _sds((cell.global_batch, 1), jnp.int32)
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    return ModelAPI(cfg)

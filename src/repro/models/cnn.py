@@ -1,0 +1,185 @@
+"""Paper-faithful CNN models (ResNet-CIFAR / VGG-BN) with BWQ-A conv layers.
+
+Conv weights are stored in their CSP-flattened 2-D form (C_in*kh*kw, C_out)
+— exactly the layout the paper blocks into WBs (Fig. 2b) — as
+QuantizedTensor (bit-plane) leaves, and reshaped back to 4-D at
+materialization time.  These models drive the Table-II / Fig-9..13
+benchmarks and the CIFAR example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bitrep import QuantizedTensor, compose, from_float
+from ..core.fakequant import FakeQuantTensor, fq_compose, fq_from_float
+from ..core.pact import pact_quant
+from .common import QuantConfig
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ConvMeta:
+    """Static conv geometry (kept out of grad's differentiable leaves)."""
+    c_in: int
+    c_out: int
+    k: int
+
+
+def conv_init(key, c_in: int, c_out: int, k: int, qc: QuantConfig):
+    fan_in = c_in * k * k
+    w2d = jax.random.normal(key, (fan_in, c_out)) * jnp.sqrt(2.0 / fan_in)
+    meta = ConvMeta(c_in=c_in, c_out=c_out, k=k)
+    if qc.mode == "bitplane":
+        return {"qt": from_float(w2d, qc.n_bits, qc.spec,
+                                 per_block_scale=qc.per_block_scale),
+                "meta": meta}
+    if qc.mode == "fake":
+        return {"qt": fq_from_float(w2d, qc.n_bits, qc.spec), "meta": meta}
+    return {"qt": w2d, "meta": meta}
+
+
+def conv_apply(p: Dict, x: jnp.ndarray, stride: int = 1,
+               act_beta=None, qc: QuantConfig | None = None) -> jnp.ndarray:
+    """x: (B, H, W, C_in) NHWC."""
+    meta = p["meta"]
+    wq = p["qt"]
+    if isinstance(wq, QuantizedTensor):
+        w2d = compose(wq)
+    elif isinstance(wq, FakeQuantTensor):
+        w2d = fq_compose(wq)
+    else:
+        w2d = wq
+    w = w2d.reshape(meta.c_in, meta.k, meta.k, meta.c_out)
+    w = jnp.transpose(w, (1, 2, 0, 3))               # HWIO
+    if act_beta is not None and qc is not None and qc.act_bits < 32:
+        x = pact_quant(x, act_beta, qc.act_bits)     # paper PACT (post-ReLU)
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn_apply(p, x, eps=1e-5):
+    # batch-norm in inference style folded to per-channel affine over batch
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    return xn * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet (CIFAR): depth = 6n+2 (20, 32, ...) or basic-18/34 style
+# ---------------------------------------------------------------------------
+
+def resnet_init(key, qc: QuantConfig, depth: int = 20,
+                num_classes: int = 10) -> Dict:
+    n = (depth - 2) // 6
+    widths = [16, 32, 64]
+    ks = iter(jax.random.split(key, 3 * n * 2 + 4))
+    params: Dict[str, Any] = {
+        "stem": conv_init(next(ks), 3, 16, 3, qc), "stem_bn": _bn_init(16),
+        "blocks": [], "betas": []}
+    c_in = 16
+    for stage, c in enumerate(widths):
+        for b in range(n):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            blk = {
+                "conv1": conv_init(next(ks), c_in, c, 3, qc),
+                "bn1": _bn_init(c),
+                "conv2": conv_init(next(ks), c, c, 3, qc),
+                "bn2": _bn_init(c),
+            }
+            if stride != 1 or c_in != c:
+                blk["proj"] = conv_init(jax.random.fold_in(next(ks), 7),
+                                        c_in, c, 1, qc)
+            params["blocks"].append(blk)
+            c_in = c
+    params["head_w"] = jax.random.normal(next(ks), (64, num_classes)) * 0.01
+    params["head_b"] = jnp.zeros((num_classes,))
+    if qc.enabled and qc.act_bits < 32:
+        params["beta"] = jnp.asarray(qc.pact_init)
+    return params
+
+
+def resnet_apply(params: Dict, x: jnp.ndarray, qc: QuantConfig):
+    beta = params.get("beta")
+    h = conv_apply(params["stem"], x)
+    h = jax.nn.relu(_bn_apply(params["stem_bn"], h))
+    for blk in params["blocks"]:
+        # stage-entry blocks (the ones with a projection) downsample 2x
+        stride = 2 if "proj" in blk else 1
+        y = conv_apply(blk["conv1"], h, stride, beta, qc)
+        y = jax.nn.relu(_bn_apply(blk["bn1"], y))
+        y = conv_apply(blk["conv2"], y, 1, beta, qc)
+        y = _bn_apply(blk["bn2"], y)
+        sc = conv_apply(blk["proj"], h, stride) if "proj" in blk else h
+        h = jax.nn.relu(y + sc)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["head_w"] + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# VGG-BN (CIFAR)
+# ---------------------------------------------------------------------------
+
+_VGG_PLANS = {
+    11: [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
+    16: [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+         512, 512, 512, "M", 512, 512, 512, "M"],
+    19: [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+         512, 512, 512, 512, "M", 512, 512, 512, 512, "M"],
+}
+
+
+def vgg_init(key, qc: QuantConfig, depth: int = 16,
+             num_classes: int = 10) -> Dict:
+    plan = _VGG_PLANS[depth]
+    ks = iter(jax.random.split(key, len(plan) + 2))
+    layers: List[Any] = []
+    c_in = 3
+    for item in plan:
+        if item == "M":
+            layers.append("M")
+        else:
+            layers.append({"conv": conv_init(next(ks), c_in, item, 3, qc),
+                           "bn": _bn_init(item)})
+            c_in = item
+    params = {"layers": layers,
+              "head_w": jax.random.normal(next(ks), (512, num_classes)) * 0.01,
+              "head_b": jnp.zeros((num_classes,))}
+    if qc.enabled and qc.act_bits < 32:
+        params["beta"] = jnp.asarray(qc.pact_init)
+    return params
+
+
+def vgg_apply(params: Dict, x: jnp.ndarray, qc: QuantConfig):
+    beta = params.get("beta")
+    h = x
+    first = True
+    for layer in params["layers"]:
+        if layer == "M":
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        else:
+            h = conv_apply(layer["conv"], h, 1,
+                           None if first else beta, qc)
+            h = jax.nn.relu(_bn_apply(layer["bn"], h))
+            first = False
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["head_w"] + params["head_b"]
+
+
+def cnn_loss(apply_fn, params, batch, qc: QuantConfig):
+    logits = apply_fn(params, batch["images"], qc)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return jnp.mean(lse - ll), dict(acc=acc)

@@ -1,0 +1,119 @@
+"""Shared building blocks: quantizable Dense, norms, embeddings.
+
+Params are plain nested dicts.  Weight matrices may be stored as
+``QuantizedTensor`` (paper-faithful bit planes), ``FakeQuantTensor``
+(memory-scalable BWQ mode) or raw arrays; ``materialize`` converts a whole
+param tree to plain weights once per step (outside the layer scan) so the
+layer code only ever sees arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bitrep import QuantizedTensor, compose, from_float
+from ..core.blocking import BlockingSpec
+from ..core.fakequant import FakeQuantTensor, fq_compose, fq_from_float
+from ..core.pact import pact_sym_quant
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "none"            # 'none' | 'bitplane' | 'fake'
+    n_bits: int = 8
+    wb_rows: int = 9
+    wb_cols: int = 8
+    per_block_scale: bool = False  # paper-faithful: per-layer scale
+    act_bits: int = 32            # 32 => no activation quantization
+    pact_init: float = 6.0
+    quantize_embeddings: bool = False
+
+    @property
+    def spec(self) -> BlockingSpec:
+        return BlockingSpec(self.wb_rows, self.wb_cols)
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+
+NO_QUANT = QuantConfig()
+
+
+def make_weight(key, shape, qc: QuantConfig, scale: float = 1.0,
+                dtype=jnp.float32, quantize: bool = True) -> Any:
+    """Initialize one (possibly stacked) weight matrix (..., K, N)."""
+    fan_in = shape[-2]
+    w = jax.random.normal(key, shape, dtype) * (scale / jnp.sqrt(fan_in))
+    if not quantize or not qc.enabled:
+        return w
+    if qc.mode == "bitplane":
+        return from_float(w, qc.n_bits, qc.spec,
+                          per_block_scale=qc.per_block_scale)
+    if qc.mode == "fake":
+        return fq_from_float(w, qc.n_bits, qc.spec)
+    raise ValueError(qc.mode)
+
+
+def _is_quant(x) -> bool:
+    from ..serve.deploy import ServingWeight
+    return isinstance(x, (QuantizedTensor, FakeQuantTensor, ServingWeight))
+
+
+def materialize(params: Any, dtype=None) -> Any:
+    """Quantized leaves -> plain weight arrays (done once, pre-scan)."""
+    from ..serve.deploy import ServingWeight, serving_compose
+
+    def conv(x):
+        if isinstance(x, QuantizedTensor):
+            return compose(x, dtype)
+        if isinstance(x, FakeQuantTensor):
+            return fq_compose(x, dtype)
+        if isinstance(x, ServingWeight):
+            return serving_compose(x, dtype or jnp.bfloat16)
+        if dtype is not None and isinstance(x, jnp.ndarray) \
+                and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(conv, params, is_leaf=_is_quant)
+
+
+def act_quant(x: jnp.ndarray, beta: Optional[jnp.ndarray],
+              qc: QuantConfig) -> jnp.ndarray:
+    """Symmetric PACT activation quantization in front of a quantized matmul."""
+    if not qc.enabled or qc.act_bits >= 32 or beta is None:
+        return x
+    return pact_sym_quant(x, beta.astype(x.dtype), qc.act_bits)
+
+
+def make_beta(qc: QuantConfig, dtype=jnp.float32):
+    return jnp.asarray(qc.pact_init, dtype) if qc.enabled and qc.act_bits < 32 \
+        else None
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap and cap > 0 else x

@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU / GELU MLPs (quantizable)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constraint
+from .common import make_weight
+
+
+def init_mlp(key, d_model: int, d_ff: int, qc, kind: str = "swiglu",
+             dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": make_weight(ks[0], (d_model, d_ff), qc, dtype=dtype),
+            "w_up": make_weight(ks[1], (d_model, d_ff), qc, dtype=dtype),
+            "w_down": make_weight(ks[2], (d_ff, d_model), qc, dtype=dtype),
+        }
+    return {  # plain 2-layer MLP (gelu / relu)
+        "w_in": make_weight(ks[0], (d_model, d_ff), qc, dtype=dtype),
+        "w_out": make_weight(ks[1], (d_ff, d_model), qc, dtype=dtype),
+    }
+
+
+def mlp_forward(p: Dict, x: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = constraint(h, "batch", None, "ff")
+        return h @ p["w_down"]
+    act = jax.nn.gelu if kind == "gelu" else jax.nn.relu
+    h = act(x @ p["w_in"])
+    h = constraint(h, "batch", None, "ff")
+    return h @ p["w_out"]

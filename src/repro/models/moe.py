@@ -1,0 +1,286 @@
+"""Top-k token-choice Mixture-of-Experts with sort-based ragged dispatch.
+
+Tokens are sorted by expert id and pushed through ``jax.lax.ragged_dot``
+against the stacked expert weights — no dense (T, E, C) dispatch tensors,
+no capacity drops.  Expert weights carry their in-expert TP sharding
+('expert' rule: d_ff on the model axis); true cross-device EP with
+all-to-all is a perf variant explored in EXPERIMENTS.md §Perf.
+
+The router is kept in float32 and outside BWQ quantization (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import batch_axes, constraint, get_mesh, spec
+from .common import make_weight
+
+
+@jax.custom_vjp
+def grouped_matmul(x, w, group_sizes):
+    """y[M,N] = per-group x[M,K] @ w[g,K,N] (tokens sorted by group).
+
+    jax.lax.ragged_dot's default VJP densifies to (g, M, K) tensors —
+    catastrophic for MoE training memory.  This custom VJP keeps both
+    directions ragged: dx is another ragged_dot, dw is the
+    ragged-*contracting* mode of ragged_dot_general (per-group outer
+    products, no densification).
+    """
+    return jax.lax.ragged_dot(x, w, group_sizes)
+
+
+def _gm_fwd(x, w, group_sizes):
+    return grouped_matmul(x, w, group_sizes), (x, w, group_sizes)
+
+
+def _gm_bwd(res, dy):
+    x, w, gs = res
+    dx = jax.lax.ragged_dot(dy, jnp.swapaxes(w, 1, 2), gs)
+    dnums = jax.lax.RaggedDotDimensionNumbers(
+        dot_dimension_numbers=(((0,), (0,)), ((), ())),
+        lhs_ragged_dimensions=[0], rhs_group_dimensions=[])
+    dw = jax.lax.ragged_dot_general(x, dy, gs, dnums)
+    return dx.astype(x.dtype), dw.astype(w.dtype), None
+
+
+grouped_matmul.defvjp(_gm_fwd, _gm_bwd)
+
+# Implementation selector.  'ragged' (jax.lax.ragged_dot + custom VJP) is
+# exact/no-drop but XLA lowers it densely to (E, M, K) tensors on backends
+# without native ragged-dot support — prohibitive at pod scale.  'capacity'
+# is the GShard-style fixed-capacity path: a scan over experts with static
+# per-expert capacity; tokens beyond capacity are dropped (standard
+# capacity-factor semantics).  The dry-run and the at-scale launcher use
+# 'capacity'; small-scale exact runs use 'ragged'.
+GROUPED_IMPL = {"impl": "ragged", "capacity_factor": 2.0}
+
+
+def grouped_matmul_capacity(x, w, group_sizes, capacity: int):
+    """Capacity-bounded grouped matmul over sorted tokens.
+
+    x: (M, K) tokens sorted by group; w: (E, K, N); returns (M, N) with
+    zeros for tokens past their group's capacity (dropped).
+    """
+    m, k = x.shape
+    e, _, n = w.shape
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
+    x_pad = jnp.concatenate([x, jnp.zeros((capacity, k), x.dtype)], axis=0)
+
+    def body(y, ins):
+        w_e, start, size = ins
+        xs = jax.lax.dynamic_slice(x_pad, (start, 0), (capacity, k))
+        mask = (jnp.arange(capacity) < size)[:, None].astype(x.dtype)
+        ys = ((xs * mask) @ w_e) * mask
+        idx = start + jnp.arange(capacity)
+        y = y.at[idx].add(ys, mode="drop")
+        return y, None
+
+    y0 = jnp.zeros((m + capacity, n), x.dtype)
+    y, _ = jax.lax.scan(body, y0, (w, starts, group_sizes))
+    return y[:m]
+
+
+def _grouped(x, w, group_sizes):
+    if GROUPED_IMPL["impl"] == "capacity":
+        m = x.shape[0]
+        e = w.shape[0]
+        cap = int(GROUPED_IMPL["capacity_factor"] * m / e + 0.999)
+        cap = max(8, min(m, -(-cap // 8) * 8))
+        return grouped_matmul_capacity(x, w, group_sizes, cap)
+    return grouped_matmul(x, w, group_sizes)
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int,
+             qc, n_shared: int = 0, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router_w": jax.random.normal(ks[0], (d_model, n_experts),
+                                      jnp.float32) * 0.02,
+        "expert_gate": make_weight(ks[1], (n_experts, d_model, d_ff), qc,
+                                   dtype=dtype),
+        "expert_up": make_weight(ks[2], (n_experts, d_model, d_ff), qc,
+                                 dtype=dtype),
+        "expert_down": make_weight(ks[3], (n_experts, d_ff, d_model), qc,
+                                   dtype=dtype),
+    }
+    if n_shared:
+        p["shared_gate"] = make_weight(ks[4], (d_model, n_shared * d_ff), qc,
+                                       dtype=dtype)
+        key2 = jax.random.fold_in(ks[4], 1)
+        p["shared_up"] = make_weight(key2, (d_model, n_shared * d_ff), qc,
+                                     dtype=dtype)
+        key3 = jax.random.fold_in(ks[4], 2)
+        p["shared_down"] = make_weight(key3, (n_shared * d_ff, d_model), qc,
+                                       dtype=dtype)
+    return p
+
+
+def moe_forward(p: Dict, x: jnp.ndarray, top_k: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Under an active mesh this dispatches to the shard_map path: routing +
+    sort stay LOCAL to each data shard (a global argsort under pjit would
+    gather every token to every device), expert FFNs run with in-expert TP
+    over 'model', partial outputs psum over 'model'.
+    """
+    mesh = get_mesh()
+    if mesh is not None and mesh.devices.size > 1:
+        return _moe_forward_sharded(p, x, top_k, mesh)
+    return _moe_forward_local(p, x, top_k)
+
+
+def _moe_forward_local(p: Dict, x: jnp.ndarray, top_k: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    e = p["router_w"].shape[-1]
+    xt = x.reshape(b * s, d)
+    logits = xt.astype(jnp.float32) @ p["router_w"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)      # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    t = b * s
+    flat_expert = expert_idx.reshape(-1)                     # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                         # stable
+    tok_sorted = flat_token[order]
+    xs = jnp.take(xt, tok_sorted, axis=0)                    # (T*k, D)
+    group_sizes = jnp.bincount(flat_expert, length=e).astype(jnp.int32)
+
+    gate = _grouped(xs, p["expert_gate"], group_sizes)
+    up = _grouped(xs, p["expert_up"], group_sizes)
+    h = jax.nn.silu(gate) * up
+    h = constraint(h, None, "ff")
+    ys = _grouped(h, p["expert_down"], group_sizes)      # (T*k, D)
+
+    ys = ys * flat_gate[order][:, None].astype(ys.dtype)
+    out = jnp.zeros_like(xt).at[tok_sorted].add(ys)
+    out = out.reshape(b, s, d)
+
+    if "shared_gate" in p:
+        hs = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
+        out = out + hs @ p["shared_down"]
+
+    # load-balance auxiliary loss (Switch-style)
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(expert_idx, e).sum(1) > 0).astype(jnp.float32), 0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out, aux
+
+
+def _moe_forward_sharded(p: Dict, x: jnp.ndarray, top_k: int, mesh
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """shard_map MoE: per-data-shard routing/sort + in-expert TP on 'model'.
+
+    Expert weights are first constrained to drop their FSDP 'data' dim
+    (one per-layer all-gather — ZeRO-3 unshard at use), keeping 'model'
+    (d_ff) sharded; inside the shard the ragged grouped matmuls run on
+    local tokens only and partial d_model outputs are psum'd over 'model'.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = batch_axes(mesh)
+    dpa = dp[0] if len(dp) == 1 else tuple(dp)
+    has_model = "model" in mesh.axis_names
+    e = p["router_w"].shape[-1]
+    model_size = mesh.shape.get("model", 1)
+    # TRUE expert parallelism when E divides the model axis: each model
+    # rank owns E/model experts outright (weights never gathered); tokens
+    # are data-sharded and every rank computes only its experts' share.
+    # Otherwise fall back to in-expert tensor parallelism on d_ff.
+    ep_mode = has_model and e % model_size == 0
+
+    def reshard(w, spec):
+        return jax.lax.with_sharding_constraint(w, NamedSharding(mesh, spec))
+
+    if ep_mode:
+        wspec_g = wspec_u = P("model", None, None)
+        wspec_d = P("model", None, None)
+    else:
+        wspec_g = wspec_u = P(None, None, "model" if has_model else None)
+        wspec_d = P(None, "model" if has_model else None, None)
+    wg = reshard(p["expert_gate"], wspec_g)
+    wu = reshard(p["expert_up"], wspec_u)
+    wd = reshard(p["expert_down"], wspec_d)
+    rw = reshard(p["router_w"], P())
+
+    def local_moe(xs, rw, wg, wu, wd):
+        b, s, d = xs.shape
+        xt = xs.reshape(b * s, d)
+        t = b * s
+        logits = xt.astype(jnp.float32) @ rw
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+        flat_expert = expert_idx.reshape(-1)
+        flat_token = jnp.repeat(jnp.arange(t), top_k)
+        flat_gate = gate_vals.reshape(-1)
+        order = jnp.argsort(flat_expert)
+        tok_sorted = flat_token[order]
+        xsrt = jnp.take(xt, tok_sorted, axis=0)
+        group_sizes = jnp.bincount(flat_expert, length=e).astype(jnp.int32)
+        if ep_mode:
+            # compute only this rank's expert range over the sorted tokens
+            e_local = wg.shape[0]
+            rank = jax.lax.axis_index("model")
+            offs = rank * e_local
+            gs_local = jax.lax.dynamic_slice(group_sizes, (offs,), (e_local,))
+            starts = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32),
+                 jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
+            start0 = jax.lax.dynamic_slice(starts, (offs,), (1,))[0]
+            # roll so this rank's tokens start at row 0, then run the
+            # capacity matmul over just the local experts
+            xloc = jnp.roll(xsrt, -start0, axis=0)
+            m = xt.shape[0] * top_k
+            cap = max(8, min(m, -(-int(
+                GROUPED_IMPL["capacity_factor"] * m / e + 0.999) // 8) * 8))
+            gate = grouped_matmul_capacity(xloc, wg, gs_local, cap)
+            up = grouped_matmul_capacity(xloc, wu, gs_local, cap)
+            h = jax.nn.silu(gate) * up
+            ys = grouped_matmul_capacity(h, wd, gs_local, cap)
+            ys = jnp.roll(ys, start0, axis=0)
+        else:
+            gate = _grouped(xsrt, wg, group_sizes)
+            up = _grouped(xsrt, wu, group_sizes)
+            h = jax.nn.silu(gate) * up
+            ys = _grouped(h, wd, group_sizes)
+        ys = ys * flat_gate[order][:, None].astype(ys.dtype)
+        out = jnp.zeros_like(xt).at[tok_sorted].add(ys)
+        if has_model:
+            out = jax.lax.psum(out, "model")
+        frac_tokens = jnp.mean(
+            (jax.nn.one_hot(expert_idx, e).sum(1) > 0).astype(jnp.float32), 0)
+        frac_probs = jnp.mean(probs, axis=0)
+        aux = e * jnp.sum(frac_tokens * frac_probs)
+        aux = jax.lax.pmean(aux, dp) if dp else aux
+        if has_model:
+            aux = jax.lax.pmean(aux, "model")  # replicate for out_specs
+        return out.reshape(b, s, d), aux
+
+    if ep_mode:
+        w_in_specs = (P("model", None, None), P("model", None, None),
+                      P("model", None, None))
+    else:
+        mdl = "model" if has_model else None
+        w_in_specs = (P(None, None, mdl), P(None, None, mdl),
+                      P(None, mdl, None))
+    in_specs = (P(dpa, None, None), P()) + w_in_specs
+    out_specs = (P(dpa, None, None), P())
+    out, aux = jax.shard_map(local_moe, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)(
+        x, rw, wg, wu, wd)
+
+    if "shared_gate" in p:
+        hs = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
+        hs = constraint(hs, "batch", None, "ff")
+        out = out + hs @ p["shared_down"]
+    return out, aux

@@ -1,0 +1,53 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jnp.ndarray, d_head: int,
+                theta: float = 1e4) -> jnp.ndarray:
+    """(.., S) int positions -> (.., S, d_head//2) angles."""
+    half = d_head // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, dh); angles: (B, S, dh//2) -> rotated x."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., None, :].astype(jnp.float32)
+    sin = jnp.sin(angles)[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin,
+                            x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def mrope_angles(positions3: jnp.ndarray, d_head: int, theta: float,
+                 sections: Sequence[int] | None = None) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (B, S, 3) = (temporal, height, width) position ids.  The
+    d_head//2 frequency slots are split into ``sections`` (t, h, w); each
+    section rotates with its own position stream.  Text tokens carry equal
+    (t, h, w) ids, which makes M-RoPE degenerate to standard RoPE for them.
+    """
+    half = d_head // 2
+    if sections is None:
+        # Qwen2-VL ratio (16, 24, 24)/64 generalized to any head size.
+        hw = 3 * half // 8
+        sections = (half - 2 * hw, hw, hw)
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=half)
+    # gather per-frequency-slot positions: (B, S, half)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :],
+                         positions3.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1)
+    return pos * inv_freq

@@ -1,0 +1,194 @@
+"""RWKV-6 "Finch" block: data-dependent per-channel decay linear attention.
+
+Time-mix uses the GLA-style chunked form (log-space cumulative decays,
+intra-chunk masked matmul + inter-chunk state scan) so prefill/training is
+matmul-bound; decode carries an O(H * dk * dv) state per layer.  The
+data-dependent decay ``w_t`` is produced by the paper's LoRA-style map
+(w0 + tanh(x A) B).  Decay/bonus vectors are excluded from BWQ
+(DESIGN.md §5); all Dense projections are quantizable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constraint
+from .common import make_weight, rms_norm
+
+
+def init_rwkv6(key, d_model: int, n_heads: int, qc, lora_r: int = 64,
+               stack: int = 0, d_ff: int = 0, dtype=jnp.float32) -> Dict:
+    """``stack`` > 0 builds scan-stacked (stack, ...) leaves directly
+    (QuantizedTensor keeps its bit axis first either way)."""
+    ks = jax.random.split(key, 10)
+    dh = d_model // n_heads
+    d_ff = d_ff or 7 * d_model // 2
+    L = (stack,) if stack else ()
+    return {
+        # time mix
+        "wr": make_weight(ks[0], (*L, d_model, d_model), qc, dtype=dtype),
+        "wk": make_weight(ks[1], (*L, d_model, d_model), qc, dtype=dtype),
+        "wv": make_weight(ks[2], (*L, d_model, d_model), qc, dtype=dtype),
+        "wg": make_weight(ks[3], (*L, d_model, d_model), qc, dtype=dtype),
+        "wo_t": make_weight(ks[4], (*L, d_model, d_model), qc, dtype=dtype),
+        "decay_w0": jnp.full((*L, d_model), -6.0, dtype),
+        "decay_a": jax.random.normal(ks[5], (*L, d_model, lora_r), dtype) * 0.02,
+        "decay_b": jax.random.normal(ks[6], (*L, lora_r, d_model), dtype) * 0.02,
+        "bonus_u": jnp.zeros((*L, n_heads, dh), dtype),
+        "mix_r": jnp.full((*L, d_model), 0.5, dtype),
+        "mix_k": jnp.full((*L, d_model), 0.5, dtype),
+        "mix_v": jnp.full((*L, d_model), 0.5, dtype),
+        "mix_w": jnp.full((*L, d_model), 0.5, dtype),
+        "ln_x_scale": jnp.ones((*L, d_model), dtype),
+        # channel mix
+        "cm_wr": make_weight(ks[7], (*L, d_model, d_model), qc, dtype=dtype),
+        "cm_wk": make_weight(ks[8], (*L, d_model, d_ff), qc, dtype=dtype),
+        "cm_wv": make_weight(ks[9], (*L, d_ff, d_model), qc, dtype=dtype),
+        "cm_mix_r": jnp.full((*L, d_model), 0.5, dtype),
+        "cm_mix_k": jnp.full((*L, d_model), 0.5, dtype),
+        "ln_t": jnp.zeros((*L, d_model), dtype),
+        "ln_c": jnp.zeros((*L, d_model), dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]):
+    """shifted[t] = x[t-1]; ``prev`` carries the last token across calls."""
+    if prev is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        shifted = jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+    return shifted, x[:, -1, :]
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, chunk: int):
+    """Chunked linear attention with per-channel decay.
+
+    r,k: (b, L, H, K); v: (b, L, H, V); logw: (b, L, H, K) (negative);
+    u: (H, K) bonus for the diagonal; s0: (b, H, K, V).
+    o_t = (u*k_t . r_t) v_t + r_t . S_{t-1};  S_t = w_t*S_{t-1} + k_t v_t^T
+    (decay applied with the *current* token's w).
+    """
+    b, L, H, K = r.shape
+    V = v.shape[-1]
+    nc = L // chunk
+    rs = r.reshape(b, nc, chunk, H, K)
+    ks_ = k.reshape(b, nc, chunk, H, K)
+    vs = v.reshape(b, nc, chunk, H, V)
+    lw = logw.reshape(b, nc, chunk, H, K)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly lower
+
+    def chunk_step(s, ins):
+        """One chunk, O(one chunk) live memory (sequential scan, remat'd).
+
+        Intra-chunk A[q,s] = sum_k r_qk k_sk exp(dprev_q,k - dcum_s,k) in
+        factored matmul form with a per-channel midpoint offset so neither
+        factor overflows f32 (per-step logw clamped >= -4 upstream; with
+        chunk<=32 the worst exponent is ~17*4 < 88).
+        """
+        r_c, k_c, v_c, lw_c = ins            # (b,Q,H,K) x3, (b,Q,H,V)
+        dcum = jnp.cumsum(lw_c, axis=1)      # (b,Q,H,K)
+        dprev = dcum - lw_c
+        mid = dcum[:, chunk // 2: chunk // 2 + 1]
+        qk = jnp.einsum("bqhk,bshk->bhqs",
+                        r_c * jnp.exp(dprev - mid),
+                        k_c * jnp.exp(mid - dcum))
+        qk = jnp.where(tri[None, None], qk, 0.0)
+        diag = jnp.einsum("bqhk,hk,bqhk->bhq", r_c, jnp.exp(u), k_c)
+        o_intra = jnp.einsum("bhqs,bshv->bqhv", qk, v_c) + \
+            jnp.einsum("bhq,bqhv->bqhv", diag, v_c)
+        o_inter = jnp.einsum("bqhk,bhkv->bqhv", r_c * jnp.exp(dprev), s)
+        dec_last = dcum[:, -1:]
+        s_chunk = jnp.einsum("bshk,bshv->bhkv",
+                             k_c * jnp.exp(dec_last - dcum), v_c)
+        s_new = s * jnp.exp(dcum[:, -1])[..., None] + s_chunk
+        return s_new, o_intra + o_inter
+
+    seq = tuple(jnp.moveaxis(a, 1, 0) for a in (rs, ks_, vs, lw))
+    s_fin, os_ = jax.lax.scan(jax.checkpoint(chunk_step), s0, seq)
+    o = jnp.moveaxis(os_, 0, 1).reshape(b, L, H, V)
+    return o, s_fin
+
+
+def rwkv6_forward(p: Dict, h: jnp.ndarray, *, n_heads: int,
+                  chunk: int = 32, state: Optional[Dict] = None
+                  ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full RWKV6 layer: h = h + TimeMix(LN(h)); h = h + ChannelMix(LN(h))."""
+    b, L, d = h.shape
+    chunk = min(chunk, L)
+    dh = d // n_heads
+    x = rms_norm(h, p["ln_t"])
+    prev_t = state["shift_t"] if state is not None else None
+    shifted, last_t = _token_shift(x, prev_t)
+
+    def mix(mu):
+        return x + (shifted - x) * mu
+
+    r = (mix(p["mix_r"]) @ p["wr"]).reshape(b, L, n_heads, dh)
+    k = (mix(p["mix_k"]) @ p["wk"]).reshape(b, L, n_heads, dh)
+    v = (mix(p["mix_v"]) @ p["wv"]).reshape(b, L, n_heads, dh)
+    g = jax.nn.silu(mix(p["mix_w"]) @ p["wg"])
+    r = constraint(r, "batch", None, "heads", None)
+
+    xw = mix(p["mix_w"])
+    logw = -jnp.exp(p["decay_w0"] +
+                    jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"])
+    logw = jnp.maximum(logw, -4.0)  # decay floor; see _wkv_chunked overflow note
+    logw = logw.reshape(b, L, n_heads, dh).astype(jnp.float32)
+
+    s0 = state["wkv"] if state is not None else \
+        jnp.zeros((b, n_heads, dh, dh), jnp.float32)
+
+    if L % chunk == 0 and L > 1:      # training AND chunked prefill
+        o, s_fin = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), logw,
+                                p["bonus_u"].astype(jnp.float32), s0, chunk)
+    else:
+        def step(s, ins):
+            r_t, k_t, v_t, lw_t = ins
+            o_t = jnp.einsum("bhk,bhkv->bhv", r_t, s) + \
+                jnp.einsum("bhk,hk,bhk,bhv->bhv", r_t,
+                           jnp.exp(p["bonus_u"].astype(jnp.float32)), k_t, v_t)
+            s = s * jnp.exp(lw_t)[..., None] + \
+                jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+            return s, o_t
+
+        seq = tuple(jnp.moveaxis(t, 1, 0) for t in
+                    (r.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32), logw))
+        s_fin, os_ = jax.lax.scan(step, s0, seq)
+        o = jnp.moveaxis(os_, 0, 1)
+
+    o = o.reshape(b, L, d).astype(x.dtype)
+    o = rms_norm(o, p["ln_x_scale"] - 1.0) * g
+    h = h + o @ p["wo_t"]
+
+    # channel mix (with its own token shift) on the updated residual stream
+    xc = rms_norm(h, p["ln_c"])
+    prev_c = state["shift_c"] if state is not None else None
+    shifted_c, last_c = _token_shift(xc, prev_c)
+
+    def mixc(mu):
+        return xc + (shifted_c - xc) * mu
+
+    rc = jax.nn.sigmoid(mixc(p["cm_mix_r"]) @ p["cm_wr"])
+    kc = jnp.square(jax.nn.relu(mixc(p["cm_mix_k"]) @ p["cm_wk"]))
+    kc = constraint(kc, "batch", None, "ff")
+    h = h + rc * (kc @ p["cm_wv"])
+
+    new_state = None
+    if state is not None:
+        new_state = {"shift_t": last_t, "shift_c": last_c, "wkv": s_fin}
+    return h, new_state
+
+
+def rwkv6_init_state(batch: int, d_model: int, n_heads: int,
+                     dtype=jnp.float32) -> Dict:
+    dh = d_model // n_heads
+    return {
+        "shift_t": jnp.zeros((batch, d_model), dtype),
+        "shift_c": jnp.zeros((batch, d_model), dtype),
+        "wkv": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+    }

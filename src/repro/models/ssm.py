@@ -1,0 +1,174 @@
+"""Mamba-2 (SSD) block with chunked prefix-scan — TPU-friendly formulation.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk attention-form
+matmuls + inter-chunk ``lax.scan`` over chunk states) so the MXU does the
+work; decode keeps a per-layer recurrent state of O(H*N*P) — this is what
+makes the ``long_500k`` cells tractable for the hybrid/SSM archs.
+
+Projections are split (x/z/B/C/dt) so each weight shards cleanly and is
+individually BWQ-quantizable.  dt/A/D are vectors and stay unquantized
+(DESIGN.md §5 arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constraint
+from .common import make_weight, rms_norm
+
+
+def init_mamba2(key, d_model: int, n_state: int, qc, expand: int = 2,
+                headdim: int = 64, conv_k: int = 4, stack: int = 0,
+                dtype=jnp.float32) -> Dict:
+    """``stack`` > 0 builds scan-stacked (stack, ...) leaves directly."""
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    ks = jax.random.split(key, 8)
+    L = (stack,) if stack else ()
+    return {
+        "in_x": make_weight(ks[0], (*L, d_model, d_inner), qc, dtype=dtype),
+        "in_z": make_weight(ks[1], (*L, d_model, d_inner), qc, dtype=dtype),
+        "in_B": make_weight(ks[2], (*L, d_model, n_state), qc, dtype=dtype),
+        "in_C": make_weight(ks[3], (*L, d_model, n_state), qc, dtype=dtype),
+        "in_dt": make_weight(ks[4], (*L, d_model, n_heads), qc, dtype=dtype),
+        "conv1d_w": jax.random.normal(ks[5], (*L, conv_k, d_inner), dtype) * 0.2,
+        "conv1d_b": jnp.zeros((*L, d_inner), dtype),
+        "a_log": jnp.zeros((*L, n_heads), dtype),    # A = -exp(a_log)
+        "d_skip": jnp.ones((*L, n_heads), dtype),
+        "dt_bias": jnp.zeros((*L, n_heads), dtype),
+        "norm_scale": jnp.zeros((*L, d_inner), dtype),
+        "out_proj": make_weight(ks[6], (*L, d_inner, d_model), qc, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along seq. x: (B, L, C), w: (K, C).
+
+    Returns (y, new_state) where state caches the trailing K-1 inputs.
+    """
+    k = w.shape[0]
+    if state is None:
+        hist = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([state, x], axis=1)
+    y = sum(hist[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = hist[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(y + b), new_state
+
+
+def _ssd_chunked(xh, dt, da, B, C, h0, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (b, L, H, P)   inputs per head
+    dt: (b, L, H)      discretization steps (post-softplus)
+    da: (b, L, H)      log decay per step (negative)
+    B, C: (b, L, N)    input/output projections (single group)
+    h0: (b, H, N, P)   initial state
+    Returns (y (b, L, H, P), h_final).
+    """
+    b, L, H, P = xh.shape
+    N = B.shape[-1]
+    nc = L // chunk
+    xh = xh.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    dac = da.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(h, ins):
+        """One chunk: intra (attention-form matmuls) + inter (carried state).
+
+        Sequential scan keeps live memory at O(one chunk) — the 32k/500k
+        prefill cells depend on this (checkpointed for the backward pass).
+        """
+        xh_c, dt_c, da_c, b_c, c_c = ins   # (b,Q,H,P),(b,Q,H),(b,Q,H),(b,Q,N)x2
+        lcum = jnp.cumsum(da_c, axis=1)                   # (b,Q,H)
+        xdt = xh_c * dt_c[..., None]                      # (b,Q,H,P)
+        rel = lcum[:, :, None, :] - lcum[:, None, :, :]   # (b,Q,Q,H)
+        att = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("bqn,bsn->bqs", c_c, b_c)         # (b,Q,Q)
+        y_intra = jnp.einsum("bqs,bqsh,bshp->bqhp", cb, att, xdt)
+        y_inter = jnp.einsum("bqn,bhnp->bqhp", c_c, h) \
+            * jnp.exp(lcum)[..., None]
+        dec_out = jnp.exp(lcum[:, -1:, :] - lcum)         # (b,Q,H)
+        s_chunk = jnp.einsum("bsn,bsh,bshp->bhnp", b_c, dec_out, xdt)
+        h_new = h * jnp.exp(lcum[:, -1, :])[:, :, None, None] + s_chunk
+        return h_new, y_intra + y_inter
+
+    seq = tuple(jnp.moveaxis(a, 1, 0) for a in (xh, dtc, dac, Bc, Cc))
+    h_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, seq)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, L, H, P)        # (b,nc,Q,H,P)
+    return y, h_fin
+
+
+def mamba2_forward(p: Dict, x: jnp.ndarray, *, n_state: int,
+                   headdim: int = 64, chunk: int = 128,
+                   state: Optional[Dict] = None
+                   ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, L, D).  With ``state`` (decode), L is typically 1."""
+    b, L, d = x.shape
+    chunk = min(chunk, L)
+    xi = x @ p["in_x"]
+    z = x @ p["in_z"]
+    Bp = x @ p["in_B"]
+    Cp = x @ p["in_C"]
+    dt = jax.nn.softplus(x @ p["in_dt"] + p["dt_bias"])   # (B,L,H)
+    h = dt.shape[-1]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = (dt.astype(jnp.float32) * a)                     # (B,L,H) log decay
+
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv1d_w"], p["conv1d_b"], conv_state)
+    xi = constraint(xi, "batch", None, "ff")
+    xh = xi.reshape(b, L, h, headdim)
+
+    h0 = state["ssm"] if state is not None else \
+        jnp.zeros((b, h, n_state, headdim), jnp.float32)
+    if L % chunk == 0 and L > 1:      # training AND chunked prefill
+        y, h_fin = _ssd_chunked(xh.astype(jnp.float32),
+                                dt.astype(jnp.float32), da,
+                                Bp.astype(jnp.float32),
+                                Cp.astype(jnp.float32), h0, chunk)
+    else:
+
+        def step(hc, ins):
+            xh_t, dt_t, da_t, b_t, c_t = ins
+            hc = hc * jnp.exp(da_t)[:, :, None, None] + \
+                jnp.einsum("bn,bh,bhp->bhnp", b_t, dt_t, xh_t)
+            y_t = jnp.einsum("bn,bhnp->bhp", c_t, hc)
+            return hc, y_t
+
+        seq = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(da, 1, 0),
+               jnp.moveaxis(Bp.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(Cp.astype(jnp.float32), 1, 0))
+        h_fin, ys = jax.lax.scan(step, h0, seq)
+        y = jnp.moveaxis(ys, 0, 1)                        # (B,L,H,P)
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(b, L, h * headdim).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ p["out_proj"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": h_fin}
+    return out, new_state
+
+
+def mamba2_init_state(batch: int, d_model: int, n_state: int,
+                      expand: int = 2, headdim: int = 64, conv_k: int = 4,
+                      dtype=jnp.float32) -> Dict:
+    d_inner = expand * d_model
+    h = d_inner // headdim
+    return {
+        "conv": jnp.zeros((batch, conv_k - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, h, n_state, headdim), jnp.float32),
+    }

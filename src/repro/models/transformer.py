@@ -1,0 +1,454 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid families.
+
+One scan-over-layers drives training, prefill and decode; the layer body
+dispatches on the config family.  Params hold stacked (L, ...) leaves —
+quantized weights are materialized ONCE per step (outside the scan) so the
+bit-level compose cost is amortized and the scan body sees plain arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import constraint, shard_params_tree
+from .attention import attn_forward, init_attn
+from .common import (act_quant, embed_init, make_beta, make_weight,
+                     materialize, rms_norm, softcap)
+from .ffn import init_mlp, mlp_forward
+from .moe import init_moe, moe_forward
+from .rwkv import init_rwkv6, rwkv6_forward, rwkv6_init_state
+from .ssm import init_mamba2, mamba2_forward, mamba2_init_state
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def scan_or_loop(body, carry, xs, use_scan: bool, length: int):
+    """lax.scan or an unrolled python loop (cfg.scan_layers=False).
+
+    The unrolled form exists for the dry-run's cost *calibration* lowering:
+    XLA cost_analysis counts a scan body once, so exact FLOP/byte totals
+    are obtained from small unrolled configs and scaled (launch/dryrun.py).
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and any(l is not None for l in jax.tree_util.tree_leaves(ys[0])) \
+            or (ys and ys[0] is not None):
+        ys_stacked = jax.tree_util.tree_map(
+            lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys_stacked = None
+    return carry, ys_stacked
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, stack: int) -> Dict:
+    """One stacked parameter set for ``stack`` homogeneous layers."""
+    qc = cfg.quant
+    dt = jnp.float32
+    ks = jax.random.split(key, 8)
+    d, dh = cfg.d_model, cfg.head_dim
+    p: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["ln_attn"] = jnp.zeros((stack, d), dt)
+        p["ln_mlp"] = jnp.zeros((stack, d), dt)
+        if cfg.use_post_norms:
+            p["ln_attn_post"] = jnp.zeros((stack, d), dt)
+            p["ln_mlp_post"] = jnp.zeros((stack, d), dt)
+        p["attn"] = {
+            "wq": make_weight(ks[0], (stack, d, cfg.n_heads * dh), qc, dtype=dt),
+            "wk": make_weight(ks[1], (stack, d, cfg.n_kv_heads * dh), qc, dtype=dt),
+            "wv": make_weight(ks[2], (stack, d, cfg.n_kv_heads * dh), qc, dtype=dt),
+            "wo": make_weight(ks[3], (stack, cfg.n_heads * dh, d), qc, dtype=dt),
+        }
+        if cfg.qkv_bias:
+            p["attn"]["bq"] = jnp.zeros((stack, cfg.n_heads * dh), dt)
+            p["attn"]["bk"] = jnp.zeros((stack, cfg.n_kv_heads * dh), dt)
+            p["attn"]["bv"] = jnp.zeros((stack, cfg.n_kv_heads * dh), dt)
+        if cfg.family == "moe" or cfg.n_experts:
+            p["moe"] = {
+                "router_w": jax.random.normal(
+                    ks[4], (stack, d, cfg.n_experts), jnp.float32) * 0.02,
+                "expert_gate": make_weight(
+                    ks[5], (stack, cfg.n_experts, d, cfg.d_ff), qc, dtype=dt),
+                "expert_up": make_weight(
+                    jax.random.fold_in(ks[5], 1),
+                    (stack, cfg.n_experts, d, cfg.d_ff), qc, dtype=dt),
+                "expert_down": make_weight(
+                    jax.random.fold_in(ks[5], 2),
+                    (stack, cfg.n_experts, cfg.d_ff, d), qc, dtype=dt),
+            }
+            if cfg.n_shared_experts:
+                f = cfg.n_shared_experts * cfg.d_ff
+                p["moe"]["shared_gate"] = make_weight(
+                    ks[6], (stack, d, f), qc, dtype=dt)
+                p["moe"]["shared_up"] = make_weight(
+                    jax.random.fold_in(ks[6], 1), (stack, d, f), qc, dtype=dt)
+                p["moe"]["shared_down"] = make_weight(
+                    jax.random.fold_in(ks[6], 2), (stack, f, d), qc, dtype=dt)
+        else:
+            if cfg.mlp_kind == "swiglu":
+                p["mlp"] = {
+                    "w_gate": make_weight(ks[4], (stack, d, cfg.d_ff), qc, dtype=dt),
+                    "w_up": make_weight(ks[5], (stack, d, cfg.d_ff), qc, dtype=dt),
+                    "w_down": make_weight(ks[6], (stack, cfg.d_ff, d), qc, dtype=dt),
+                }
+            else:
+                p["mlp"] = {
+                    "w_in": make_weight(ks[4], (stack, d, cfg.d_ff), qc, dtype=dt),
+                    "w_out": make_weight(ks[5], (stack, cfg.d_ff, d), qc, dtype=dt),
+                }
+        if qc.enabled and qc.act_bits < 32:
+            p["beta_attn"] = jnp.full((stack,), qc.pact_init, dt)
+            p["beta_mlp"] = jnp.full((stack,), qc.pact_init, dt)
+    elif cfg.family == "ssm":        # rwkv6 (token-mix + channel-mix per layer)
+        p = init_rwkv6(ks[0], d, cfg.n_heads, qc, stack=stack, d_ff=cfg.d_ff)
+    elif cfg.family == "hybrid":     # zamba2 mamba trunk
+        p = init_mamba2(ks[0], d, cfg.ssm_state, qc, expand=cfg.ssm_expand,
+                        headdim=cfg.ssm_headdim, stack=stack)
+        p["ln"] = jnp.zeros((stack, d), dt)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 6)
+    dt = jnp.float32
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab, d, dt),
+        "final_norm": jnp.zeros((d,), dt),
+        "layers": _init_block(ks[1], cfg, cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = make_weight(
+            ks[2], (d, cfg.vocab), cfg.quant, dtype=dt,
+            quantize=cfg.quant.quantize_embeddings)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        # zamba2: ONE shared attention block, invoked every k layers on
+        # concat(hidden, original_embedding) (2*d input).
+        params["shared_attn"] = init_attn(
+            ks[3], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.quant,
+            make_weight, d_model_in=2 * d, dtype=dt)
+        params["shared_ln"] = jnp.zeros((2 * d,), dt)
+        params["shared_mlp"] = init_mlp(ks[5], d, cfg.d_ff, cfg.quant,
+                                        kind=cfg.mlp_kind, dtype=dt)
+        params["shared_ln2"] = jnp.zeros((d,), dt)
+    if cfg.family == "vlm":
+        params["vision_proj"] = make_weight(ks[4], (d, d), cfg.quant, dtype=dt)
+    return params
+
+
+def _contains_bitplane(tree) -> bool:
+    from ..core.bitrep import QuantizedTensor
+    return any(isinstance(x, QuantizedTensor)
+               for x in jax.tree_util.tree_leaves(
+                   tree, is_leaf=lambda y: isinstance(y, QuantizedTensor)))
+
+
+def _materialize_for_walk(params, dtype):
+    """Materialize top-level params; keep stacked layer weights in their
+    quantized storage so each scan step dequantizes ONE layer in VMEM-side
+    registers (packed int8/int4 streams from HBM — the BWQ serving win).
+    Bit-plane tensors carry the bit axis first (not scan-sliceable), so
+    that mode composes up-front instead."""
+    out = {}
+    for k, v in params.items():
+        if k == "layers" and not _contains_bitplane(v):
+            out[k] = v
+        else:
+            out[k] = materialize(v, dtype)
+    return out
+
+
+def _index_cache(cache, i):
+    """Slice layer i's cache out of stacked (L, ...) leaves."""
+    return jax.tree_util.tree_map(
+        lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+        cache)
+
+
+def _update_cache(cache, new_layer, i):
+    return jax.tree_util.tree_map(
+        lambda c, nl: jax.lax.dynamic_update_index_in_dim(c, nl, i, 0),
+        cache, new_layer)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp, h, positions, cfg: ModelConfig, is_local,
+                cache=None, index=None):
+    qc = cfg.quant
+    x = rms_norm(h, lp["ln_attn"])
+    x = act_quant(x, lp.get("beta_attn"), qc)
+    window = jnp.where(is_local, cfg.sliding_window, 0) if \
+        cfg.alt_local_global else (cfg.sliding_window or 0)
+    # window as traced value: attention uses dynamic comparison, so pass
+    # the array directly (0 disables).
+    out, new_cache = attn_forward(
+        lp["attn"], x, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        d_head=cfg.head_dim, rope_theta=cfg.rope_theta, causal=True,
+        window=window, attn_softcap=cfg.attn_softcap, mrope=cfg.mrope,
+        cache=cache, cache_index=index)
+    if cfg.use_post_norms:
+        out = rms_norm(out, lp["ln_attn_post"])
+    return h + out, new_cache
+
+
+def _mlp_block(lp, h, cfg: ModelConfig):
+    qc = cfg.quant
+    x = rms_norm(h, lp["ln_mlp"])
+    x = act_quant(x, lp.get("beta_mlp"), qc)
+    aux = jnp.asarray(0.0, jnp.float32)
+    if "moe" in lp:
+        out, aux = moe_forward(lp["moe"], x, cfg.top_k)
+    else:
+        out = mlp_forward(lp["mlp"], x, cfg.mlp_kind)
+    if cfg.use_post_norms:
+        out = rms_norm(out, lp["ln_mlp_post"])
+    return h + out, aux
+
+
+# ---------------------------------------------------------------------------
+# full model walk
+# ---------------------------------------------------------------------------
+
+def _walk_dense(mp, cfg, h, positions, cache, index):
+    """Scan over homogeneous attention+FFN layers."""
+    n = cfg.n_layers
+    is_local = (jnp.arange(n) % 2 == 0) if cfg.alt_local_global else \
+        jnp.zeros((n,), bool)
+
+    def body(carry, xs):
+        # cache rides in the carry and is updated in place per layer —
+        # scan carries alias buffers, so the KV cache is never duplicated
+        # (xs/ys threading would double-buffer multi-GiB caches).
+        h, aux, cache_c, li = carry
+        lp, loc = xs
+        lp = materialize(lp, _cdtype(cfg))
+        layer_cache = _index_cache(cache_c, li) if cache_c is not None \
+            else None
+        h, new_lc = _attn_block(lp, h, positions, cfg, loc,
+                                cache=layer_cache, index=index)
+        if cache_c is not None:
+            cache_c = _update_cache(cache_c, new_lc, li)
+        h, aux_l = _mlp_block(lp, h, cfg)
+        h = constraint(h, "batch", None, None)
+        return (h, aux + aux_l, cache_c, li + 1), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (h, aux, new_cache, _), _ = scan_or_loop(
+        body, (h, jnp.asarray(0.0, jnp.float32), cache,
+               jnp.asarray(0, jnp.int32)),
+        (mp["layers"], is_local), cfg.scan_layers, n)
+    return h, aux, new_cache
+
+
+def _walk_ssm(mp, cfg, h, cache, index):
+    def body(carry, lp):
+        h, aux, cache_c, li = carry
+        lp = materialize(lp, _cdtype(cfg))
+        layer_state = _index_cache(cache_c, li) if cache_c is not None \
+            else None
+        h, new_state = rwkv6_forward(lp, h, n_heads=cfg.n_heads,
+                                     chunk=cfg.rwkv_chunk, state=layer_state)
+        if cache_c is not None:
+            cache_c = _update_cache(cache_c, new_state, li)
+        h = constraint(h, "batch", None, None)
+        return (h, aux, cache_c, li + 1), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (h, aux, new_cache, _), _ = scan_or_loop(
+        body, (h, jnp.asarray(0.0, jnp.float32), cache,
+               jnp.asarray(0, jnp.int32)), mp["layers"],
+        cfg.scan_layers, cfg.n_layers)
+    return h, aux, new_cache
+
+
+def _walk_hybrid(mp, cfg, h, emb0, positions, cache, index):
+    """zamba2: mamba trunk + ONE shared attention block every k layers.
+
+    All decode states ride in the scan carries (in-place updates)."""
+    period = cfg.hybrid_attn_every
+    n = cfg.n_layers
+    n_super = n // period if period else 0
+    n_main = n_super * period
+    shared = mp.get("shared_attn")
+
+    def mamba_body(carry, lp):
+        h, aux, mstates, li = carry
+        lp = materialize(lp, _cdtype(cfg))
+        layer_state = _index_cache(mstates, li) if mstates is not None \
+            else None
+        x = rms_norm(h, lp["ln"])
+        out, new_state = mamba2_forward(
+            {k: v for k, v in lp.items() if k != "ln"}, x,
+            n_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+            chunk=cfg.ssm_chunk, state=layer_state)
+        if mstates is not None:
+            mstates = _update_cache(mstates, new_state, li)
+        h = constraint(h + out, "batch", None, None)
+        return (h, aux, mstates, li + 1), None
+
+    if cfg.remat:
+        mamba_body = jax.checkpoint(mamba_body)
+
+    cache_mamba = cache["mamba"] if cache is not None else None
+    attn_caches = cache["attn"] if cache is not None else None
+    layers_main = jax.tree_util.tree_map(
+        lambda a: a[:n_main].reshape(n_super, period, *a.shape[1:]),
+        mp["layers"])
+    layers_tail = jax.tree_util.tree_map(lambda a: a[n_main:], mp["layers"])
+
+    def super_body(carry, xs):
+        h, aux, mstates, li, acaches, si = carry
+        blk = xs
+        (h, aux, mstates, li), _ = jax.lax.scan(
+            mamba_body, (h, aux, mstates, li), blk)
+        attn_cache = _index_cache(acaches, si) if acaches is not None \
+            else None
+        xcat = jnp.concatenate([h, emb0], axis=-1)
+        xcat = rms_norm(xcat, mp["shared_ln"])
+        out, new_ac = attn_forward(
+            shared, xcat, positions, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta, causal=True,
+            cache=attn_cache, cache_index=index)
+        if acaches is not None:
+            acaches = _update_cache(acaches, new_ac, si)
+        h = h + out
+        h = h + mlp_forward(mp["shared_mlp"],
+                            rms_norm(h, mp["shared_ln2"]), cfg.mlp_kind)
+        return (h, aux, mstates, li, acaches, si + 1), None
+
+    carry0 = (h, jnp.asarray(0.0, jnp.float32), cache_mamba,
+              jnp.asarray(0, jnp.int32), attn_caches,
+              jnp.asarray(0, jnp.int32))
+    (h, aux, new_cm, li, new_attn, _), _ = scan_or_loop(
+        super_body, carry0, layers_main, cfg.scan_layers, n_super)
+    if n - n_main:
+        (h, aux, new_cm, _), _ = scan_or_loop(
+            mamba_body, (h, aux, new_cm, li), layers_tail,
+            cfg.scan_layers, n - n_main)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"mamba": new_cm, "attn": new_attn}
+    return h, aux, new_cache
+
+
+def _embed_inputs(mp, cfg: ModelConfig, tokens, vision_embeds, positions):
+    d = cfg.d_model
+    h = jnp.take(mp["embed"], tokens, axis=0)
+    if cfg.family == "vlm" and vision_embeds is not None:
+        v = vision_embeds @ mp["vision_proj"]
+        h = jnp.concatenate([v.astype(h.dtype), h], axis=1)
+    b, s, _ = h.shape
+    if positions is None:
+        pos1 = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        positions = jnp.stack([pos1] * 3, axis=-1) if cfg.mrope else pos1
+    return h.astype(_cdtype(cfg)), positions
+
+
+def forward(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
+            positions=None, cache=None, index=None):
+    """Returns (logits, aux, new_cache)."""
+    mp = shard_params_tree(_materialize_for_walk(params, _cdtype(cfg)))
+    h, positions = _embed_inputs(mp, cfg, tokens, vision_embeds, positions)
+    h = constraint(h, "batch", None, None)
+    emb0 = h
+    if cfg.family in ("dense", "moe", "vlm"):
+        h, aux, new_cache = _walk_dense(mp, cfg, h, positions, cache, index)
+    elif cfg.family == "ssm":
+        h, aux, new_cache = _walk_ssm(mp, cfg, h, cache, index)
+    elif cfg.family == "hybrid":
+        h, aux, new_cache = _walk_hybrid(mp, cfg, h, emb0, positions, cache,
+                                         index)
+    else:
+        raise ValueError(cfg.family)
+    h = rms_norm(h, mp["final_norm"])
+    head = mp["lm_head"] if "lm_head" in mp else mp["embed"].T
+    logits = (h @ head).astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    logits = constraint(logits, "batch", None, "vocab")
+    return logits, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# caches (decode)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    dt = _cdtype(cfg)
+    dh, kv = cfg.head_dim, cfg.n_kv_heads
+    if cfg.family in ("dense", "moe", "vlm"):
+        shape = (cfg.n_layers, batch, max_len, kv, dh)
+        if cfg.kv_cache_bits == 8:
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                    "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if cfg.family == "ssm":
+        st = rwkv6_init_state(batch, cfg.d_model, cfg.n_heads, dt)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), st)
+    if cfg.family == "hybrid":
+        mst = mamba2_init_state(batch, cfg.d_model, cfg.ssm_state,
+                                cfg.ssm_expand, cfg.ssm_headdim, dtype=dt)
+        mamba = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), mst)
+        n_super = cfg.n_layers // cfg.hybrid_attn_every
+        shape = (n_super, batch, max_len, kv, dh)
+        return {"mamba": mamba,
+                "attn": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}}
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, index):
+    """One-token step. tokens: (B, 1); index: () int32 current length."""
+    b = tokens.shape[0]
+    pos1 = jnp.full((b, 1), index, jnp.int32)
+    positions = jnp.stack([pos1] * 3, axis=-1) if cfg.mrope else pos1
+    logits, aux, new_cache = forward(params, cfg, tokens,
+                                     positions=positions, cache=cache,
+                                     index=index)
+    return logits[:, -1], new_cache
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Next-token cross entropy (+ MoE aux).  batch: tokens, labels, [mask]."""
+    logits, aux, _ = forward(params, cfg, batch["tokens"],
+                             vision_embeds=batch.get("vision_embeds"),
+                             positions=batch.get("positions"))
+    labels = batch["labels"]
+    if cfg.family == "vlm" and batch.get("vision_embeds") is not None:
+        logits = logits[:, -labels.shape[1]:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    mask = batch.get("mask")
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = float(nll.size)
+    ce = jnp.sum(nll) / denom
+    return ce + 0.01 * aux, dict(ce=ce, aux=aux)

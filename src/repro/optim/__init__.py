@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, adamw, sgd, cosine_schedule, global_norm
+from .grad_compress import (compress_decompress, compressed_psum,
+                            init_error_state)

@@ -1,0 +1,51 @@
+"""Error-feedback int8 gradient compression for cross-pod data parallelism.
+
+At 1000+ node scale the pod axis reduces over DCN, not ICI; int8 compression
+cuts that traffic 4x.  ``compress_decompress`` is the error-feedback
+quantizer (per-leaf scale, residual carried across steps — convergence-safe);
+``compressed_psum`` demonstrates the actual collective under shard_map for
+tests / the launcher's --grad-compress flag.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree_util.tree_map(jnp.zeros_like, grads)
+
+
+def _quant_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Quantize (g + err) to int8, return (dequantized, new_err)."""
+    def one(g, e):
+        x = g + e
+        q, s = _quant_int8(x)
+        deq = q.astype(g.dtype) * s
+        return deq, x - deq
+
+    flat = jax.tree_util.tree_map(one, grads, err)
+    deq = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8-quantized psum (inside shard_map): quantize locally, reduce the
+    int values (int32 accumulate), rescale by the max participating scale."""
+    q, s = _quant_int8(x)
+    s_max = jax.lax.pmax(s, axis_name)
+    # requantize against the shared scale so the sum is consistent
+    q2 = jnp.clip(jnp.round(x / s_max), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q2, axis_name)
+    return total.astype(x.dtype) * s_max

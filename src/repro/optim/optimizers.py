@@ -1,0 +1,91 @@
+"""Minimal, pytree-generic optimizers (SGD+momentum, AdamW) + schedules.
+
+Works directly on parameter trees containing QuantizedTensor /
+FakeQuantTensor nodes: updates apply to every float array leaf; the train
+step zeroes the gradients of frozen quantization metadata (mask, sign,
+bitwidth, scale) before calling in, so no special-casing is needed here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves) + 1e-20)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, opt_state, params, lr) -> (new_params, new_opt_state)
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 1e-4,
+        nesterov: bool = False, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": _tmap(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        if grad_clip:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
+            grads = _tmap(lambda g: g * scale, grads)
+        if weight_decay:
+            grads = _tmap(lambda g, p: g + weight_decay * p, grads, params)
+        mu = _tmap(lambda m, g: momentum * m + g, state["mu"], grads)
+        step_dir = _tmap(lambda m, g: momentum * m + g, mu, grads) \
+            if nesterov else mu
+        new_params = _tmap(lambda p, d: p - lr * d, params, step_dir)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {"m": _tmap(jnp.zeros_like, params),
+                "v": _tmap(jnp.zeros_like, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        if grad_clip:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
+            grads = _tmap(lambda g: g * scale, grads)
+        t = state["t"] + 1
+        m = _tmap(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = _tmap(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return p - lr * (step + weight_decay * p)
+
+        new_params = _tmap(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup: int = 0, min_frac: float = 0.0):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * (min_frac + (1 - min_frac) * cos)
+    return lr

@@ -1,0 +1,97 @@
+"""Deployment parameter transform: QAT weights -> packed integer serving
+weights (the TPU analogue of BWQ-H's compressed crossbar layout).
+
+``to_serving_params`` converts every quantized leaf into a
+:class:`ServingWeight` holding int8 (or nibble-packed int4) magnitudes plus
+the per-WB scale/bit-width LUT.  ``materialize`` dequantizes in-graph, so
+weight HBM traffic in the compiled program drops 4x/8x vs f32 — exactly the
+memory-roofline lever BWQ's compression buys on a digital accelerator
+(DESIGN.md §2; EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bitrep import QuantizedTensor, compose_int, _levels
+from ..core.blocking import BlockingSpec, expand_block_map, pad_to_blocks
+from ..core.fakequant import FakeQuantTensor
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ServingWeight:
+    """Packed integer weight + per-WB dequant metadata."""
+    w_int: jnp.ndarray       # (..., Kp, Np) int8  or (..., Kp//2, Np) uint8
+    scale: jnp.ndarray       # (..., GR, GC) f32 per-WB effective scale
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    spec: BlockingSpec = dataclasses.field(metadata=dict(static=True))
+    bits: int = dataclasses.field(default=8, metadata=dict(static=True))
+
+
+def _quantize_leaf(w, scale, bitwidth, spec, n_bits, bits) -> ServingWeight:
+    """Shared packing math for both QAT representations."""
+    shape = tuple(w.shape)
+    wp = pad_to_blocks(w, spec)
+    s = scale[..., None, None] if scale.ndim else scale
+    levels = _levels(n_bits)
+    q = jnp.round(jnp.abs(wp) / s * levels)
+    cap = expand_block_map(2.0 ** bitwidth - 1.0, spec)
+    q = jnp.clip(q, 0.0, cap)
+    signed = jnp.where(wp < 0, -1.0, 1.0) * q
+    # rescale blocks exceeding the container (bits-1 magnitude bits)
+    shift = jnp.maximum(bitwidth - float(bits - 1), 0.0)
+    factor = 2.0 ** shift
+    f_full = expand_block_map(factor, spec)
+    lim = 2 ** (bits - 1)
+    wq = jnp.clip(jnp.round(signed / f_full), -lim, lim - 1).astype(jnp.int32)
+    gscale = jnp.broadcast_to(
+        (scale[..., None, None] if scale.ndim else scale) / levels,
+        bitwidth.shape) * factor
+    if bits == 8:
+        w_int = wq.astype(jnp.int8)
+    elif bits == 4:
+        lo = wq[..., 0::2, :] & 0xF
+        hi = wq[..., 1::2, :] & 0xF
+        w_int = (lo | (hi << 4)).astype(jnp.uint8)
+    else:
+        raise ValueError(bits)
+    return ServingWeight(w_int=w_int, scale=gscale.astype(jnp.float32),
+                         shape=shape, spec=spec, bits=bits)
+
+
+def to_serving_params(params: Any, bits: int = 8) -> Any:
+    """Convert all quantized leaves to packed ServingWeight."""
+    def conv(x):
+        if isinstance(x, QuantizedTensor):
+            from ..core.bitrep import compose
+            return _quantize_leaf(compose(x), x.scale,
+                                  jnp.sum(x.mask, axis=0), x.spec,
+                                  x.n_bits, bits)
+        if isinstance(x, FakeQuantTensor):
+            return _quantize_leaf(x.w, x.scale, x.bitwidth, x.spec,
+                                  x.n_bits, bits)
+        return x
+    return jax.tree_util.tree_map(
+        conv, params,
+        is_leaf=lambda x: isinstance(x, (QuantizedTensor, FakeQuantTensor)))
+
+
+def serving_compose(sw: ServingWeight, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """In-graph dequantization (int8/int4 stream -> bf16 weights)."""
+    if sw.bits == 8:
+        wq = sw.w_int.astype(jnp.float32)
+    else:
+        lo = (sw.w_int & 0xF).astype(jnp.int32)
+        hi = ((sw.w_int >> 4) & 0xF).astype(jnp.int32)
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        st = jnp.stack([lo, hi], axis=-2)          # (..., K//2, 2, N)
+        wq = st.reshape(*st.shape[:-3], -1, st.shape[-1]).astype(jnp.float32)
+    s_full = expand_block_map(sw.scale, sw.spec)
+    w = wq * s_full
+    k, n = sw.shape[-2], sw.shape[-1]
+    return w[..., :k, :n].astype(dtype)

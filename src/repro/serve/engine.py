@@ -1,0 +1,64 @@
+"""Batched serving engine: prefill + greedy decode over the ModelAPI.
+
+Decode-shape inference is where BWQ's weight compression pays off on TPU
+(HBM-bandwidth-bound); the engine optionally PACT-quantizes the KV cache
+(beyond-paper, DESIGN.md §6) to push the same idea onto activations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.pact import quantize_signed
+from ..models.api import ModelAPI
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    api: ModelAPI
+    params: Any
+    kv_quant_bits: int = 32       # <32 enables KV-cache quantization
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self.api.prefill,
+                                static_argnames=("extra_slots",))
+        self._decode = jax.jit(self.api.decode_step)
+
+    def _maybe_quant_cache(self, state):
+        if self.kv_quant_bits >= 32:
+            return state
+        def q(x):
+            if isinstance(x, jnp.ndarray) and x.ndim >= 4:
+                return quantize_signed(x, self.kv_quant_bits)
+            return x
+        return jax.tree_util.tree_map(q, state)
+
+    def generate(self, batch: Dict[str, jnp.ndarray], max_new: int = 16,
+                 greedy: bool = True, key=None) -> jnp.ndarray:
+        """batch: prompt inputs per the model family. Returns (B, max_new)."""
+        # round headroom up to limit recompiles across max_new values
+        slots = -(-max_new // 64) * 64
+        logits, state = self._prefill(self.params, batch, extra_slots=slots)
+        state = self._maybe_quant_cache(state)
+        prompt_len = batch["tokens"].shape[1]
+        if self.api.cfg.family == "vlm":
+            prompt_len += self.api.cfg.vision_tokens
+        b = batch["tokens"].shape[0]
+        outs: List[jnp.ndarray] = []
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        index = jnp.asarray(prompt_len, jnp.int32)
+        for i in range(max_new):
+            outs.append(tok[:, 0])
+            logits, state = self._decode(self.params, tok, state, index)
+            state = self._maybe_quant_cache(state)
+            if greedy or key is None:
+                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits)[:, None].astype(
+                    jnp.int32)
+            index = index + 1
+        return jnp.stack(outs, axis=1)

@@ -1,0 +1,4 @@
+from .state import TrainState
+from .step import (build_maintenance_step, build_train_step, freeze_mask,
+                   quant_reg_loss)
+from .loop import Trainer, TrainerConfig

@@ -1,0 +1,139 @@
+"""Training loop: BWQ-A schedule (paper Alg. 1) + fault tolerance.
+
+Responsibilities:
+* drive train steps over the deterministic data pipeline;
+* run re-quantization + precision adjustment every ``requant_interval``;
+* grow the regularization strength alpha by delta_alpha per round while
+  quality stays inside the budget (Alg. 1 outer loop, step-based here);
+* checkpoint every N steps (atomic, async) and restore-on-start — a crash
+  or preemption resumes exactly (data pipeline is index-addressable);
+* optional fault injection hook for the restart tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..ckpt.checkpoint import CheckpointManager
+from ..core.policy import BWQSchedule
+from ..optim.optimizers import Optimizer
+from .state import TrainState
+from .step import build_maintenance_step, build_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 1000
+    ckpt_every: int = 200
+    ckpt_dir: Optional[str] = None
+    log_every: int = 50
+    requant_interval: int = 200
+    alpha_round_steps: int = 0      # bump alpha every N steps (0 = fixed)
+    delta_alpha: float = 0.0
+    quality_budget: float = 0.01    # allowed degradation vs baseline quality
+    keep_ckpts: int = 3
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, optimizer: Optimizer,
+                 lr_schedule: Callable, params: Any,
+                 tcfg: TrainerConfig,
+                 eval_fn: Optional[Callable[[Any], float]] = None,
+                 alpha: float = 0.0):
+        self.tcfg = tcfg
+        self.train_step = build_train_step(loss_fn, optimizer, lr_schedule)
+        self.maintenance = build_maintenance_step()
+        self.state = TrainState.create(params, optimizer, alpha)
+        self.eval_fn = eval_fn
+        self.baseline_quality: Optional[float] = None
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts) \
+            if tcfg.ckpt_dir else None
+        self.history: list = []
+
+    # -- fault tolerance -------------------------------------------------
+    def try_restore(self, template_state: Optional[TrainState] = None) -> int:
+        if self.ckpt is None:
+            return 0
+        template = template_state or self.state
+        meta, restored = self.ckpt.restore_latest(template)
+        if restored is None:
+            return 0
+        self.state = restored
+        return int(meta[0])
+
+    def _save(self, step: int):
+        if self.ckpt is not None:
+            self.ckpt.save(step, self.state, dict(step=step))
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, data: Iterator, steps: Optional[int] = None,
+            fault_at: Optional[int] = None) -> Dict[str, Any]:
+        tcfg = self.tcfg
+        steps = steps or tcfg.total_steps
+        start = int(self.state.step)
+        t0 = time.time()
+        last_metrics: Dict[str, Any] = {}
+        for _ in range(start, steps):
+            step_idx, batch = next(data)
+            if fault_at is not None and step_idx == fault_at:
+                raise RuntimeError(f"injected fault at step {step_idx}")
+            self.state, metrics = self.train_step(self.state, batch)
+            step = int(self.state.step)
+            if tcfg.requant_interval and step % tcfg.requant_interval == 0:
+                self.state = self.maintenance(self.state)
+            if tcfg.alpha_round_steps and tcfg.delta_alpha and \
+                    step % tcfg.alpha_round_steps == 0:
+                self._alpha_round()
+            if step % tcfg.log_every == 0 or step == steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = time.time() - t0
+                self.history.append(m)
+                last_metrics = m
+            if tcfg.ckpt_every and step % tcfg.ckpt_every == 0:
+                self._save(step)
+        self._save(int(self.state.step))
+        if self.ckpt:
+            self.ckpt.wait()
+        return last_metrics
+
+    def _alpha_round(self):
+        """Alg. 1 outer loop: raise alpha while quality stays in budget."""
+        if self.eval_fn is None:
+            self.state = dataclasses.replace(
+                self.state,
+                alpha=self.state.alpha + self.tcfg.delta_alpha)
+            return
+        q = self.eval_fn(self.state.params)
+        if self.baseline_quality is None:
+            self.baseline_quality = q
+        if q >= self.baseline_quality - self.tcfg.quality_budget:
+            self.state = dataclasses.replace(
+                self.state,
+                alpha=self.state.alpha + self.tcfg.delta_alpha)
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer],
+                      make_data: Callable[[int], Iterator],
+                      total_steps: int, fault_at: Optional[int] = None,
+                      max_restarts: int = 3) -> Trainer:
+    """Crash-resilient driver: rebuild trainer + restore + resume on failure.
+
+    Demonstrates the production restart path end-to-end (used in tests)."""
+    attempts = 0
+    while True:
+        trainer = make_trainer()
+        resumed = trainer.try_restore()
+        data = make_data(resumed)
+        try:
+            trainer.run(data, steps=total_steps,
+                        fault_at=fault_at if attempts == 0 else None)
+            return trainer
+        except RuntimeError:
+            attempts += 1
+            if attempts > max_restarts:
+                raise

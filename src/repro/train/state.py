@@ -1,0 +1,23 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jnp.ndarray          # () int32
+    params: Any
+    opt_state: Any
+    alpha: jnp.ndarray         # () f32 — BWQ regularization strength
+
+    @classmethod
+    def create(cls, params, optimizer, alpha: float = 0.0) -> "TrainState":
+        return cls(step=jnp.zeros((), jnp.int32), params=params,
+                   opt_state=optimizer.init(params),
+                   alpha=jnp.asarray(alpha, jnp.float32))

@@ -1,0 +1,160 @@
+"""Jitted train / maintenance steps with BWQ-A hooks.
+
+* ``quant_reg_loss`` — paper Eq. 3 regularizer across every quantized leaf
+  (bit-plane mode: exact WB group Lasso; fake mode: the per-WB L2 surrogate).
+* ``freeze_mask`` — gradients of quantization metadata (mask/sign/bitwidth/
+  scale) are zeroed; only bit planes / master weights (and normal params)
+  train.
+* ``build_maintenance_step`` — re-quantization + block-wise precision
+  adjustment, run every ``requant_interval`` steps by the loop (paper Alg 1
+  lines 11-14).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bitrep import QuantizedTensor, param_count
+from ..core.fakequant import (FakeQuantTensor, fq_group_lasso, fq_live_bits,
+                              fq_maintenance)
+from ..core.group_lasso import layer_bit_count, wb_group_lasso
+from ..core.precision import adjust_precision
+from ..core.quantize import requantize
+from ..optim.optimizers import Optimizer, global_norm
+from .state import TrainState
+
+_QTYPES = (QuantizedTensor, FakeQuantTensor)
+_is_q = lambda x: isinstance(x, _QTYPES)
+
+
+def _quant_nodes(params) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(params, is_leaf=_is_q)[0]
+    return {jax.tree_util.keystr(p): x for p, x in flat if _is_q(x)}
+
+
+def quant_reg_loss(params, alpha) -> jnp.ndarray:
+    """alpha * sum_r coeff_r * B_GL(W^r)   (Eq. 3)."""
+    nodes = _quant_nodes(params)
+    if not nodes:
+        return jnp.asarray(0.0, jnp.float32)
+    total_params = float(sum(param_count(q) if isinstance(q, QuantizedTensor)
+                             else int(jnp.size(q.w)) for q in nodes.values()))
+    loss = jnp.asarray(0.0, jnp.float32)
+    for q in nodes.values():
+        if isinstance(q, QuantizedTensor):
+            bits = layer_bit_count(q)
+            gl = wb_group_lasso(q)
+        else:
+            bits = fq_live_bits(q)
+            gl = fq_group_lasso(q)
+        coeff = jax.lax.stop_gradient(bits) / total_params
+        loss = loss + coeff.astype(jnp.float32) * gl.astype(jnp.float32)
+    return alpha * loss
+
+
+def quant_stats(params) -> Dict[str, jnp.ndarray]:
+    nodes = _quant_nodes(params)
+    if not nodes:
+        return dict(avg_bitwidth=jnp.asarray(0.0),
+                    compression_x=jnp.asarray(1.0))
+    tot_p, tot_b = 0.0, jnp.asarray(0.0, jnp.float32)
+    for q in nodes.values():
+        if isinstance(q, QuantizedTensor):
+            tot_p += param_count(q)
+            tot_b = tot_b + layer_bit_count(q)
+        else:
+            tot_p += int(jnp.size(q.w))
+            tot_b = tot_b + fq_live_bits(q)
+    return dict(avg_bitwidth=tot_b / tot_p,
+                compression_x=32.0 * tot_p / jnp.maximum(tot_b, 1.0))
+
+
+_FROZEN_FIELDS = (".mask", ".sign", ".bitwidth", ".scale")
+
+
+def freeze_mask(grads):
+    """Zero gradients of quantization metadata leaves (by path suffix)."""
+    def one(path, g):
+        k = jax.tree_util.keystr(path)
+        if any(k.endswith(f) for f in _FROZEN_FIELDS):
+            return jnp.zeros_like(g)
+        return g
+    return jax.tree_util.tree_map_with_path(one, grads)
+
+
+def microbatched_value_and_grad(loss_fn: Callable, num_mb: int):
+    """Gradient accumulation over ``num_mb`` microbatches via lax.scan.
+
+    Bounds activation memory to one microbatch (the standard large-batch
+    trick at pod scale); grads are averaged, aux metrics come from the
+    last microbatch.
+    """
+    if num_mb <= 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)
+
+    def fn(params, batch):
+        mb = jax.tree_util.tree_map(
+            lambda x: x.reshape(num_mb, x.shape[0] // num_mb, *x.shape[1:]),
+            batch)
+
+        def body(carry, b):
+            g_acc, l_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, b)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + loss), metrics
+
+        g0 = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, x.dtype), params)
+        (g, loss_sum), metrics = jax.lax.scan(body, (g0, 0.0), mb)
+        g = jax.tree_util.tree_map(lambda x: x / num_mb, g)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return (loss_sum / num_mb, metrics), g
+
+    return fn
+
+
+def build_train_step(loss_fn: Callable, optimizer: Optimizer,
+                     lr_schedule: Callable, donate: bool = True):
+    """loss_fn(params, batch) -> (loss, metrics dict)."""
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        def total_loss(params):
+            loss, metrics = loss_fn(params, batch)
+            reg = quant_reg_loss(params, state.alpha)
+            return loss + reg, (metrics, reg)
+
+        (loss, (metrics, reg)), grads = jax.value_and_grad(
+            total_loss, has_aux=True)(state.params)
+        grads = freeze_mask(grads)
+        lr = lr_schedule(state.step)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params, lr)
+        new_state = TrainState(step=state.step + 1, params=new_params,
+                               opt_state=new_opt, alpha=state.alpha)
+        metrics = dict(metrics, loss=loss, reg=reg, lr=lr,
+                       grad_norm=global_norm(grads), **quant_stats(new_params))
+        return new_state, metrics
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def _maintain_leaf(q):
+    if isinstance(q, QuantizedTensor):
+        return adjust_precision(requantize(q))
+    if isinstance(q, FakeQuantTensor):
+        return fq_maintenance(q)
+    return q
+
+
+def build_maintenance_step():
+    """Re-quantize + precision-adjust every quantized leaf (Alg 1 l.11-14)."""
+    def maintain(state: TrainState) -> TrainState:
+        new_params = jax.tree_util.tree_map(_maintain_leaf, state.params,
+                                            is_leaf=_is_q)
+        return TrainState(step=state.step, params=new_params,
+                          opt_state=state.opt_state, alpha=state.alpha)
+    return jax.jit(maintain, donate_argnums=(0,))

@@ -1,0 +1,9 @@
+import os
+
+# Single-device CPU world for tests; the dry-run (and only the dry-run)
+# forces 512 host devices via its own module-level XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,229 @@
+"""Unit tests for BWQ-A core: bit representation, blocking, precision,
+group Lasso, PACT, fake-quant equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BlockingSpec, QuantizedTensor, adjust_precision,
+                        bitwidths, compose, extract_planes, from_float,
+                        layer_bit_count, pact, pact_quant, pact_sym,
+                        model_compression_ratio, pack, quant_summary,
+                        regularization_loss, requantize, unpack_to_float,
+                        wb_group_lasso)
+from repro.core.blocking import (block_elem_counts, block_view,
+                                 conv_from_2d, conv_to_2d, expand_block_map,
+                                 pad_to_blocks, unblock_view)
+from repro.core.fakequant import (fq_compose, fq_from_float, fq_live_bits,
+                                  fq_maintenance)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestBlocking:
+    def test_block_roundtrip(self):
+        spec = BlockingSpec(9, 8)
+        w = jax.random.normal(KEY, (27, 24))
+        bv = block_view(w, spec)
+        assert bv.shape == (3, 3, 9, 8)
+        np.testing.assert_array_equal(unblock_view(bv, spec), w)
+
+    def test_conv_reshape_roundtrip(self):
+        w = jax.random.normal(KEY, (16, 3, 3, 3))
+        w2 = conv_to_2d(w)
+        assert w2.shape == (27, 16)
+        np.testing.assert_array_equal(conv_from_2d(w2, w.shape), w)
+
+    def test_expand_block_map(self):
+        spec = BlockingSpec(2, 3)
+        m = jnp.arange(6).reshape(2, 3).astype(jnp.float32)
+        full = expand_block_map(m, spec)
+        assert full.shape == (4, 9)
+        assert full[0, 0] == 0 and full[3, 8] == 5 and full[1, 4] == 1
+
+    def test_block_elem_counts_partial_edges(self):
+        spec = BlockingSpec(9, 8)
+        counts = np.asarray(block_elem_counts((20, 13), spec))
+        assert counts.sum() == 20 * 13
+        assert counts[0, 0] == 72 and counts[-1, -1] == 2 * 5
+
+    def test_padding(self):
+        spec = BlockingSpec(9, 8)
+        w = jnp.ones((10, 9))
+        wp = pad_to_blocks(w, spec)
+        assert wp.shape == (18, 16)
+        assert float(wp[10:, :].sum()) == 0.0
+
+
+class TestBitRep:
+    def test_reconstruction_error_bound(self):
+        w = jax.random.normal(KEY, (36, 32)) * 0.3
+        qt = from_float(w, n_bits=8)
+        err = jnp.max(jnp.abs(compose(qt) - w))
+        bound = jnp.max(jnp.abs(w)) / (2 ** 8 - 1) / 2 * 1.001
+        assert err <= bound
+
+    def test_extract_planes_exact(self):
+        q = jnp.asarray([[0., 1.], [5., 255.]])
+        planes = extract_planes(q, 8)
+        recon = sum(planes[b] * 2 ** b for b in range(8))
+        np.testing.assert_array_equal(recon, q)
+
+    def test_requantize_idempotent_on_exact(self):
+        w = jax.random.normal(KEY, (18, 16)) * 0.1
+        qt = requantize(from_float(w, 8))
+        qt2 = requantize(qt)
+        np.testing.assert_allclose(compose(qt), compose(qt2))
+
+    def test_stacked_layers(self):
+        w = jax.random.normal(KEY, (3, 18, 16)) * 0.1
+        qt = from_float(w, 8)
+        assert qt.planes.shape == (8, 3, 18, 16)
+        assert compose(qt).shape == (3, 18, 16)
+        err = jnp.max(jnp.abs(compose(qt) - w))
+        assert err < jnp.max(jnp.abs(w)) / 255
+
+    def test_grads_flow_to_planes_not_masked(self):
+        w = jax.random.normal(KEY, (18, 16)) * 0.1
+        qt = from_float(w, 8)
+        qt = dataclasses.replace(qt, mask=qt.mask.at[7].set(0.0))
+
+        g = jax.grad(lambda q: jnp.sum(compose(q) ** 2))(qt)
+        # masked plane gets zero gradient -> pruned bits never revive
+        assert float(jnp.abs(g.planes[7]).max()) == 0.0
+        assert float(jnp.abs(g.planes[0]).max()) > 0.0
+
+    def test_pack_unpack_roundtrip(self):
+        w = jax.random.normal(KEY, (18, 16)) * 0.1
+        qt = requantize(from_float(w, 8))
+        pw = pack(qt)
+        np.testing.assert_allclose(unpack_to_float(pw, qt.spec), compose(qt),
+                                   atol=1e-7)
+
+
+class TestPrecisionAdjustment:
+    def _qt(self, w):
+        return requantize(from_float(w, 8))
+
+    def test_msb_down_removal(self):
+        w = jnp.full((9, 8), 0.1)        # one block
+        w = w.at[0, 0].set(1.0)          # max sets scale
+        qt = self._qt(w)
+        qt2 = adjust_precision(qt)
+        bw = float(bitwidths(qt2)[0, 0])
+        # 0.1/1.0*255 = 25.5 -> 26 needs 5 bits; 255 needs 8 -> block keeps 8
+        assert bw == 8.0
+
+    def test_low_magnitude_block_gets_fewer_bits(self):
+        spec = BlockingSpec(9, 8)
+        w = jnp.zeros((18, 8))
+        w = w.at[0, 0].set(1.0)          # block 0: scale setter (8 bits)
+        w = w.at[9:, :].set(0.01)        # block 1: 0.01*255 = 2.55 -> 3 -> 2 bits
+        qt = adjust_precision(self._qt(w))
+        bw = np.asarray(bitwidths(qt))
+        assert bw[0, 0] == 8 and bw[1, 0] == 2
+
+    def test_monotone_never_grows(self):
+        w = jax.random.normal(KEY, (36, 32)) * 0.2
+        qt = adjust_precision(self._qt(w))
+        bw1 = np.asarray(bitwidths(qt))
+        # make weights large again; masked planes stay off
+        qt = dataclasses.replace(qt, planes=jnp.ones_like(qt.planes))
+        qt2 = adjust_precision(requantize(qt))
+        bw2 = np.asarray(bitwidths(qt2))
+        assert (bw2 <= bw1).all()
+
+    def test_all_zero_block_removed(self):
+        w = jnp.zeros((9, 16))
+        w = w.at[:, 8:].set(0.5)
+        qt = adjust_precision(self._qt(w))
+        bw = np.asarray(bitwidths(qt))
+        assert bw[0, 0] == 0 and bw[0, 1] > 0
+
+
+class TestGroupLasso:
+    def test_positive_and_zero_when_masked(self):
+        w = jax.random.normal(KEY, (18, 16)) * 0.1
+        qt = from_float(w, 8)
+        assert float(wb_group_lasso(qt)) > 0
+        qt0 = dataclasses.replace(qt, mask=jnp.zeros_like(qt.mask))
+        assert float(wb_group_lasso(qt0)) == pytest.approx(0.0)
+
+    def test_regularization_layer_weighting(self):
+        w1 = jax.random.normal(KEY, (18, 16)) * 0.1
+        qts = {"a": from_float(w1, 8)}
+        r1 = float(regularization_loss(qts, alpha=1e-3))
+        assert r1 > 0
+        assert float(regularization_loss(qts, alpha=0.0)) == 0.0
+
+    def test_compression_ratio(self):
+        w = jax.random.normal(KEY, (18, 16)) * 0.1
+        qt = from_float(w, 8)
+        assert model_compression_ratio([qt]) == pytest.approx(4.0)
+
+    def test_gradient_shrinks_bits(self):
+        w = jax.random.normal(KEY, (18, 16)) * 0.1
+        qt = from_float(w, 8)
+        g = jax.grad(lambda q: wb_group_lasso(q))(qt)
+        # gradient direction is positive on positive plane values (shrink)
+        nz = np.asarray(qt.planes) > 0
+        assert (np.asarray(g.planes)[nz] > 0).all()
+
+
+class TestPACT:
+    def test_eq4_piecewise(self):
+        beta = jnp.asarray(1.5)
+        assert float(pact(jnp.asarray(-3.0), beta)) == 0.0
+        assert float(pact(jnp.asarray(0.7), beta)) == pytest.approx(0.7)
+        assert float(pact(jnp.asarray(9.0), beta)) == pytest.approx(1.5)
+
+    def test_beta_gradient_on_saturated_side(self):
+        g = jax.grad(lambda b: pact(jnp.asarray(5.0), b))(jnp.asarray(1.5))
+        assert float(g) == pytest.approx(1.0)
+        g2 = jax.grad(lambda b: pact(jnp.asarray(0.5), b))(jnp.asarray(1.5))
+        assert float(g2) == pytest.approx(0.0)
+
+    def test_quant_levels(self):
+        x = jnp.linspace(0, 1.5, 100)
+        y = pact_quant(x, jnp.asarray(1.5), 2)
+        assert len(np.unique(np.asarray(y).round(6))) <= 4
+
+    def test_symmetric_clip(self):
+        x = jnp.asarray([-5.0, -0.3, 0.3, 5.0])
+        y = pact_sym(x, jnp.asarray(1.0))
+        np.testing.assert_allclose(y, [-1.0, -0.3, 0.3, 1.0], atol=1e-6)
+
+
+class TestFakeQuantEquivalence:
+    def test_matches_bitplane_on_exact_states(self):
+        w = jax.random.normal(KEY, (36, 32)) * 0.2
+        qt = adjust_precision(requantize(from_float(w, 8)))
+        qt = requantize(qt)
+        fq = fq_from_float(w, 8)
+        fq = dataclasses.replace(
+            fq, bitwidth=jnp.sum(qt.mask, axis=0).astype(fq.bitwidth.dtype))
+        fq = fq_maintenance(fq)
+        np.testing.assert_allclose(np.asarray(fq_compose(fq)),
+                                   np.asarray(compose(qt)), atol=2e-6)
+
+    def test_live_bits_agree(self):
+        w = jax.random.normal(KEY, (36, 32)) * 0.2
+        qt = adjust_precision(requantize(from_float(w, 8)))
+        fq = fq_maintenance(fq_from_float(w, 8))
+        assert float(fq_live_bits(fq)) == pytest.approx(
+            float(layer_bit_count(qt)))
+
+    def test_maintenance_monotone(self):
+        w = jax.random.normal(KEY, (36, 32)) * 0.2
+        fq = fq_maintenance(fq_from_float(w, 8))
+        bw1 = np.asarray(fq.bitwidth)
+        fq2 = fq_maintenance(fq)
+        assert (np.asarray(fq2.bitwidth) <= bw1).all()
+
+
+def test_quant_summary_structure():
+    w = jax.random.normal(KEY, (18, 16)) * 0.1
+    s = quant_summary({"layer": {"w": from_float(w, 8)}})
+    assert s["layers"] == 1 and s["avg_bitwidth"] == pytest.approx(8.0)

@@ -1,0 +1,117 @@
+"""BWQ-H hardware model tests: controller (Alg. 2), mapping schemes
+(Fig. 5), scheme orderings (Fig. 9), OU scaling (Fig. 13)."""
+import numpy as np
+import pytest
+
+from repro.hw import (PAPER_SPEC, bsq_scheme, bwq_scheme, controller_cycles,
+                      fc_workload, isaac_scheme, layer_mapping_cost,
+                      lut_bits, run_controller, simulate, simulate_layer,
+                      sme_scheme, speedup_and_energy_saving, sre_scheme,
+                      wb_mapping_cost)
+
+
+class TestController:
+    def test_trace_matches_fig6b_structure(self):
+        # two WB rows; row0: WBs of precision 2 and 1; row1: spare + 3
+        tr = run_controller(np.array([[2, 1], [0, 3]]))
+        assert tr.cycles == 6                    # 2+1+3 OU activations
+        assert tr.ir_fetches == 2                # one per WB row
+        assert tr.sna_skips == 3                 # one per non-spare WB
+        # spare OU (row1, col0) never appears in the trace
+        assert all(not (i == 1 and j == 0) for _, i, j, _ in tr.events)
+
+    def test_cycles_scale_with_act_bits(self):
+        bw = np.array([[4, 4], [4, 4]])
+        assert controller_cycles(bw, act_bits=3) == 3 * 16
+
+    def test_lut_size(self):
+        assert lut_bits(np.zeros((10, 10)), max_bits=8) == 100 * 4
+
+
+class TestMapping:
+    def test_precision_aware_full_utilization(self):
+        for bits in range(1, 9):
+            mc = wb_mapping_cost(bits, 8, "precision_aware")
+            assert mc.utilization == 1.0
+            assert mc.ou_activations == bits
+            assert mc.extra_sna_ops == 0
+
+    def test_same_ou_spare_columns(self):
+        # paper Fig 5(b): 3-bit weights, 8 cols -> 2 weights/OU, 25% waste
+        mc = wb_mapping_cost(3, 8, "same_ou")
+        assert mc.utilization == pytest.approx(0.75)
+
+    def test_conventional_straddles_cost_sna(self):
+        mc = wb_mapping_cost(3, 8, "conventional")
+        assert mc.extra_sna_ops > 0
+        assert mc.ou_activations == 3            # ceil(24/8)
+
+    def test_divisible_case_all_equal(self):
+        a = wb_mapping_cost(4, 8, "precision_aware")
+        b = wb_mapping_cost(4, 8, "same_ou")
+        assert a.ou_activations == b.ou_activations == 4
+
+    def test_layer_aggregate(self):
+        bw = np.array([[0, 1], [2, 8]])
+        mc = layer_mapping_cost(bw, 8, "precision_aware")
+        assert mc.ou_activations == 11
+
+
+class TestSchemes:
+    def _workloads(self):
+        rng = np.random.default_rng(0)
+        wls = []
+        for i, (k, n) in enumerate([(576, 64), (1152, 128), (2304, 256)]):
+            wl = fc_workload(f"fc{i}", k, n, positions=64, act_bits=3)
+            wl.bitwidths = rng.choice([0, 1, 2, 3, 4],
+                                      size=wl.bitwidths.shape,
+                                      p=[.1, .3, .3, .2, .1])
+            wls.append(wl)
+        return wls
+
+    def test_paper_ordering_speedup_and_energy(self):
+        wls = self._workloads()
+        base = isaac_scheme()
+        res = {s.name: speedup_and_energy_saving(wls, s, base)
+               for s in [bwq_scheme(), bsq_scheme(4), sre_scheme(),
+                         sme_scheme()]}
+        # paper Fig. 9: BWQ-H > BSQ > SME/SRE > ISAAC(=1)
+        assert res["BWQ-H"][0] > res["BSQ"][0] > 1.0
+        assert res["BWQ-H"][0] > res["SRE"][0] > 1.0
+        assert res["BWQ-H"][1] > res["BSQ"][1] > 1.0
+
+    def test_adc_dominates_energy(self):
+        rep = simulate(self._workloads(), bwq_scheme())
+        br = rep.energy_breakdown()
+        assert br["adc"] > 0.5 * sum(br.values())
+
+    def test_indexing_overhead_ordering(self):
+        wls = self._workloads()
+        idx = {s.name: simulate(wls, s).index_bits
+               for s in [bwq_scheme(), sre_scheme(), sme_scheme(),
+                         bsq_scheme(4)]}
+        # paper Fig. 11: SRE >> BWQ > SME > BSQ(~0)
+        assert idx["SRE"] > idx["BWQ-H"] > idx["SME"]
+        assert idx["BSQ"] == 0.0
+
+    def test_ou_size_energy_grows(self):
+        """Paper Fig. 13: ADC energy (and total) grows with OU size."""
+        wl = fc_workload("fc", 1152, 128, positions=64, act_bits=3,
+                         weight_bits=4)
+        energies = []
+        for rows, cols in [(9, 8), (32, 32), (128, 128)]:
+            spec = PAPER_SPEC.with_ou(rows, cols)
+            wl2 = fc_workload("fc", 1152, 128, positions=64, act_bits=3,
+                              weight_bits=4, spec=spec)
+            energies.append(simulate([wl2], bsq_scheme(4), spec).energy_j)
+        assert energies[0] < energies[1] < energies[2]
+
+    def test_adc_precision_follows_ou_rows(self):
+        assert PAPER_SPEC.adc_bits_for(9) == 4      # paper: 4-bit ADC @ 9 WLs
+        assert PAPER_SPEC.adc_bits_for(128) == 8
+
+    def test_zero_precision_blocks_cost_nothing(self):
+        wl = fc_workload("fc", 72, 8, positions=1, act_bits=1)
+        wl.bitwidths = np.zeros_like(wl.bitwidths)
+        rep = simulate_layer(wl, bwq_scheme())
+        assert rep.cycles == 0

@@ -1,0 +1,129 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU; the kernels target TPU BlockSpec tiling)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BlockingSpec, adjust_precision, compose, from_float,
+                        requantize)
+from repro.kernels import (bitplane_matmul, bwq_dense_bitplane,
+                           bwq_dense_packed, packed_matmul,
+                           pact_quant_pallas, to_bitplane_layout,
+                           to_packed_layout)
+from repro.kernels.ref import (bitplane_matmul_ref, packed_matmul_ref,
+                               pact_quant_ref)
+
+KEY = jax.random.PRNGKey(42)
+SPEC = BlockingSpec(8, 128)
+
+
+def make_qt(k, n, n_bits=8, prune_frac=0.5, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * 0.05
+    qt = requantize(from_float(w, n_bits, SPEC))
+    # prune the top planes of a contiguous region to create mixed precision
+    cut = int(n * prune_frac) // 128 * 128
+    if cut:
+        planes = qt.planes.at[n_bits // 2:, :, :cut].set(0.0)
+        qt = requantize(adjust_precision(
+            dataclasses.replace(qt, planes=planes)))
+    return qt
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 128, 128), (64, 256, 256),
+                                   (128, 512, 384), (32, 1024, 128)])
+def test_bitplane_matmul_shapes(m, k, n):
+    qt = make_qt(k, n)
+    x = jax.random.normal(KEY, (m, k))
+    bl = to_bitplane_layout(qt)
+    y_ref = bitplane_matmul_ref(x, bl.planes_packed, bl.sign_packed,
+                                bl.mask, bl.scale[0], 8, 128)
+    y = bwq_dense_bitplane(x, bl)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    # and the whole pipeline against the composed weight
+    y_true = x @ compose(qt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_true),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bitplane_matmul_dtypes(dtype):
+    qt = make_qt(256, 256)
+    x = jax.random.normal(KEY, (32, 256)).astype(dtype)
+    bl = to_bitplane_layout(qt)
+    y = bwq_dense_bitplane(x, bl)
+    y_ref = bitplane_matmul_ref(x, bl.planes_packed, bl.sign_packed,
+                                bl.mask, bl.scale[0], 8, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("m,k,n", [(16, 128, 128), (64, 512, 256)])
+def test_packed_matmul_vs_ref(bits, m, k, n):
+    qt = make_qt(k, n, seed=bits)
+    x = jax.random.normal(KEY, (m, k))
+    pk = to_packed_layout(qt, bits)
+    y = bwq_dense_packed(x, pk)
+    y_ref = packed_matmul_ref(x, pk.w_int, pk.scale, bits)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_packed8_accuracy_vs_true():
+    """int8 path drops at most 1 LSB on full-precision blocks."""
+    qt = make_qt(512, 256)
+    x = jax.random.normal(KEY, (64, 512))
+    y_true = x @ compose(qt)
+    y = bwq_dense_packed(x, to_packed_layout(qt, 8))
+    rel = float(jnp.max(jnp.abs(y - y_true)) / jnp.max(jnp.abs(y_true)))
+    assert rel < 0.05
+
+
+def test_packed4_lossless_on_low_precision_blocks():
+    """Blocks already at <=3 bits are exact in the int4 container."""
+    w = jax.random.normal(KEY, (128, 128)) * 0.05
+    qt = requantize(from_float(w, 8, SPEC))
+    planes = qt.planes.at[3:].set(0.0)       # force <=3 magnitude bits
+    qt = requantize(adjust_precision(dataclasses.replace(qt, planes=planes)))
+    x = jax.random.normal(KEY, (16, 128))
+    y_true = x @ compose(qt)
+    y = bwq_dense_packed(x, to_packed_layout(qt, 4))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_true),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_planes_are_skipped():
+    """Masked-out planes contribute nothing (OU-skip semantics)."""
+    qt = make_qt(256, 128, prune_frac=1.0)
+    x = jax.random.normal(KEY, (8, 256))
+    bl = to_bitplane_layout(qt)
+    y = bwq_dense_bitplane(x, bl)
+    y_true = x @ compose(qt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_true),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act_bits", [2, 4, 8])
+@pytest.mark.parametrize("shape", [(256, 64), (512, 128)])
+def test_pact_kernel(act_bits, shape):
+    x = jax.random.normal(KEY, shape)
+    y = pact_quant_pallas(x, jnp.asarray([1.3]), act_bits=act_bits)
+    y_ref = pact_quant_ref(x, jnp.asarray(1.3), act_bits)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-6)
+
+
+def test_block_grid_tiling_variants():
+    """Different BlockSpec tilings give identical results."""
+    qt = make_qt(1024, 256)
+    x = jax.random.normal(KEY, (64, 1024))
+    bl = to_bitplane_layout(qt)
+    y1 = bitplane_matmul(x, bl.planes_packed, bl.sign_packed, bl.mask,
+                         bl.scale, block_m=64, block_n=128, block_k=256)
+    y2 = bitplane_matmul(x, bl.planes_packed, bl.sign_packed, bl.mask,
+                         bl.scale, block_m=32, block_n=256, block_k=512)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)

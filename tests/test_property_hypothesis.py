@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) for BWQ-A invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BlockingSpec, adjust_precision, bitwidths, compose,
+                        from_float, layer_bit_count, requantize)
+from repro.core.blocking import block_elem_counts
+from repro.core.fakequant import fq_from_float, fq_maintenance, fq_compose
+from repro.kernels.ref import pack_bits, unpack_bits
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def weight_case(draw):
+    k = draw(st.integers(5, 40))
+    n = draw(st.integers(5, 40))
+    n_bits = draw(st.sampled_from([2, 4, 8]))
+    wbr = draw(st.sampled_from([3, 8, 9]))
+    wbc = draw(st.sampled_from([4, 8]))
+    seed = draw(st.integers(0, 2 ** 16))
+    scale = draw(st.floats(1e-3, 10.0))
+    return k, n, n_bits, wbr, wbc, seed, scale
+
+
+@given(weight_case())
+@settings(**SETTINGS)
+def test_reconstruction_bound(case):
+    """|compose(from_float(w)) - w| <= scale / (2^n - 1) / 2 elementwise."""
+    k, n, n_bits, wbr, wbc, seed, scale = case
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * scale
+    qt = from_float(w, n_bits, BlockingSpec(wbr, wbc))
+    err = np.max(np.abs(np.asarray(compose(qt) - w)))
+    bound = float(jnp.max(jnp.abs(w))) / (2 ** n_bits - 1) / 2
+    assert err <= bound * (1 + 1e-5) + 1e-9
+
+
+@given(weight_case())
+@settings(**SETTINGS)
+def test_precision_adjustment_monotone_and_prefix(case):
+    k, n, n_bits, wbr, wbc, seed, scale = case
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * scale
+    qt = requantize(from_float(w, n_bits, BlockingSpec(wbr, wbc)))
+    qt1 = adjust_precision(qt)
+    mask = np.asarray(qt1.mask)
+    # prefix property: once a bit is off, all higher bits are off
+    for b in range(1, n_bits):
+        assert np.all(mask[b] <= mask[b - 1] + 1e-9)
+    # monotone under repetition
+    qt2 = adjust_precision(requantize(qt1))
+    assert np.all(np.asarray(bitwidths(qt2)) <= np.asarray(bitwidths(qt1)))
+
+
+@given(weight_case())
+@settings(**SETTINGS)
+def test_requantize_composes_exactly_representable(case):
+    """After requantize, compose is on the exact scale grid."""
+    k, n, n_bits, wbr, wbc, seed, scale = case
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * scale
+    qt = requantize(from_float(w, n_bits, BlockingSpec(wbr, wbc)))
+    wq = np.asarray(compose(qt), dtype=np.float64)
+    s = float(qt.scale) / (2 ** n_bits - 1)
+    q = wq / s
+    assert np.max(np.abs(q - np.round(q))) < 1e-3
+
+
+@given(weight_case())
+@settings(**SETTINGS)
+def test_live_bits_match_numpy_reference(case):
+    k, n, n_bits, wbr, wbc, seed, scale = case
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * scale
+    spec = BlockingSpec(wbr, wbc)
+    qt = adjust_precision(requantize(from_float(w, n_bits, spec)))
+    elems = np.asarray(block_elem_counts((k, n), spec))
+    bw = np.asarray(bitwidths(qt))
+    assert float(layer_bit_count(qt)) == float((bw * elems).sum())
+
+
+@given(weight_case())
+@settings(**SETTINGS)
+def test_fakequant_tracks_bitplane(case):
+    """fake-quant compose == bit-plane compose for exact-binary states."""
+    k, n, n_bits, wbr, wbc, seed, scale = case
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * scale
+    spec = BlockingSpec(wbr, wbc)
+    qt = requantize(adjust_precision(requantize(from_float(w, n_bits, spec))))
+    fq = fq_from_float(w, n_bits, spec)
+    fq = dataclasses.replace(
+        fq, bitwidth=jnp.sum(qt.mask, axis=0).astype(fq.bitwidth.dtype))
+    fq = fq_maintenance(fq)
+    np.testing.assert_allclose(np.asarray(fq_compose(fq)),
+                               np.asarray(compose(qt)),
+                               atol=float(qt.scale) * 1e-5 + 1e-6)
+
+
+@given(st.integers(1, 8), st.integers(1, 6), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_pack_unpack_bits_roundtrip(rows8, cols, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(rows8 * 8, cols)).astype(np.float32)
+    packed = pack_bits(jnp.asarray(bits))
+    out = np.asarray(unpack_bits(packed))
+    np.testing.assert_array_equal(out, bits)

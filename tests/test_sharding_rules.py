@@ -1,0 +1,108 @@
+"""Sharding-rule unit tests (1-device mesh: axes exist, sizes are 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import REGISTRY
+from repro.dist.sharding import (batch_pspecs, cache_pspecs, fit_spec,
+                                 param_pspecs, use_mesh)
+from repro.launch.mesh import make_mesh
+from repro.models.api import build
+from repro.models.common import QuantConfig
+
+
+@pytest.fixture
+def mesh1():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _find(specs, params, needle):
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    return {jax.tree_util.keystr(p): s for p, s in flat_s
+            if needle in jax.tree_util.keystr(p)}
+
+
+def test_param_rules_dense(mesh1):
+    cfg = REGISTRY["phi3-mini-3.8b"].tiny().with_quant(
+        QuantConfig(mode="fake", n_bits=8, wb_rows=8, wb_cols=8))
+    api = build(cfg)
+    params = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    with use_mesh(mesh1):
+        specs = param_pspecs(params)
+    wq = _find(specs, params, "wq")
+    assert any("model" in str(s) for s in wq.values())
+    wo = list(_find(specs, params, "['attn']['wo'].w").values())[0]
+    assert wo[-2] == "model"                      # row-parallel
+    # quant metadata scale replicated
+    sc = list(_find(specs, params, "wq.scale").values())
+    assert all(s == P() for s in sc)
+
+
+def test_fsdp_on_big_weights(mesh1):
+    """Big weights get their free dim data-sharded (ZeRO-3)."""
+    from repro.dist.sharding import _leaf_spec
+    with use_mesh(mesh1):
+        ps = _leaf_spec("['layers']['attn']['wo'].w",
+                        jax.ShapeDtypeStruct((2048, 1024), jnp.float32))
+        assert ps == P("model", "data")
+        ps_small = _leaf_spec("['layers']['attn']['wo'].w",
+                              jax.ShapeDtypeStruct((64, 64), jnp.float32))
+        assert "data" not in str(ps_small)
+        # router excluded from FSDP
+        ps_r = _leaf_spec("['moe']['router_w']",
+                          jax.ShapeDtypeStruct((4096, 512), jnp.float32))
+        assert ps_r == P(None, None)
+
+
+def test_expert_and_router_rules(mesh1):
+    cfg = REGISTRY["granite-moe-3b-a800m"].tiny().with_quant(
+        QuantConfig(mode="none"))
+    api = build(cfg)
+    params = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    with use_mesh(mesh1):
+        specs = param_pspecs(params)
+    gate = list(_find(specs, params, "expert_gate").values())[0]
+    assert gate[-1] == "model"
+    router = list(_find(specs, params, "router_w").values())[0]
+    assert "model" not in str(router)             # router replicated
+
+
+def test_fit_spec_divisibility():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ps = fit_spec(P("data", "model"), (7, 8), mesh)
+    assert ps == P("data", "model")               # axis size 1 divides all
+
+
+def test_batch_and_cache_pspecs(mesh1):
+    with use_mesh(mesh1):
+        b = batch_pspecs({"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)})
+        assert b["tokens"][0] is not None
+        cache = {"cache": {
+            "k": jax.ShapeDtypeStruct((4, 8, 128, 2, 16), jnp.float32)}}
+        cs = cache_pspecs(cache, batch_size=8)
+        assert cs["cache"]["k"][3] == "model"     # kv heads on model
+
+
+def test_no_mesh_is_noop():
+    cfg = REGISTRY["phi3-mini-3.8b"].tiny()
+    api = build(cfg)
+    params = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    specs = param_pspecs(params)
+    assert all(s == P() for s in jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+
+
+def test_hlo_collective_parser():
+    from repro.dist.hlo_analysis import collective_stats
+    txt = """
+  %all-reduce.1 = f32[256,512]{1,0} all-reduce(%dot), channel_id=1
+  %ag = bf16[1024,64]{1,0} all-gather(%p0), dimensions={0}
+  ROOT %x = f32[8]{0} add(%a, %b)
+"""
+    st = collective_stats(txt)
+    assert st.counts == {"all-reduce": 1, "all-gather": 1}
+    assert st.bytes_by_op["all-reduce"] == 256 * 512 * 4
+    assert st.bytes_by_op["all-gather"] == 1024 * 64 * 2
