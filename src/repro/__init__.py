@@ -1,0 +1,6 @@
+"""Block-Wise Mixed-Precision Quantization (BWQ) reproduction.
+
+Subpackages: core (quantization math), models (LM families), dist
+(sharding + HLO analysis), hw (ReRAM accelerator simulator), kernels,
+train, serve, launch, configs, data, optim, ckpt.
+"""

@@ -1,0 +1,8 @@
+"""Distribution layer: mesh-aware sharding rules + HLO collective analysis.
+
+``repro.dist.sharding`` holds the logical-axis-rule engine (maxtext-style)
+used by every model layer and the launchers; ``repro.dist.hlo_analysis``
+parses compiled HLO for collective traffic and turns cost totals into
+roofline terms.
+"""
+from . import hlo_analysis, sharding  # noqa: F401

@@ -1,0 +1,289 @@
+"""Logical-axis sharding rules over a context-managed mesh.
+
+The engine maps *logical* axis names ("batch", "heads", "ff", ...) and
+*parameter paths* (regex over ``jax.tree_util.keystr`` strings) onto mesh
+axes, maxtext-style.  Everything degrades to replicated ``P()`` no-ops when
+no mesh is active, so single-device tests and examples run unchanged.
+
+Conventions (see DESIGN.md and tests/test_sharding_rules.py):
+  * column-parallel projections (wq/wk/wv, FFN up/gate) put their output
+    dim on 'model';
+  * row-parallel projections (wo, FFN down) put their input dim on 'model';
+  * big weights additionally get their free dim sharded on 'data'
+    (ZeRO-3 FSDP), gated on a size threshold and the ``FSDP`` toggle;
+  * MoE routers and quantization metadata (scale / mask / bitwidth LUTs)
+    stay replicated;
+  * the data-parallel ("batch") logical axis spans every data-ish mesh
+    axis present, in ('pod', 'data') order.
+
+Every emitted spec is passed through :func:`fit_spec`, which drops mesh
+axes that are absent or do not divide the corresponding dim — so rules are
+written for the *production* mesh and degrade per-tensor everywhere else.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import re
+import threading
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# mesh context
+# --------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+
+def get_mesh():
+    """The innermost active mesh, or None (single-device / replicated)."""
+    stack = getattr(_STATE, "mesh_stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate ``mesh`` for sharding rules; ``use_mesh(None)`` is a no-op
+    context (kept so launchers can write ``with use_mesh(maybe_mesh):``)."""
+    stack = getattr(_STATE, "mesh_stack", None)
+    if stack is None:
+        stack = _STATE.mesh_stack = []
+    stack.append(mesh)
+    try:
+        yield mesh
+    finally:
+        stack.pop()
+
+
+# Data-ish mesh axes in their canonical (outer -> inner) order.
+DATA_AXES: Tuple[str, ...] = ("pod", "data")
+
+# ZeRO-3 toggle: big weights get their free dim sharded on 'data'.
+# benchmarks/hillclimb.py flips "enabled" around lowering variants.
+FSDP = {"enabled": True, "min_bytes": 1 << 20}
+
+
+def batch_axes(mesh=None) -> Tuple[str, ...]:
+    """The data-parallel mesh axes present in ``mesh`` (pod-major)."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in DATA_AXES if a in mesh.shape)
+
+
+def _batch_entry(mesh):
+    dp = batch_axes(mesh)
+    if not dp:
+        return None
+    return dp[0] if len(dp) == 1 else tuple(dp)
+
+
+# logical axis name -> mesh axes (resolved against the active mesh)
+_LOGICAL = {
+    "batch": _batch_entry,
+    "data": lambda mesh: "data",
+    "pod": lambda mesh: "pod",
+    "model": lambda mesh: "model",
+    "heads": lambda mesh: "model",
+    "kv_heads": lambda mesh: "model",
+    "ff": lambda mesh: "model",
+    "expert": lambda mesh: "model",
+    "vocab": lambda mesh: "model",
+}
+
+
+def spec(*logical: Optional[str]) -> P:
+    """Logical axis names -> PartitionSpec against the active mesh.
+
+    Unknown names and ``None`` map to replicated dims.  The result is NOT
+    divisibility-fitted; pair with :func:`fit_spec` (``constraint`` does)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return P()
+    entries = []
+    for name in logical:
+        fn = _LOGICAL.get(name) if name is not None else None
+        entries.append(fn(mesh) if fn else None)
+    return P(*entries)
+
+
+def fit_spec(ps: P, shape: Sequence[int], mesh=None) -> P:
+    """Fit ``ps`` to ``shape`` under ``mesh``: drop axes that are not in the
+    mesh, already used by an earlier dim, or whose combined size does not
+    divide the dim.  Always returns a spec of ``len(shape)`` entries."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return P(*([None] * len(shape)))
+    used: set = set()
+    out: List[Any] = []
+    for i, dim in enumerate(shape):
+        entry = ps[i] if i < len(ps) else None
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = [a for a in axes if a in mesh.shape and a not in used]
+        size = math.prod(mesh.shape[a] for a in axes)
+        if not axes or size == 0 or dim % size:
+            out.append(None)
+        else:
+            used.update(axes)
+            out.append(tuple(axes) if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def constraint(x, *logical: Optional[str]):
+    """``with_sharding_constraint`` by logical axis names; identity with no
+    active mesh.  Trailing dims beyond ``logical`` stay replicated."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    ps = fit_spec(spec(*logical), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))
+
+
+# --------------------------------------------------------------------------
+# parameter rules (path-regex keyed, maxtext logical_axis_rules style)
+# --------------------------------------------------------------------------
+#
+# Each rule is (compiled path regex, kind).  First match wins.
+#   'replicated'  -> rank-matched P(None, ...)  (excluded from FSDP too)
+#   'meta'        -> P()  (quant scales / masks / bit-width LUTs)
+#   'col'         -> trailing (K, N): N on 'model', FSDP candidate dim K
+#   'row'         -> trailing (K, N): K on 'model', FSDP candidate dim N
+# Leading (stack / bit-plane) dims are never sharded by parameter rules.
+
+_RULES: Tuple[Tuple[re.Pattern, str], ...] = tuple(
+    (re.compile(pat), kind) for pat, kind in [
+        # MoE routers stay replicated + fp32 (DESIGN.md §5): every data
+        # shard routes its own tokens, no weight gather on the hot path.
+        (r"router", "replicated"),
+        # Quantization metadata: per-layer/per-WB scales, bit masks and
+        # bit-width LUTs are tiny; replicate them everywhere.
+        (r"\.(scale|mask|bitwidth)$", "meta"),
+        (r"\['(k|v)_scale'\]", "meta"),
+        # Norms / biases / PACT clip values: small 1-D-ish leaves.
+        (r"\['(ln[_a-z0-9]*|final_norm|enc_norm|shared_ln2?|"
+         r"beta_[a-z]+|b[qkv]|alpha)'\]", "replicated"),
+        # Column-parallel: output dim on 'model'.
+        (r"\['(wq|wk|wv|w_gate|w_up|w_in|shared_gate|shared_up|"
+         r"expert_gate|expert_up|conv_pw1|lm_head|vision_proj)'\]", "col"),
+        # Row-parallel: input dim on 'model'.
+        (r"\['(wo|w_down|w_out|shared_down|expert_down|conv_pw2)'\]", "row"),
+        # Token embedding (vocab, d): vocab rows on 'model' (matches the
+        # tied lm-head orientation), free dim FSDP-able.
+        (r"\['embed'\]", "row"),
+    ])
+
+
+def _leaf_bytes(leaf) -> int:
+    try:
+        return int(math.prod(leaf.shape)) * jax.dtypes.canonicalize_dtype(
+            leaf.dtype).itemsize
+    except (AttributeError, TypeError):
+        return 0
+
+
+def _leaf_spec(path: str, leaf) -> P:
+    """PartitionSpec for one parameter leaf, keyed by its keystr path.
+
+    ``path`` is a ``jax.tree_util.keystr`` string such as
+    ``"['layers']['attn']['wo'].w"``; ``leaf`` is an array or
+    ShapeDtypeStruct.  Requires an active mesh (otherwise ``P()``)."""
+    mesh = get_mesh()
+    shape = tuple(getattr(leaf, "shape", ()))
+    if mesh is None or len(shape) < 1:
+        return P()
+    kind = None
+    for pat, k in _RULES:
+        if pat.search(path):
+            kind = k
+            break
+    if kind == "meta":
+        return P()
+    rank = len(shape)
+    dims: List[Any] = [None] * rank
+    if kind in ("col", "row") and rank >= 2:
+        model_dim = rank - 1 if kind == "col" else rank - 2
+        fsdp_dim = rank - 2 if kind == "col" else rank - 1
+        dims[model_dim] = "model"
+        if FSDP["enabled"] and "data" in mesh.shape \
+                and _leaf_bytes(leaf) >= FSDP["min_bytes"]:
+            dims[fsdp_dim] = "data"
+    return fit_spec(P(*dims), shape, mesh)
+
+
+def param_pspecs(params) -> Any:
+    """Tree of PartitionSpecs mirroring ``params`` (works on any pytree,
+    including TrainState — optimizer moments inherit their weight's rule
+    because the weight's dict key appears in their path too)."""
+    mesh = get_mesh()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    if mesh is None:
+        specs = [P() for _ in flat]
+    else:
+        specs = [_leaf_spec(jax.tree_util.keystr(path), leaf)
+                 for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shard_params_tree(params):
+    """Constrain every leaf of ``params`` to its rule spec (identity with
+    no active mesh).  Called once per step on the materialized tree."""
+    mesh = get_mesh()
+    if mesh is None:
+        return params
+    specs = param_pspecs(params)
+    return jax.tree_util.tree_map(
+        lambda x, ps: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, ps)),
+        params, specs)
+
+
+# --------------------------------------------------------------------------
+# batch / cache rules
+# --------------------------------------------------------------------------
+
+def batch_pspecs(batch) -> Any:
+    """Shard dim 0 (the global batch) of every leaf across the data axes."""
+    mesh = get_mesh()
+
+    def leaf(x):
+        shape = tuple(getattr(x, "shape", ()))
+        if mesh is None or not shape:
+            return P()
+        dims: List[Any] = [None] * len(shape)
+        dims[0] = _batch_entry(mesh)
+        return fit_spec(P(*dims), shape, mesh)
+
+    return jax.tree_util.tree_map(leaf, batch)
+
+
+def cache_pspecs(state, batch_size: int) -> Any:
+    """Decode-state specs: the batch dim (identified by ``batch_size``; the
+    leading dim is the stacked layer axis) shards on the data axes, and the
+    KV-head dim of rank>=5 ``(L, B, T, KV, dh)`` cache leaves shards on
+    'model' — fitted, so e.g. 2 KV heads on a 16-way model axis degrade to
+    replicated instead of failing."""
+    mesh = get_mesh()
+
+    def leaf(x):
+        shape = tuple(getattr(x, "shape", ()))
+        if mesh is None or not shape:
+            return P()
+        dims: List[Any] = [None] * len(shape)
+        # rank>=4 leaves are stacked (L, B, ...): dim 0 is the layer axis,
+        # so never batch-shard it even when n_layers == batch_size.
+        start = 1 if len(shape) >= 4 else 0
+        for i in range(start, len(shape)):
+            if shape[i] == batch_size:
+                dims[i] = _batch_entry(mesh)
+                break
+        if len(shape) >= 5 and dims[-2] is None:
+            dims[-2] = "model"
+        return fit_spec(P(*dims), shape, mesh)
+
+    return jax.tree_util.tree_map(leaf, state)

@@ -1,0 +1,1 @@
+"""Entry points: train / dryrun / serve launchers and mesh builders."""

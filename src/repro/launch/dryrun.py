@@ -45,6 +45,14 @@ def _shardings(mesh, pspec_tree):
         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
 
 
+def _cost_dict(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() returns a dict on new jax, [dict] on old."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _model_flops_estimate(cfg: ModelConfig, cell: ShapeCell) -> float:
     """MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (fwd-only)."""
     d, L = cfg.d_model, cfg.n_layers
@@ -179,7 +187,7 @@ def _calibrated_costs(cfg: ModelConfig, cell: ShapeCell, mesh,
             compiled, _, _ = _lower_once(ccfg, small_cell, mesh,
                                          microbatches=1,
                                          deploy_bits=deploy_bits)
-            ca = compiled.cost_analysis()
+            ca = _cost_dict(compiled)
             colls = collective_stats(compiled.as_text())
             results.append(dict(flops=float(ca.get("flops", 0.0)),
                                 bytes=float(ca.get("bytes accessed", 0.0)),
@@ -224,7 +232,7 @@ def lower_cell(cfg: ModelConfig, cell: ShapeCell, mesh,
     compiled, t_lower, t_compile = _lower_once(cfg, cell, mesh, microbatches,
                                                deploy_bits=deploy_bits)
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     txt = compiled.as_text()
     colls = collective_stats(txt)
     raw_flops = float(cost.get("flops", 0.0))

@@ -10,6 +10,7 @@ The router is kept in float32 and outside BWQ quantization (DESIGN.md §5).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Tuple
 
 import jax
@@ -39,10 +40,20 @@ def _gm_fwd(x, w, group_sizes):
 def _gm_bwd(res, dy):
     x, w, gs = res
     dx = jax.lax.ragged_dot(dy, jnp.swapaxes(w, 1, 2), gs)
-    dnums = jax.lax.RaggedDotDimensionNumbers(
-        dot_dimension_numbers=(((0,), (0,)), ((), ())),
-        lhs_ragged_dimensions=[0], rhs_group_dimensions=[])
-    dw = jax.lax.ragged_dot_general(x, dy, gs, dnums)
+    if hasattr(jax.lax, "RaggedDotDimensionNumbers"):
+        dnums = jax.lax.RaggedDotDimensionNumbers(
+            dot_dimension_numbers=(((0,), (0,)), ((), ())),
+            lhs_ragged_dimensions=[0], rhs_group_dimensions=[])
+        dw = jax.lax.ragged_dot_general(x, dy, gs, dnums)
+    else:
+        # Older jax has no ragged-contracting mode: mask tokens into their
+        # group via one-hot and contract.  Materializes (T, E, K) — fine at
+        # the small-scale sizes that run on these jax versions.
+        e = w.shape[0]
+        gid = jnp.repeat(jnp.arange(e), gs, total_repeat_length=x.shape[0])
+        onehot = jax.nn.one_hot(gid, e, dtype=x.dtype)      # (T, E)
+        xg = onehot[:, :, None] * x[:, None, :]             # (T, E, K)
+        dw = jnp.einsum("tek,tn->ekn", xg, dy)
     return dx.astype(x.dtype), dw.astype(w.dtype), None
 
 
@@ -84,13 +95,16 @@ def grouped_matmul_capacity(x, w, group_sizes, capacity: int):
     return y[:m]
 
 
+def _capacity(m: int, e: int) -> int:
+    """Per-expert token capacity: factor * mean load, rounded up to 8."""
+    cap = int(GROUPED_IMPL["capacity_factor"] * m / e + 0.999)
+    return max(8, min(m, -(-cap // 8) * 8))
+
+
 def _grouped(x, w, group_sizes):
     if GROUPED_IMPL["impl"] == "capacity":
-        m = x.shape[0]
-        e = w.shape[0]
-        cap = int(GROUPED_IMPL["capacity_factor"] * m / e + 0.999)
-        cap = max(8, min(m, -(-cap // 8) * 8))
-        return grouped_matmul_capacity(x, w, group_sizes, cap)
+        return grouped_matmul_capacity(x, w, group_sizes,
+                                       _capacity(x.shape[0], w.shape[0]))
     return grouped_matmul(x, w, group_sizes)
 
 
@@ -240,9 +254,7 @@ def _moe_forward_sharded(p: Dict, x: jnp.ndarray, top_k: int, mesh
             # roll so this rank's tokens start at row 0, then run the
             # capacity matmul over just the local experts
             xloc = jnp.roll(xsrt, -start0, axis=0)
-            m = xt.shape[0] * top_k
-            cap = max(8, min(m, -(-int(
-                GROUPED_IMPL["capacity_factor"] * m / e + 0.999) // 8) * 8))
+            cap = _capacity(xt.shape[0] * top_k, e)
             gate = grouped_matmul_capacity(xloc, wg, gs_local, cap)
             up = grouped_matmul_capacity(xloc, wu, gs_local, cap)
             h = jax.nn.silu(gate) * up
@@ -275,9 +287,13 @@ def _moe_forward_sharded(p: Dict, x: jnp.ndarray, top_k: int, mesh
                       P(None, mdl, None))
     in_specs = (P(dpa, None, None), P()) + w_in_specs
     out_specs = (P(dpa, None, None), P())
-    out, aux = jax.shard_map(local_moe, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)(
-        x, rw, wg, wu, wd)
+    if hasattr(jax, "shard_map"):
+        smap = functools.partial(jax.shard_map, check_vma=False)
+    else:  # older jax: experimental namespace, check_rep spelling
+        from jax.experimental.shard_map import shard_map as _sm
+        smap = functools.partial(_sm, check_rep=False)
+    out, aux = smap(local_moe, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs)(x, rw, wg, wu, wd)
 
     if "shared_gate" in p:
         hs = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])

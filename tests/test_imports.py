@@ -1,0 +1,35 @@
+"""Every module under src/repro must import.
+
+A missing module (like the repro.dist regression this guards against) used
+to surface as six scattered pytest collection errors; here it fails as one
+named test per module instead.
+"""
+import importlib
+import os
+import pkgutil
+
+import pytest
+
+import repro
+
+
+def _walk():
+    names = ["repro"]
+    for info in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        names.append(info.name)
+    return sorted(names)
+
+
+@pytest.mark.parametrize("name", _walk())
+def test_module_imports(name):
+    # launch.dryrun / launch.hillclimb overwrite XLA_FLAGS at import (their
+    # entrypoints need 512 fake devices before jax init); don't let that
+    # leak into the rest of the suite's environment.
+    before = os.environ.get("XLA_FLAGS")
+    try:
+        importlib.import_module(name)
+    finally:
+        if before is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = before

@@ -4,7 +4,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")          # optional dep; skip, don't error
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (BlockingSpec, adjust_precision, bitwidths, compose,
                         from_float, layer_bit_count, requantize)

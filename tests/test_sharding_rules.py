@@ -95,6 +95,66 @@ def test_no_mesh_is_noop():
         specs, is_leaf=lambda x: isinstance(x, P)))
 
 
+def test_multipod_fit_and_cache_pspecs():
+    """3-axis (pod, data, model) mesh: batch spans (pod, data); non-dividing
+    dims drop their mesh axes instead of failing."""
+    from repro.dist.sharding import spec
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    with use_mesh(mesh):
+        ps = spec("batch", None, "ff")
+        assert ps[0] == ("pod", "data")
+        assert ps[2] == "model"
+        # 7 is not divisible by a >1 axis; with size-1 axes everything fits
+        assert fit_spec(P(("pod", "data"), "model"), (7, 8), mesh) == \
+            P(("pod", "data"), "model")
+        cache = {"cache": {
+            "k": jax.ShapeDtypeStruct((4, 16, 128, 2, 64), jnp.float32),
+            "k_scale": jax.ShapeDtypeStruct((4, 16, 128, 2), jnp.float32)}}
+        cs = cache_pspecs(cache, batch_size=16)
+        assert cs["cache"]["k"][1] == ("pod", "data")
+        assert cs["cache"]["k"][3] == "model"
+        assert cs["cache"]["k_scale"][1] == ("pod", "data")
+        # n_layers == batch_size: the leading stacked-layer dim must not
+        # steal the batch sharding
+        cs2 = cache_pspecs(
+            {"k": jax.ShapeDtypeStruct((16, 16, 64, 2, 8), jnp.float32)},
+            batch_size=16)
+        assert cs2["k"][0] is None and cs2["k"][1] == ("pod", "data")
+    # a >1 mesh axis that does NOT divide the dim gets dropped; fit_spec
+    # only reads mesh.shape, so a stand-in covers >1 sizes on 1 device
+    class _Mesh22:
+        shape = {"data": 2, "model": 2}
+
+    mesh2 = _Mesh22()
+    assert fit_spec(P("data", "model"), (7, 8), mesh2) == P(None, "model")
+    assert fit_spec(P("data", "model"), (8, 7), mesh2) == P("data", None)
+    # axes absent from the mesh are dropped too
+    assert fit_spec(P(("pod", "data"), None), (8, 8), mesh2) == \
+        P("data", None)
+
+
+def test_hlo_mixed_dtypes_and_no_collectives():
+    from repro.dist.hlo_analysis import collective_stats
+    txt = """
+  %ar0 = f32[128,16]{1,0} all-reduce(%a), channel_id=1
+  %ar1 = bf16[64]{0} all-reduce(%b), channel_id=2
+  %rs = s8[256,4]{1,0} reduce-scatter(%c), dimensions={0}
+  %ag-start = (f32[32], f32[256]) all-gather-start(%d), dimensions={0}
+  %ag-done = f32[256]{0} all-gather-done(%ag-start)
+  ROOT %r = f32[8]{0} add(%x, %y)
+"""
+    st = collective_stats(txt)
+    assert st.counts == {"all-reduce": 2, "reduce-scatter": 1,
+                         "all-gather": 1}
+    assert st.bytes_by_op["all-reduce"] == 128 * 16 * 4 + 64 * 2
+    assert st.bytes_by_op["reduce-scatter"] == 256 * 4 * 1
+    assert st.bytes_by_op["all-gather"] == 256 * 4   # start skipped
+    assert st.total_bytes == sum(st.bytes_by_op.values())
+    # collective-free HLO (pure compute) -> empty stats
+    empty = collective_stats("  ROOT %m = f32[64,64]{1,0} dot(%a, %b)")
+    assert empty.counts == {} and empty.total_bytes == 0
+
+
 def test_hlo_collective_parser():
     from repro.dist.hlo_analysis import collective_stats
     txt = """
