@@ -1,0 +1,151 @@
+"""Serving throughput benchmark: prefill + decode tokens/sec across
+batch sizes and KV-cache precisions, JSON output.
+
+Also times the OLD engine's per-step whole-tree requantization (the
+pre-redesign ``_maybe_quant_cache`` behavior, reproduced inline) against
+the quantized-at-rest int8 cache at the same batch — the acceptance
+criterion is that at-rest decode is no slower at batch >= 8, since it
+replaces O(cache) requant work per token with a one-time write-side
+rounding.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--out f.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY
+from repro.core.pact import quantize_signed
+from repro.models.api import build
+from repro.models.common import QuantConfig
+from repro.serve import ServeEngine
+
+
+def _sync(tree):
+    jax.block_until_ready(tree)
+
+
+def _bench(fn, iters: int):
+    fn()                                        # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    _sync(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_point(api, params, batch_size: int, kv_bits: int,
+                prompt_len: int = 32, decode_steps: int = 8,
+                iters: int = 3) -> dict:
+    cfg = api.cfg
+    eng = ServeEngine(api, params, kv_quant_bits=kv_bits)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (batch_size, prompt_len), 0,
+        cfg.vocab).astype(jnp.int32)}
+
+    logits, state = eng.prefill(batch, extra_slots=64)
+    _sync(state)
+    t_prefill = _bench(lambda: eng.prefill(batch, extra_slots=64), iters)
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    idx = jnp.full((batch_size,), prompt_len, jnp.int32)
+
+    def decode_once():
+        lg, st = eng.decode(tok, state, idx)
+        return lg
+    t_decode = _bench(decode_once, iters * decode_steps)
+
+    return {
+        "batch": batch_size,
+        "kv_bits": kv_bits,
+        "prompt_len": prompt_len,
+        "prefill_tokens_per_s": batch_size * prompt_len / t_prefill,
+        "decode_tokens_per_s": batch_size / t_decode,
+        "prefill_ms": t_prefill * 1e3,
+        "decode_step_ms": t_decode * 1e3,
+    }
+
+
+def bench_legacy_requant(api, params, batch_size: int,
+                         prompt_len: int = 32, decode_steps: int = 8,
+                         iters: int = 3) -> dict:
+    """The pre-redesign path: float cache + whole-tree re-quantization of
+    every >=4-dim leaf after each decode step."""
+    eng = ServeEngine(api, params, kv_quant_bits=32)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (batch_size, prompt_len), 0,
+        api.cfg.vocab).astype(jnp.int32)}
+    logits, state = eng.prefill(batch, extra_slots=64)
+
+    @jax.jit
+    def requant(st):
+        def q(x):
+            if isinstance(x, jnp.ndarray) and x.ndim >= 4:
+                return quantize_signed(x, 8)
+            return x
+        return jax.tree_util.tree_map(q, st)
+
+    state = requant(state)
+    _sync(state)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    idx = jnp.full((batch_size,), prompt_len, jnp.int32)
+
+    def decode_once():
+        lg, st = eng.decode(tok, state, idx)
+        return requant(st)
+    t_decode = _bench(decode_once, iters * decode_steps)
+    return {
+        "batch": batch_size,
+        "kv_bits": "legacy-requant-8",
+        "prompt_len": prompt_len,
+        "decode_tokens_per_s": batch_size / t_decode,
+        "decode_step_ms": t_decode * 1e3,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--quick", action="store_true",
+                    help="single small point (CI smoke)")
+    ap.add_argument("--out", default=None, help="write JSON here")
+    args = ap.parse_args()
+
+    cfg = REGISTRY[args.arch].tiny(dtype="float32").with_quant(
+        QuantConfig(mode="fake", n_bits=8, act_bits=8))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    # the requant-vs-at-rest comparison is only meaningful once the cache
+    # dominates the step (batch >= 8), so quick mode benches there too
+    batches = [8] if args.quick else [2, 8, 16]
+    kv_bits = [32, 8] if args.quick else [32, 8, 4]
+    rows = []
+    for b in batches:
+        for bits in kv_bits:
+            rows.append(bench_point(api, params, b, bits))
+            print(json.dumps(rows[-1]), flush=True)
+    # legacy comparison at the largest batch
+    b_cmp = batches[-1]
+    legacy = bench_legacy_requant(api, params, b_cmp)
+    rows.append(legacy)
+    print(json.dumps(legacy), flush=True)
+    at_rest = next(r for r in rows
+                   if r["batch"] == b_cmp and r["kv_bits"] == 8)
+    speedup = legacy["decode_step_ms"] / at_rest["decode_step_ms"]
+    summary = {"legacy_vs_at_rest_decode_speedup": round(speedup, 3),
+               "at_rest_no_slower": bool(speedup >= 1.0),
+               "compare_batch": b_cmp}
+    print(json.dumps(summary), flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "summary": summary}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

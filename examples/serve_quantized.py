@@ -1,5 +1,9 @@
-"""Serve a BWQ-quantized model with batched greedy decoding (+ optional
-int8 KV cache, the beyond-paper activation-side extension).
+"""Serve a BWQ-quantized model two ways:
+
+* one-shot static-batch greedy decoding with a quantized-at-rest KV cache
+  (int8 / nibble-packed int4 entries, written once, dequantized in-graph);
+* request-level continuous batching — staggered arrivals stream through a
+  fixed-capacity slot batch and still decode token-identically.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -9,7 +13,7 @@ import jax.numpy as jnp
 from repro.configs import REGISTRY
 from repro.models.api import build
 from repro.models.common import QuantConfig
-from repro.serve import ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine
 
 cfg = REGISTRY["phi3-mini-3.8b"].tiny(dtype="float32").with_quant(
     QuantConfig(mode="bitplane", n_bits=8, act_bits=8))
@@ -20,7 +24,19 @@ prompts = jnp.asarray(
     jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab),
     jnp.int32)
 
-for kv_bits in (32, 8):
+# one-shot batched decode at three KV-cache precisions
+for kv_bits in (32, 8, 4):
     eng = ServeEngine(api, params, kv_quant_bits=kv_bits)
     out = eng.generate({"tokens": prompts}, max_new=12)
-    print(f"kv_quant={kv_bits:2d}-bit ->", out[0].tolist())
+    print(f"kv_cache={kv_bits:2d}-bit ->", out[0].tolist())
+
+# continuous batching: 4 requests arriving 2 ticks apart share 2 slots
+eng = ServeEngine(api, params, kv_quant_bits=8)
+requests = [
+    Request(uid=i, inputs={"tokens": prompts[i:i + 1]},
+            sampling=SamplingParams(max_new_tokens=12), arrival=2 * i)
+    for i in range(4)
+]
+for r in eng.serve(requests, n_slots=2):
+    print(f"req {r.uid}: admitted@{r.admitted_tick} done@{r.finished_tick} "
+          f"({r.finish_reason}) {r.tokens}")

@@ -18,6 +18,30 @@ from .bitrep import QuantizedTensor, compose_int, extract_planes, _levels
 from .blocking import block_view, expand_block_map
 
 
+def pack_int4(q, axis: int = -1) -> jnp.ndarray:
+    """Pack signed integer values (|q| < 8) as two's-complement nibble
+    pairs along ``axis`` (whose length must be even): even positions land
+    in the low nibble, odd in the high.  Shared by the deployment weight
+    packer (serve/deploy.py, K axis) and the int4 KV cache
+    (models/attention.py, head axis) so the wire format has one owner."""
+    u = jnp.asarray(q).astype(jnp.int32) & 0xF
+    um = jnp.moveaxis(u, axis, -1)
+    lo, hi = um[..., 0::2], um[..., 1::2]
+    return jnp.moveaxis((lo | (hi << 4)).astype(jnp.uint8), -1, axis)
+
+
+def unpack_int4(u, axis: int = -1) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`: uint8 nibble pairs -> int32 values in
+    [-8, 7], interleaved back along ``axis`` (length doubles)."""
+    um = jnp.moveaxis(u, axis, -1)
+    lo = (um & 0xF).astype(jnp.int32)
+    hi = ((um >> 4) & 0xF).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    st = jnp.stack([lo, hi], axis=-1).reshape(*um.shape[:-1], -1)
+    return jnp.moveaxis(st, -1, axis)
+
+
 def requantize(qt: QuantizedTensor, rescale: bool = False) -> QuantizedTensor:
     """Snap the continuous bit planes back to exact binary values."""
     q = compose_int(qt)                                   # (..., Kp, Np)

@@ -1,7 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Loads (or initializes) a model, optionally converts it to packed integer
-serving weights (BWQ deployment), and runs batched greedy decoding.
+serving weights (BWQ deployment), and decodes either as one static batch
+(default) or as staggered requests through the continuous-batching
+scheduler (``--requests``).  ``--kv-bits {4,8}`` selects the
+quantized-at-rest KV cache; ``--temperature``/``--top-k`` enable sampling.
 """
 import argparse
 
@@ -11,8 +14,23 @@ import jax.numpy as jnp
 from ..configs import REGISTRY
 from ..models.api import build
 from ..models.common import QuantConfig
-from ..serve import ServeEngine
+from ..serve import Request, SamplingParams, ServeEngine
 from ..serve.deploy import to_serving_params
+
+
+def _prompts(cfg, args):
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab).astype(jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.vision_tokens, cfg.d_model)) * 0.1
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, args.prompt_len, cfg.d_model)) * 0.1
+    return batch
 
 
 def main():
@@ -22,10 +40,24 @@ def main():
     ap.add_argument("--no-tiny", dest="tiny", action="store_false")
     ap.add_argument("--deploy-bits", type=int, default=0,
                     choices=[0, 4, 8], help="0 = QAT weights")
-    ap.add_argument("--kv-bits", type=int, default=32, choices=[8, 32])
+    ap.add_argument("--kv-bits", type=int, default=32, choices=[4, 8, 32],
+                    help="quantized-at-rest KV cache precision")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed (each request adds its uid)")
+    ap.add_argument("--requests", action="store_true",
+                    help="feed the batch as staggered requests through the "
+                         "continuous-batching scheduler")
+    ap.add_argument("--n-slots", type=int, default=0,
+                    help="decode slots for --requests (0 = batch size)")
+    ap.add_argument("--arrival-gap", type=int, default=2,
+                    help="ticks between request arrivals in --requests mode")
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch]
@@ -39,18 +71,29 @@ def main():
         print(f"deployed: packed int{args.deploy_bits} serving weights")
 
     eng = ServeEngine(api, params, kv_quant_bits=args.kv_bits)
-    prompts = {"tokens": jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
-        cfg.vocab).astype(jnp.int32)}
-    if cfg.family == "vlm":
-        prompts["vision_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.vision_tokens, cfg.d_model)) * 0.1
-    if cfg.is_encdec:
-        prompts["frames"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, args.prompt_len, cfg.d_model)) * 0.1
-    out = eng.generate(prompts, max_new=args.max_new)
+    batch = _prompts(cfg, args)
+
+    if args.requests:
+        reqs = [Request(uid=i,
+                        inputs={k: v[i:i + 1] for k, v in batch.items()},
+                        sampling=SamplingParams(
+                            max_new_tokens=args.max_new,
+                            temperature=args.temperature,
+                            top_k=args.top_k, eos_id=args.eos_id,
+                            seed=args.seed + i),
+                        arrival=i * args.arrival_gap)
+                for i in range(args.batch)]
+        results = eng.serve(reqs, n_slots=args.n_slots or args.batch)
+        for r in results:
+            print(f"[{r.uid}] arrived@{reqs[r.uid].arrival} "
+                  f"admitted@{r.admitted_tick} done@{r.finished_tick} "
+                  f"({r.finish_reason}): {r.tokens}")
+        return
+
+    key = jax.random.PRNGKey(args.seed) if args.temperature > 0 else None
+    out = eng.generate(batch, max_new=args.max_new,
+                       greedy=args.temperature <= 0, key=key,
+                       temperature=args.temperature, top_k=args.top_k)
     for i, row in enumerate(out.tolist()):
         print(f"[{i}] {row}")
 

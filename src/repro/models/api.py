@@ -21,6 +21,15 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
+def _write_rows(big, small, slot, batch_dim: int):
+    """Write ``small`` into ``big`` at offset ``slot`` along ``batch_dim``
+    (zero offsets elsewhere — time axes write from position 0)."""
+    starts = [jnp.zeros((), jnp.int32)] * big.ndim
+    starts[batch_dim] = slot
+    return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                        tuple(starts))
+
+
 @dataclasses.dataclass
 class ModelAPI:
     cfg: ModelConfig
@@ -64,6 +73,9 @@ class ModelAPI:
         return logits[:, -1], {"cache": cache}
 
     def decode_step(self, params, tokens, state, index) -> tuple:
+        """One decode step.  ``index`` is either the scalar shared fill
+        level (train / dry-run paths) or a per-slot (B,) vector of fill
+        levels (request-level serving: each slot advances independently)."""
         cfg = self.cfg
         if cfg.is_encdec:
             logits, cache = encdec.encdec_decode_step(
@@ -72,6 +84,35 @@ class ModelAPI:
         logits, cache = transformer.decode_step(params, cfg, tokens,
                                                 state["cache"], index)
         return logits, {**state, "cache": cache}
+
+    def prefill_at(self, params, batch, state, slot) -> tuple:
+        """Prefill ``batch`` (nb prompt rows) INTO an existing decode state.
+
+        Runs a standalone prefill for the sub-batch and writes the resulting
+        cache / recurrent-state / encoder rows into batch rows
+        [slot, slot+nb) of ``state`` — the continuous-batching insertion
+        primitive (a prompt joins a live decode batch without touching the
+        other slots).  Every cache leaf is stacked (L, B, ...) so the batch
+        dim is 1; ``enc_out`` carries batch at dim 0.  The target cache's
+        time axis must be at least the sub-batch's prefill width; stale
+        positions past the prompt stay masked by the per-slot fill level.
+        Returns (last-token logits of the inserted rows, updated state)."""
+        logits, sub = self.prefill(params, batch, extra_slots=0)
+        slot = jnp.asarray(slot, jnp.int32)
+        new_state = dict(state)
+        new_state["cache"] = jax.tree_util.tree_map(
+            lambda big, small: _write_rows(big, small, slot, batch_dim=1),
+            state["cache"], sub["cache"])
+        if "enc_out" in state:
+            if sub["enc_out"].shape[1] != state["enc_out"].shape[1]:
+                raise ValueError(
+                    "enc-dec slot insertion needs the same encoder length "
+                    f"as the live batch: {sub['enc_out'].shape[1]} != "
+                    f"{state['enc_out'].shape[1]} (cross-attention has no "
+                    "per-row length masking)")
+            new_state["enc_out"] = _write_rows(
+                state["enc_out"], sub["enc_out"], slot, batch_dim=0)
+        return logits, new_state
 
     # ---- abstract input specs per shape cell ----------------------------
     def train_batch_spec(self, cell: ShapeCell) -> Dict[str, Any]:

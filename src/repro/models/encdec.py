@@ -121,12 +121,14 @@ def encode(mp, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
 
 
 def decode(mp, cfg: ModelConfig, tokens, enc_out, cache=None, index=None):
+    from .transformer import decode_positions
+
     h = jnp.take(mp["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
     b, s, _ = h.shape
     if index is None:
         pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     else:
-        pos = jnp.broadcast_to(index + jnp.arange(s)[None, :], (b, s))
+        pos = decode_positions(index, b, s)
     enc_pos = jnp.broadcast_to(
         jnp.arange(enc_out.shape[1])[None, :], (b, enc_out.shape[1]))
 
@@ -194,14 +196,14 @@ def encdec_loss(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
 
 
 def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int):
-    dt = jnp.dtype(cfg.dtype)
-    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    from .transformer import make_kv_cache
+    return make_kv_cache(cfg, cfg.n_layers, batch, max_len)
 
 
 def encdec_decode_step(params, cfg: ModelConfig, tokens, cache, index,
                        enc_out):
-    """One decoder token; encoder output precomputed at prefill time."""
+    """One decoder token; encoder output precomputed at prefill time.
+    ``index`` may be a scalar or a per-slot (B,) vector."""
     mp = shard_params_tree(_materialize_for_walk(params,
                                                  jnp.dtype(cfg.dtype)))
     logits, new_cache = decode(mp, cfg, tokens, enc_out, cache, index)

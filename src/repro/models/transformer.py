@@ -395,17 +395,35 @@ def forward(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
 # caches (decode)
 # ---------------------------------------------------------------------------
 
+def make_kv_cache(cfg: ModelConfig, stack: int, batch: int,
+                  max_len: int) -> Dict:
+    """One stacked K/V cache at ``cfg.kv_cache_bits`` precision.
+
+    <32 bits stores quantized-at-rest entries (int8, or int4 nibble-packed
+    along the head dim) plus per-token/head scales; see models.attention."""
+    dh, kv = cfg.head_dim, cfg.n_kv_heads
+    shape = (stack, batch, max_len, kv, dh)
+    bits = cfg.kv_cache_bits
+    if bits == 8:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
+    if bits == 4:
+        assert dh % 2 == 0, f"int4 KV cache needs even head_dim, got {dh}"
+        pshape = shape[:-1] + (dh // 2,)
+        return {"k": jnp.zeros(pshape, jnp.uint8),
+                "v": jnp.zeros(pshape, jnp.uint8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
+    dt = _cdtype(cfg)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
     dt = _cdtype(cfg)
-    dh, kv = cfg.head_dim, cfg.n_kv_heads
     if cfg.family in ("dense", "moe", "vlm"):
-        shape = (cfg.n_layers, batch, max_len, kv, dh)
-        if cfg.kv_cache_bits == 8:
-            return {"k": jnp.zeros(shape, jnp.int8),
-                    "v": jnp.zeros(shape, jnp.int8),
-                    "k_scale": jnp.zeros(shape[:-1], jnp.float32),
-                    "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
-        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        return make_kv_cache(cfg, cfg.n_layers, batch, max_len)
     if cfg.family == "ssm":
         st = rwkv6_init_state(batch, cfg.d_model, cfg.n_heads, dt)
         return jax.tree_util.tree_map(
@@ -416,16 +434,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
         mamba = jax.tree_util.tree_map(
             lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), mst)
         n_super = cfg.n_layers // cfg.hybrid_attn_every
-        shape = (n_super, batch, max_len, kv, dh)
         return {"mamba": mamba,
-                "attn": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}}
+                "attn": make_kv_cache(cfg, n_super, batch, max_len)}
     raise ValueError(cfg.family)
 
 
+def decode_positions(index, batch: int, seq: int = 1) -> jnp.ndarray:
+    """(B, S) absolute positions from a scalar or per-slot (B,) index."""
+    idx = jnp.asarray(index, jnp.int32)
+    base = idx[:, None] if idx.ndim else idx
+    return jnp.broadcast_to(base + jnp.arange(seq, dtype=jnp.int32)[None, :],
+                            (batch, seq)).astype(jnp.int32)
+
+
 def decode_step(params, cfg: ModelConfig, tokens, cache, index):
-    """One-token step. tokens: (B, 1); index: () int32 current length."""
+    """One-token step. tokens: (B, 1); index: () int32 current length, or a
+    per-slot (B,) vector of lengths (continuous batching)."""
     b = tokens.shape[0]
-    pos1 = jnp.full((b, 1), index, jnp.int32)
+    pos1 = decode_positions(index, b)
     positions = jnp.stack([pos1] * 3, axis=-1) if cfg.mrope else pos1
     logits, aux, new_cache = forward(params, cfg, tokens,
                                      positions=positions, cache=cache,

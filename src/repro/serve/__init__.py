@@ -1,1 +1,6 @@
 from .engine import ServeEngine
+from .sampling import GenerationResult, Request, SamplingParams
+from .scheduler import Scheduler
+
+__all__ = ["ServeEngine", "Scheduler", "Request", "SamplingParams",
+           "GenerationResult"]

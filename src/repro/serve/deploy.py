@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from ..core.bitrep import QuantizedTensor, compose_int, _levels
 from ..core.blocking import BlockingSpec, expand_block_map, pad_to_blocks
 from ..core.fakequant import FakeQuantTensor
+from ..core.quantize import pack_int4, unpack_int4
 
 
 @jax.tree_util.register_dataclass
@@ -54,9 +55,13 @@ def _quantize_leaf(w, scale, bitwidth, spec, n_bits, bits) -> ServingWeight:
     if bits == 8:
         w_int = wq.astype(jnp.int8)
     elif bits == 4:
-        lo = wq[..., 0::2, :] & 0xF
-        hi = wq[..., 1::2, :] & 0xF
-        w_int = (lo | (hi << 4)).astype(jnp.uint8)
+        if wq.shape[-2] % 2:
+            # nibble pairs pack along K: pad odd block-padded K with a zero
+            # row (serving_compose trims back to ``shape``)
+            pad = [(0, 0)] * wq.ndim
+            pad[-2] = (0, 1)
+            wq = jnp.pad(wq, pad)
+        w_int = pack_int4(wq, axis=-2)
     else:
         raise ValueError(bits)
     return ServingWeight(w_int=w_int, scale=gscale.astype(jnp.float32),
@@ -85,13 +90,10 @@ def serving_compose(sw: ServingWeight, dtype=jnp.bfloat16) -> jnp.ndarray:
     if sw.bits == 8:
         wq = sw.w_int.astype(jnp.float32)
     else:
-        lo = (sw.w_int & 0xF).astype(jnp.int32)
-        hi = ((sw.w_int >> 4) & 0xF).astype(jnp.int32)
-        lo = jnp.where(lo >= 8, lo - 16, lo)
-        hi = jnp.where(hi >= 8, hi - 16, hi)
-        st = jnp.stack([lo, hi], axis=-2)          # (..., K//2, 2, N)
-        wq = st.reshape(*st.shape[:-3], -1, st.shape[-1]).astype(jnp.float32)
+        wq = unpack_int4(sw.w_int, axis=-2).astype(jnp.float32)
     s_full = expand_block_map(sw.scale, sw.spec)
+    # odd block-padded K packs one zero row; trim back to the scale map
+    wq = wq[..., :s_full.shape[-2], :]
     w = wq * s_full
     k, n = sw.shape[-2], sw.shape[-1]
     return w[..., :k, :n].astype(dtype)

@@ -1,8 +1,24 @@
-"""Batched serving engine: prefill + greedy decode over the ModelAPI.
+"""Serving engine: jitted, mesh-aware prefill / decode over the ModelAPI.
 
 Decode-shape inference is where BWQ's weight compression pays off on TPU
-(HBM-bandwidth-bound); the engine optionally PACT-quantizes the KV cache
-(beyond-paper, DESIGN.md §6) to push the same idea onto activations.
+(HBM-bandwidth-bound).  The engine extends the same idea to activations
+with a *quantized-at-rest* KV cache: ``kv_quant_bits`` of 8 or 4 rebuilds
+the model config so the cache itself stores int8 / nibble-packed int4
+entries plus per-token scales (models.attention) — each written slot is
+rounded exactly once and dequantized in-graph per attention call.  This
+replaces the old per-step whole-tree re-quantization, which both re-rounded
+already-quantized entries every step (compounding error per token) and
+burned O(cache) requant work per decoded token.
+
+When a ``dist.sharding`` mesh is active at construction, parameters are
+placed by ``param_pspecs`` and prompt/state tensors by ``batch_pspecs`` /
+``cache_pspecs``, so prefill and decode run sharded (batch on the data
+axes, KV heads on the model axis) with no API change.
+
+Two call surfaces:
+  * ``generate(batch, max_new)`` — one-shot static-batch decoding (legacy).
+  * ``serve(requests)`` — request-level continuous batching through
+    :class:`repro.serve.scheduler.Scheduler`.
 """
 from __future__ import annotations
 
@@ -11,54 +27,149 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 
-from ..core.pact import quantize_signed
+from ..dist.sharding import (batch_pspecs, cache_pspecs, get_mesh,
+                             param_pspecs, use_mesh)
 from ..models.api import ModelAPI
+from .sampling import SamplingParams, sample_token
+
+
+def _roundup64(n: int) -> int:
+    # round headroom up to limit recompiles across max_new values
+    return -(-n // 64) * 64
 
 
 @dataclasses.dataclass
 class ServeEngine:
     api: ModelAPI
     params: Any
-    kv_quant_bits: int = 32       # <32 enables KV-cache quantization
+    kv_quant_bits: int = 32       # 8 / 4 select the quantized-at-rest cache
 
     def __post_init__(self):
-        self._prefill = jax.jit(self.api.prefill,
-                                static_argnames=("extra_slots",))
-        self._decode = jax.jit(self.api.decode_step)
+        cfg = self.api.cfg
+        if self.kv_quant_bits < 32:
+            if self.kv_quant_bits not in (4, 8):
+                raise ValueError(f"kv_quant_bits must be 4, 8 or >=32, "
+                                 f"got {self.kv_quant_bits}")
+            if cfg.family == "ssm":
+                import warnings
+                warnings.warn(
+                    f"kv_quant_bits={self.kv_quant_bits} has no effect on "
+                    f"family 'ssm': recurrent state has no KV cache and "
+                    f"serves at full precision", stacklevel=2)
+            cfg = dataclasses.replace(cfg,
+                                      kv_cache_bits=self.kv_quant_bits)
+            self.api = ModelAPI(cfg)
+        self.mesh = get_mesh()
+        self._prefill_j = jax.jit(self.api.prefill,
+                                  static_argnames=("extra_slots",))
+        self._prefill_at_j = jax.jit(self.api.prefill_at)
+        self._decode_j = jax.jit(self.api.decode_step)
+        if self.mesh is not None:
+            self.params = self._place(self.params, param_pspecs)
 
-    def _maybe_quant_cache(self, state):
-        if self.kv_quant_bits >= 32:
-            return state
-        def q(x):
-            if isinstance(x, jnp.ndarray) and x.ndim >= 4:
-                return quantize_signed(x, self.kv_quant_bits)
-            return x
-        return jax.tree_util.tree_map(q, state)
+    # ---- sharding helpers -----------------------------------------------
+    def _place(self, tree, spec_fn, *args):
+        """device_put every leaf per its logical-rule PartitionSpec."""
+        with use_mesh(self.mesh):
+            specs = spec_fn(tree, *args)
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+            tree, specs)
 
-    def generate(self, batch: Dict[str, jnp.ndarray], max_new: int = 16,
-                 greedy: bool = True, key=None) -> jnp.ndarray:
-        """batch: prompt inputs per the model family. Returns (B, max_new)."""
-        # round headroom up to limit recompiles across max_new values
-        slots = -(-max_new // 64) * 64
-        logits, state = self._prefill(self.params, batch, extra_slots=slots)
-        state = self._maybe_quant_cache(state)
-        prompt_len = batch["tokens"].shape[1]
+    def _shard_inputs(self, batch):
+        return batch if self.mesh is None else self._place(batch,
+                                                           batch_pspecs)
+
+    def _shard_state(self, state, n_slots: int):
+        return state if self.mesh is None else \
+            self._place(state, cache_pspecs, n_slots)
+
+    # ---- core ops (scheduler building blocks) ---------------------------
+    def prefill(self, batch: Dict[str, jnp.ndarray], extra_slots: int = 0,
+                place_state: bool = True) -> tuple:
+        """Whole-prompt forward; returns (last-token logits, decode state).
+
+        ``place_state=False`` skips the mesh placement of the returned
+        state (for callers that reshape it first, e.g. the scheduler's
+        lazy broadcast init)."""
+        batch = self._shard_inputs(batch)
+        with use_mesh(self.mesh):
+            logits, state = self._prefill_j(self.params, batch,
+                                            extra_slots=extra_slots)
+        if place_state:
+            state = self._shard_state(state, batch["tokens"].shape[0])
+        return logits, state
+
+    def prefill_at(self, batch: Dict[str, jnp.ndarray], state: Any,
+                   slot) -> tuple:
+        """Insert a prompt into batch row ``slot`` of a live decode state."""
+        batch = self._shard_inputs(batch)
+        with use_mesh(self.mesh):
+            return self._prefill_at_j(self.params, batch, state, slot)
+
+    def decode(self, tokens: jnp.ndarray, state: Any, index) -> tuple:
+        """One decode step; ``index`` is a () or per-slot (B,) fill level."""
+        if self.mesh is not None:
+            put = self._shard_inputs({"tokens": tokens, "index": index})
+            tokens, index = put["tokens"], put["index"]
+        with use_mesh(self.mesh):
+            return self._decode_j(self.params, tokens, state, index)
+
+    def prompt_width(self, batch: Dict[str, jnp.ndarray]) -> int:
+        """Cache positions a prompt occupies (tokens + VLM vision prefix)."""
+        p = batch["tokens"].shape[1]
         if self.api.cfg.family == "vlm":
-            prompt_len += self.api.cfg.vision_tokens
-        b = batch["tokens"].shape[0]
-        outs: List[jnp.ndarray] = []
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        index = jnp.asarray(prompt_len, jnp.int32)
-        for i in range(max_new):
-            outs.append(tok[:, 0])
-            logits, state = self._decode(self.params, tok, state, index)
-            state = self._maybe_quant_cache(state)
+            p += self.api.cfg.vision_tokens
+        return p
+
+    # ---- one-shot API (static batch) ------------------------------------
+    def generate(self, batch: Dict[str, jnp.ndarray], max_new: int = 16,
+                 greedy: bool = True, key=None, temperature: float = 1.0,
+                 top_k: int = 0) -> jnp.ndarray:
+        """batch: prompt inputs per the model family. Returns (B, max_new).
+
+        ``greedy`` (or no ``key``) takes per-step argmax; otherwise tokens
+        are drawn at ``temperature`` over the ``top_k`` best logits."""
+        logits, state = self.prefill(batch, extra_slots=_roundup64(max_new))
+        prompt_len = self.prompt_width(batch)
+        sp = SamplingParams(temperature=temperature, top_k=top_k)
+
+        def pick(logits, key):
             if greedy or key is None:
-                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            else:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(sub, logits)[:, None].astype(
-                    jnp.int32)
+                return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            return sample_token(logits, sp, key)[:, None]
+
+        def split(key):
+            return jax.random.split(key) if key is not None else (None, None)
+
+        outs: List[jnp.ndarray] = []
+        key, sub = split(key)
+        tok = pick(logits, sub)       # first token sampled like the rest
+        outs.append(tok[:, 0])
+        index = jnp.asarray(prompt_len, jnp.int32)
+        for _ in range(max_new - 1):  # max_new-1 steps, like the scheduler
+            logits, state = self.decode(tok, state, index)
+            key, sub = split(key)
+            tok = pick(logits, sub)
+            outs.append(tok[:, 0])
             index = index + 1
         return jnp.stack(outs, axis=1)
+
+    # ---- request-level API ----------------------------------------------
+    def serve(self, requests, n_slots: int = 8,
+              max_len: Optional[int] = None):
+        """Run ``requests`` through a continuous-batching scheduler.
+
+        ``max_len`` (total per-slot cache width) defaults to the widest
+        request's prompt plus 64-rounded generation headroom — the same
+        rounding ``generate`` uses, so both paths compile identical decode
+        shapes.  Returns results in submission order."""
+        from .scheduler import Scheduler
+        if max_len is None:
+            max_len = max(self.prompt_width(r.inputs) +
+                          _roundup64(r.sampling.max_new_tokens)
+                          for r in requests)
+        sched = Scheduler(self, n_slots=n_slots, max_len=max_len)
+        return sched.run(requests)

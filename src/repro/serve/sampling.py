@@ -1,0 +1,66 @@
+"""Request-level serving types: sampling parameters, requests, results.
+
+The serving surface is request-oriented (vLLM-style): callers submit
+:class:`Request` objects carrying their own prompt tensors and
+:class:`SamplingParams`; the scheduler streams them through a fixed-capacity
+decode batch and hands back :class:`GenerationResult` per request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode controls.
+
+    ``temperature <= 0`` is greedy argmax (deterministic);  ``top_k > 0``
+    restricts sampling to the k highest-probability tokens.  ``eos_id``
+    retires the request early ('stop'); otherwise it runs to
+    ``max_new_tokens`` ('length')."""
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``inputs`` holds single-request prompt tensors with a leading batch dim
+    of 1 (``tokens`` (1, P) always; plus ``vision_embeds`` for VLMs or
+    ``frames`` for enc-dec).  ``arrival`` is the scheduler tick at which the
+    request becomes visible — the hook for staggered-admission tests and
+    trace-driven benchmarks."""
+    uid: int
+    inputs: Dict[str, jnp.ndarray]
+    sampling: SamplingParams = SamplingParams()
+    arrival: int = 0
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    uid: int
+    tokens: List[int]
+    finish_reason: str             # 'length' | 'stop'
+    prompt_len: int
+    admitted_tick: int             # tick the prompt entered the batch
+    finished_tick: int
+
+
+def sample_token(logits: jnp.ndarray, sp: SamplingParams, key) -> jnp.ndarray:
+    """Token(s) from (V,) or batched (..., V) logits under ``sp`` (greedy
+    when temperature<=0 or no key)."""
+    if sp.temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k > 0 and sp.top_k < l.shape[-1]:
+        kth = jnp.sort(l, axis=-1)[..., -sp.top_k, None]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    return jax.random.categorical(key, l).astype(jnp.int32)

@@ -1,0 +1,192 @@
+"""Slot-based continuous-batching scheduler.
+
+A fixed-capacity decode batch of ``n_slots`` rows; requests are admitted
+into free slots as they arrive (their prompt is prefilled INTO the live
+cache at that batch row via ``ModelAPI.prefill_at``), every live slot
+advances one token per tick through a single jitted decode step with a
+per-slot index vector, and slots retire on EOS / max-token budget, freeing
+the row for the next waiting request.  Rows are fully independent in
+attention (masked by each slot's own fill level), so a request's tokens are
+identical whether it runs one-shot or staggered through a live batch —
+tests/test_serving.py asserts this token-for-token.  (One exception:
+MoE models under capacity-dropping dispatch — ``GROUPED_IMPL['impl'] ==
+'capacity'`` — route parked rows' dummy tokens through the same expert
+capacity budget, which can perturb live rows; the constructor warns.  The
+default exact 'ragged' dispatch is row-independent.)
+
+Time is measured in scheduler *ticks* (one decode step per tick), which
+keeps admission order deterministic and lets tests/benchmarks replay
+staggered arrival traces exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sampling import GenerationResult, Request, sample_token
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Book-keeping for one live request occupying one batch row."""
+    req: Request
+    index: int                    # fill level: next cache write position
+    last_tok: int
+    generated: List[int]
+    admitted_tick: int
+
+    @property
+    def key(self):
+        return jax.random.PRNGKey(self.req.sampling.seed)
+
+
+class Scheduler:
+    """Continuous batching over a :class:`ServeEngine`.
+
+    ``max_len`` is the per-slot cache width; a request needs
+    ``prompt_width + max_new_tokens - 1 <= max_len`` positions.  The decode
+    state is created lazily on the first admission (the first prompt is
+    tiled across all rows so the state tree — cache layout, enc-dec
+    encoder buffer — comes straight from the model's own prefill)."""
+
+    def __init__(self, engine, n_slots: int = 8, max_len: int = 256):
+        self.engine = engine
+        self.n_slots = n_slots
+        self.max_len = max_len
+        cfg = engine.api.cfg
+        if cfg.n_experts:
+            from ..models.moe import GROUPED_IMPL
+            if GROUPED_IMPL["impl"] == "capacity":
+                import warnings
+                warnings.warn(
+                    "continuous batching with capacity-dropping MoE "
+                    "dispatch: parked slots' dummy tokens compete for "
+                    "expert capacity, so live requests may diverge from "
+                    "one-shot generate(); use GROUPED_IMPL['impl']="
+                    "'ragged' for exact parity", stacklevel=3)
+        self.state: Any = None
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self.waiting: List[Request] = []
+        self.tick = 0
+        self.results: Dict[int, GenerationResult] = {}
+
+    # ---- submission ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.uid in self.results or \
+                any(r.uid == req.uid for r in self.waiting) or \
+                any(s is not None and s.req.uid == req.uid
+                    for s in self.slots):
+            raise ValueError(f"duplicate request uid {req.uid}")
+        need = self.engine.prompt_width(req.inputs) + \
+            req.sampling.max_new_tokens - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.uid} needs {need} cache positions, "
+                f"scheduler max_len is {self.max_len}")
+        self.waiting.append(req)
+        self.waiting.sort(key=lambda r: r.arrival)
+
+    # ---- admission -------------------------------------------------------
+    def _first_token(self, slot: _Slot, logits_row) -> None:
+        sp = slot.req.sampling
+        key = jax.random.fold_in(slot.key, 0) if sp.temperature > 0 else None
+        tok = int(sample_token(logits_row, sp, key))
+        slot.generated.append(tok)
+        slot.last_tok = tok
+
+    def _admit_into(self, i: int, req: Request) -> None:
+        inputs = req.inputs
+        pw = self.engine.prompt_width(inputs)
+        if self.state is None:
+            # Lazy state init: prefill the first prompt ONCE at full cache
+            # width, then broadcast its state rows across all slots (rows
+            # are identical by construction, so this matches an n_slots-way
+            # tiled prefill at 1/n_slots the compute).
+            extra = self.max_len - pw
+            logits, sub = self.engine.prefill(inputs, extra_slots=extra,
+                                              place_state=False)
+            state = dict(sub)
+            state["cache"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    x, (x.shape[0], self.n_slots, *x.shape[2:])),
+                sub["cache"])
+            if "enc_out" in sub:
+                state["enc_out"] = jnp.broadcast_to(
+                    sub["enc_out"], (self.n_slots, *sub["enc_out"].shape[1:]))
+            self.state = self.engine._shard_state(state, self.n_slots)
+            row = logits[0]
+        else:
+            logits, self.state = self.engine.prefill_at(inputs, self.state,
+                                                        jnp.asarray(i))
+            row = logits[0]
+        slot = _Slot(req=req, index=pw, last_tok=0, generated=[],
+                     admitted_tick=self.tick)
+        self._first_token(slot, row)
+        self.slots[i] = slot
+        self._maybe_retire(i)
+
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if not self.waiting or self.waiting[0].arrival > self.tick:
+                return
+            if self.slots[i] is None:
+                self._admit_into(i, self.waiting.pop(0))
+
+    # ---- retirement ------------------------------------------------------
+    def _maybe_retire(self, i: int) -> None:
+        slot = self.slots[i]
+        sp = slot.req.sampling
+        stop = sp.eos_id is not None and slot.generated[-1] == sp.eos_id
+        length = len(slot.generated) >= sp.max_new_tokens
+        if stop or length:
+            self.results[slot.req.uid] = GenerationResult(
+                uid=slot.req.uid, tokens=list(slot.generated),
+                finish_reason="stop" if stop else "length",
+                prompt_len=slot.req.inputs["tokens"].shape[1],
+                admitted_tick=slot.admitted_tick,
+                finished_tick=self.tick)
+            self.slots[i] = None
+
+    # ---- one tick --------------------------------------------------------
+    def step(self) -> None:
+        """Admit what has arrived, then advance every live slot one token."""
+        self._admit()
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if live:
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            # parked rows write their (ignored) K/V at the last position,
+            # which stays masked by the row's fill level until overwritten
+            idx = np.full((self.n_slots,), self.max_len - 1, np.int32)
+            for i in live:
+                toks[i, 0] = self.slots[i].last_tok
+                idx[i] = self.slots[i].index
+            logits, self.state = self.engine.decode(
+                jnp.asarray(toks), self.state, jnp.asarray(idx))
+            lg = np.asarray(logits)       # one host transfer per tick
+            for i in live:
+                slot = self.slots[i]
+                sp = slot.req.sampling
+                if sp.temperature > 0:
+                    key = jax.random.fold_in(slot.key, len(slot.generated))
+                    tok = int(sample_token(jnp.asarray(lg[i]), sp, key))
+                else:
+                    tok = int(lg[i].argmax())
+                slot.generated.append(tok)
+                slot.last_tok = tok
+                slot.index += 1
+                self._maybe_retire(i)
+        self.tick += 1
+
+    # ---- drive to completion --------------------------------------------
+    def run(self, requests: List[Request]) -> List[GenerationResult]:
+        """Submit ``requests`` and tick until all have finished; results
+        come back in the order the requests were given."""
+        for r in requests:
+            self.submit(r)
+        while self.waiting or any(s is not None for s in self.slots):
+            self.step()
+        return [self.results[r.uid] for r in requests]

@@ -1,0 +1,256 @@
+"""Request-level serving tests.
+
+* continuous-batching parity: staggered requests through the scheduler are
+  token-identical to one-shot ``generate`` for decoder-only, VLM, and
+  enc-dec families (incl. quantized-at-rest caches and slot reuse);
+* KV bit-stability: a written slot's stored K/V never changes on later
+  decode steps (the old engine re-quantized the whole cache every step);
+* per-slot index vectors match the legacy scalar-index decode path;
+* int4 odd-K deployment packing round-trips through serving_compose;
+* sharded decode on a 2-device mesh matches single-device (subprocess:
+  the test session is pinned to one CPU device).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.models.api import build
+from repro.models.common import QuantConfig, make_weight
+from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve.deploy import serving_compose, to_serving_params
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _setup(arch, kv_bits=32, quant_mode="fake"):
+    cfg = REGISTRY[arch].tiny(dtype="float32").with_quant(
+        QuantConfig(mode=quant_mode, n_bits=8, act_bits=8))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, ServeEngine(api, params, kv_quant_bits=kv_bits)
+
+
+def _batch(cfg, b=4, p=8):
+    batch = {"tokens": jax.random.randint(
+        KEY, (b, p), 0, cfg.vocab).astype(jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.fold_in(KEY, 1),
+            (b, cfg.vision_tokens, cfg.d_model)) * 0.1
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(KEY, 1), (b, p, cfg.d_model)) * 0.1
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# continuous batching == one-shot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,kv_bits", [
+    ("phi3-mini-3.8b", 32), ("phi3-mini-3.8b", 8), ("phi3-mini-3.8b", 4),
+    ("qwen2-vl-2b", 32), ("qwen2-vl-2b", 8),
+    ("seamless-m4t-large-v2", 32), ("seamless-m4t-large-v2", 8),
+    ("granite-moe-3b-a800m", 32),   # exact 'ragged' dispatch (default)
+])
+def test_staggered_requests_match_oneshot(arch, kv_bits):
+    """Requests arriving mid-decode (with slot reuse: 3 slots, 4 requests)
+    must reproduce the static-batch greedy tokens exactly."""
+    cfg, eng = _setup(arch, kv_bits)
+    b, max_new = 4, 6
+    batch = _batch(cfg, b=b)
+    oneshot = np.asarray(eng.generate(batch, max_new=max_new))
+    reqs = [Request(uid=i,
+                    inputs={k: v[i:i + 1] for k, v in batch.items()},
+                    sampling=SamplingParams(max_new_tokens=max_new),
+                    arrival=2 * i)
+            for i in range(b)]
+    results = eng.serve(reqs, n_slots=3)
+    for i, r in enumerate(results):
+        assert r.tokens == oneshot[i].tolist(), f"slot-parity broke @req {i}"
+        assert r.finish_reason == "length"
+        assert r.admitted_tick >= reqs[i].arrival
+
+
+def test_eos_retirement_frees_slot():
+    """A request retiring on EOS frees its slot for a waiting request."""
+    cfg, eng = _setup("phi3-mini-3.8b")
+    batch = _batch(cfg, b=3)
+    oneshot = np.asarray(eng.generate(batch, max_new=8))
+    eos = int(oneshot[0, 2])                    # force an early stop on req 0
+    reqs = [Request(uid=i, inputs={"tokens": batch["tokens"][i:i + 1]},
+                    sampling=SamplingParams(
+                        max_new_tokens=8, eos_id=eos if i == 0 else None),
+                    arrival=i)
+            for i in range(3)]
+    results = eng.serve(reqs, n_slots=1)        # single slot: strict reuse
+    assert results[0].finish_reason == "stop"
+    assert results[0].tokens == oneshot[0, :3].tolist()
+    for i in (1, 2):
+        assert results[i].tokens == oneshot[i].tolist()
+        assert results[i].finish_reason == "length"
+
+
+def test_sampling_reproducible_and_respects_top_k():
+    cfg, eng = _setup("phi3-mini-3.8b")
+    batch = _batch(cfg, b=2)
+    sp = SamplingParams(max_new_tokens=6, temperature=0.7, top_k=5, seed=11)
+    reqs = [Request(uid=i, inputs={"tokens": batch["tokens"][i:i + 1]},
+                    sampling=sp) for i in range(2)]
+    r1 = eng.serve(list(reqs), n_slots=2)
+    r2 = eng.serve(list(reqs), n_slots=2)
+    for a, b_ in zip(r1, r2):
+        assert a.tokens == b_.tokens            # per-request seeded PRNG
+    greedy = eng.serve(
+        [Request(uid=0, inputs={"tokens": batch["tokens"][:1]},
+                 sampling=SamplingParams(max_new_tokens=6))], n_slots=1)
+    assert len(r1[0].tokens) == len(greedy[0].tokens) == 6
+
+
+# ---------------------------------------------------------------------------
+# quantized-at-rest cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_kv_cache_slots_bit_stable_across_decode(kv_bits):
+    """Regression for the old ``_maybe_quant_cache``: stored K/V (and
+    scales) of already-written positions must be bit-identical after any
+    number of subsequent decode steps — each slot is quantized once."""
+    cfg, eng = _setup("phi3-mini-3.8b", kv_bits)
+    p = 8
+    batch = _batch(cfg, b=2, p=p)
+    logits, state = eng.prefill(batch, extra_slots=8)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+    def written(s, upto):
+        c = s["cache"]
+        return {k: np.asarray(c[k][:, :, :upto]).copy()
+                for k in ("k", "v", "k_scale", "v_scale")}
+
+    snap = written(state, p)
+    assert state["cache"]["k"].dtype == (jnp.int8 if kv_bits == 8
+                                         else jnp.uint8)
+    for i in range(4):
+        logits, state = eng.decode(tok, state,
+                                   jnp.full((2,), p + i, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        assert np.isfinite(np.asarray(logits)).all()
+        after = written(state, p)
+        for name, ref in snap.items():
+            np.testing.assert_array_equal(
+                after[name], ref,
+                err_msg=f"{name} re-quantized at decode step {i}")
+
+
+def test_int8_kv_close_to_float_greedy():
+    cfg, eng32 = _setup("phi3-mini-3.8b", 32)
+    _, eng8 = _setup("phi3-mini-3.8b", 8)
+    batch = _batch(cfg, b=2)
+    out32 = np.asarray(eng32.generate(batch, max_new=8))
+    out8 = np.asarray(eng8.generate(batch, max_new=8))
+    assert (out32 == out8).mean() > 0.7
+
+
+# ---------------------------------------------------------------------------
+# per-slot index vector vs legacy scalar index
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "qwen2-vl-2b",
+                                  "seamless-m4t-large-v2", "zamba2-1.2b"])
+def test_vector_index_matches_scalar_decode(arch):
+    cfg, eng = _setup(arch)
+    api = eng.api
+    p, b = 8, 2
+    batch = _batch(cfg, b=b, p=p)
+    tv = cfg.vision_tokens if cfg.family == "vlm" else 0
+    logits, st_s = api.prefill(eng.params, batch, extra_slots=8)
+    st_v = jax.tree_util.tree_map(lambda x: x, st_s)
+    tok_s = tok_v = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for i in range(3):
+        lg_s, st_s = api.decode_step(eng.params, tok_s, st_s,
+                                     jnp.asarray(p + tv + i, jnp.int32))
+        lg_v, st_v = api.decode_step(eng.params, tok_v, st_v,
+                                     jnp.full((b,), p + tv + i, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
+        tok_s = jnp.argmax(lg_s, -1)[:, None].astype(jnp.int32)
+        tok_v = jnp.argmax(lg_v, -1)[:, None].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# deployment packing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["fake", "bitplane"])
+@pytest.mark.parametrize("k", [9, 16])
+def test_int4_pack_roundtrip_odd_and_even_k(mode, k):
+    """Nibble packing must handle odd block-padded K (regression: the old
+    interleave silently dropped the unpaired row) and round-trip through
+    serving_compose to the int8 path's values within int4 rescale error."""
+    qc = QuantConfig(mode=mode, n_bits=8, wb_rows=3, wb_cols=8)
+    w = make_weight(jax.random.PRNGKey(0), (k, 24), qc)
+    sw8 = to_serving_params({"w": w}, bits=8)["w"]
+    sw4 = to_serving_params({"w": w}, bits=4)["w"]
+    kp = -(-k // 3) * 3                         # block-padded K (wb_rows=3)
+    assert sw4.w_int.shape[-2] == (kp + 1) // 2
+    w8 = np.asarray(serving_compose(sw8, jnp.float32))
+    w4 = np.asarray(serving_compose(sw4, jnp.float32))
+    assert w8.shape == w4.shape == (k, 24)
+    scale = np.abs(w8).max() + 1e-9
+    assert np.abs(w8 - w4).max() / scale < 0.25
+
+
+# ---------------------------------------------------------------------------
+# sharded serving (2 host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import REGISTRY
+from repro.models.api import build
+from repro.models.common import QuantConfig
+from repro.dist.sharding import use_mesh
+from repro.launch.mesh import make_mesh
+from repro.serve import ServeEngine, Request, SamplingParams
+
+assert jax.device_count() == 2, jax.device_count()
+cfg = REGISTRY["phi3-mini-3.8b"].tiny(dtype="float32").with_quant(
+    QuantConfig(mode="fake", n_bits=8, act_bits=8))
+api = build(cfg)
+params = api.init(jax.random.PRNGKey(0))
+batch = {"tokens": jax.random.randint(
+    jax.random.PRNGKey(1), (4, 8), 0, cfg.vocab).astype(jnp.int32)}
+ref = np.asarray(ServeEngine(api, params, kv_quant_bits=8)
+                 .generate(batch, max_new=6))
+for shape in [(2, 1), (1, 2)]:
+    with use_mesh(make_mesh(shape, ("data", "model"))):
+        eng = ServeEngine(api, params, kv_quant_bits=8)
+        out = np.asarray(eng.generate(batch, max_new=6))
+        res = eng.serve(
+            [Request(uid=i, inputs={"tokens": batch["tokens"][i:i+1]},
+                     sampling=SamplingParams(max_new_tokens=6), arrival=i)
+             for i in range(4)], n_slots=4)
+    assert (out == ref).all(), shape
+    assert all(res[i].tokens == ref[i].tolist() for i in range(4)), shape
+print("SHARDED_OK")
+"""
+
+
+def test_sharded_decode_matches_single_device():
+    """Data- and model-sharded 2-device serving must emit the exact tokens
+    of the single-device engine (generate + scheduler paths)."""
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")] +
+                   sys.path))
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_OK" in out.stdout
