@@ -1,8 +1,16 @@
 """Kernel-level benchmark: HBM weight-bytes per layout + interpret-mode
 correctness timing.  Wall-clock on CPU interpret mode is NOT TPU time; the
-derived column (bytes/weight) is the roofline-relevant quantity."""
+derived column (bytes/weight) is the roofline-relevant quantity.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--out f.json]
+
+emits one JSON object (layout bytes + kernel timings) — the CI smoke step
+runs ``--quick`` so a kernel-backend regression fails fast.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import Dict, List
 
@@ -46,12 +54,12 @@ def layout_bytes(k: int = 1024, n: int = 1024, pruned_frac: float = 0.5
 
 
 def kernel_timings(m: int = 64, k: int = 512, n: int = 512) -> List[Dict]:
-    import dataclasses
     w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.05
     qt = requantize(from_float(w, 8, BlockingSpec(8, 128)))
     x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
     bl = to_bitplane_layout(qt)
     pk8 = to_packed_layout(qt, 8)
+    pk4 = to_packed_layout(qt, 4)
 
     def t(f, *a):
         f(*a)  # compile
@@ -66,6 +74,33 @@ def kernel_timings(m: int = 64, k: int = 512, n: int = 512) -> List[Dict]:
             lambda: bwq_dense_bitplane(x, bl)), 1)),
         dict(kernel="packed_matmul8(interp)", us=round(t(
             lambda: bwq_dense_packed(x, pk8)), 1)),
+        dict(kernel="packed_matmul4(interp)", us=round(t(
+            lambda: bwq_dense_packed(x, pk4)), 1)),
         dict(kernel="jnp_dense_ref", us=round(t(
             lambda: jax.jit(lambda: x @ w)()), 1)),
     ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes (CI smoke)")
+    ap.add_argument("--out", default=None, help="write JSON here")
+    args = ap.parse_args()
+    if args.quick:
+        layouts = layout_bytes(k=256, n=256)
+        timings = kernel_timings(m=16, k=256, n=256)
+    else:
+        layouts = layout_bytes()
+        timings = kernel_timings()
+    result = {"layout_bytes": layouts, "kernel_timings": timings,
+              "note": "interpret-mode wall-clock is not TPU time; "
+                      "bytes_per_weight is the roofline column"}
+    print(json.dumps(result, indent=2), flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

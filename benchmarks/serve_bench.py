@@ -1,5 +1,12 @@
 """Serving throughput benchmark: prefill + decode tokens/sec across
-batch sizes and KV-cache precisions, JSON output.
+batch sizes, KV-cache precisions and matmul execution backends, JSON
+output.
+
+``--backend {dense,pallas,ref}`` selects how deployed packed weights
+execute (models.common.qmatmul); every row also reports the per-step HBM
+weight-bytes the backend streams, so the roofline column stays comparable
+across backends — on CPU the wall-clock of interpret-mode pallas is NOT
+TPU time, the bytes column is the transferable quantity.
 
 Also times the OLD engine's per-step whole-tree requantization (the
 pre-redesign ``_maybe_quant_cache`` behavior, reproduced inline) against
@@ -9,6 +16,7 @@ replaces O(cache) requant work per token with a one-time write-side
 rounding.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--out f.json]
+        [--backend pallas] [--deploy-bits 8]
 """
 from __future__ import annotations
 
@@ -24,6 +32,8 @@ from repro.core.pact import quantize_signed
 from repro.models.api import build
 from repro.models.common import QuantConfig
 from repro.serve import ServeEngine
+from repro.serve.deploy import (default_deploy_bits, to_serving_params,
+                                weight_stream_bytes)
 
 
 def _sync(tree):
@@ -41,9 +51,9 @@ def _bench(fn, iters: int):
 
 def bench_point(api, params, batch_size: int, kv_bits: int,
                 prompt_len: int = 32, decode_steps: int = 8,
-                iters: int = 3) -> dict:
+                iters: int = 3, backend: str = "dense") -> dict:
     cfg = api.cfg
-    eng = ServeEngine(api, params, kv_quant_bits=kv_bits)
+    eng = ServeEngine(api, params, kv_quant_bits=kv_bits, backend=backend)
     batch = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (batch_size, prompt_len), 0,
         cfg.vocab).astype(jnp.int32)}
@@ -63,20 +73,27 @@ def bench_point(api, params, batch_size: int, kv_bits: int,
     return {
         "batch": batch_size,
         "kv_bits": kv_bits,
+        "backend": backend,
         "prompt_len": prompt_len,
         "prefill_tokens_per_s": batch_size * prompt_len / t_prefill,
         "decode_tokens_per_s": batch_size / t_decode,
         "prefill_ms": t_prefill * 1e3,
         "decode_step_ms": t_decode * 1e3,
+        # every decode step streams the full weight state once; this is
+        # the roofline-relevant column that stays comparable across
+        # backends (interpret-mode wall-clock is not TPU time)
+        "weight_bytes_per_step": weight_stream_bytes(params),
     }
 
 
 def bench_legacy_requant(api, params, batch_size: int,
                          prompt_len: int = 32, decode_steps: int = 8,
-                         iters: int = 3) -> dict:
+                         iters: int = 3, backend: str = "dense") -> dict:
     """The pre-redesign path: float cache + whole-tree re-quantization of
-    every >=4-dim leaf after each decode step."""
-    eng = ServeEngine(api, params, kv_quant_bits=32)
+    every >=4-dim leaf after each decode step.  Runs on the same matmul
+    backend as the at-rest rows so the speedup summary compares cache
+    strategies, not backends."""
+    eng = ServeEngine(api, params, kv_quant_bits=32, backend=backend)
     batch = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (batch_size, prompt_len), 0,
         api.cfg.vocab).astype(jnp.int32)}
@@ -102,6 +119,7 @@ def bench_legacy_requant(api, params, batch_size: int,
     return {
         "batch": batch_size,
         "kv_bits": "legacy-requant-8",
+        "backend": backend,
         "prompt_len": prompt_len,
         "decode_tokens_per_s": batch_size / t_decode,
         "decode_step_ms": t_decode * 1e3,
@@ -114,12 +132,22 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="single small point (CI smoke)")
     ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--backend", default="dense",
+                    choices=["dense", "pallas", "ref"],
+                    help="matmul execution backend (pallas/ref imply "
+                         "--deploy-bits 8 unless set)")
+    ap.add_argument("--deploy-bits", type=int, default=0, choices=[0, 4, 8],
+                    help="pack weights to int8/int4 serving form first "
+                         "(0 = QAT weights)")
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch].tiny(dtype="float32").with_quant(
         QuantConfig(mode="fake", n_bits=8, act_bits=8))
     api = build(cfg)
     params = api.init(jax.random.PRNGKey(0))
+    args.deploy_bits = default_deploy_bits(args.backend, args.deploy_bits)
+    if args.deploy_bits:
+        params = to_serving_params(params, args.deploy_bits)
 
     # the requant-vs-at-rest comparison is only meaningful once the cache
     # dominates the step (batch >= 8), so quick mode benches there too
@@ -128,11 +156,13 @@ def main():
     rows = []
     for b in batches:
         for bits in kv_bits:
-            rows.append(bench_point(api, params, b, bits))
+            rows.append(bench_point(api, params, b, bits,
+                                    backend=args.backend))
             print(json.dumps(rows[-1]), flush=True)
-    # legacy comparison at the largest batch
+    # legacy comparison at the largest batch (same backend: the summary
+    # isolates the cache strategy, not the matmul execution path)
     b_cmp = batches[-1]
-    legacy = bench_legacy_requant(api, params, b_cmp)
+    legacy = bench_legacy_requant(api, params, b_cmp, backend=args.backend)
     rows.append(legacy)
     print(json.dumps(legacy), flush=True)
     at_rest = next(r for r in rows

@@ -1,9 +1,12 @@
-"""Serve a BWQ-quantized model two ways:
+"""Serve a BWQ-quantized model three ways:
 
 * one-shot static-batch greedy decoding with a quantized-at-rest KV cache
   (int8 / nibble-packed int4 entries, written once, dequantized in-graph);
 * request-level continuous batching — staggered arrivals stream through a
-  fixed-capacity slot batch and still decode token-identically.
+  fixed-capacity slot batch and still decode token-identically;
+* deployed packed weights on the ``pallas`` execution backend — matmuls
+  run on the compressed int8 representation (interpret mode on CPU) and
+  emit the same greedy tokens as the dense dequant path.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -14,6 +17,7 @@ from repro.configs import REGISTRY
 from repro.models.api import build
 from repro.models.common import QuantConfig
 from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve.deploy import to_serving_params
 
 cfg = REGISTRY["phi3-mini-3.8b"].tiny(dtype="float32").with_quant(
     QuantConfig(mode="bitplane", n_bits=8, act_bits=8))
@@ -40,3 +44,10 @@ requests = [
 for r in eng.serve(requests, n_slots=2):
     print(f"req {r.uid}: admitted@{r.admitted_tick} done@{r.finished_tick} "
           f"({r.finish_reason}) {r.tokens}")
+
+# deployed packed weights: dense dequant vs the Pallas packed kernel
+packed = to_serving_params(params, bits=8)
+for backend in ("dense", "pallas"):
+    eng = ServeEngine(api, packed, kv_quant_bits=8, backend=backend)
+    out = eng.generate({"tokens": prompts[:2]}, max_new=8)
+    print(f"backend={backend:6s} ->", out[0].tolist())

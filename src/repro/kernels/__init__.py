@@ -7,6 +7,7 @@ pact_quant      — fused symmetric PACT clip + quantize
 from .bitplane_matmul import bitplane_matmul
 from .packed_matmul import packed_matmul
 from .pact_kernel import pact_quant_pallas
+from .pallas_utils import default_interpret, resolve_interpret
 from .ops import (BitplaneLayout, PackedLayout, bwq_dense_bitplane,
                   bwq_dense_packed, to_bitplane_layout, to_packed_layout)
 from . import ref

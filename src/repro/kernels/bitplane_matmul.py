@@ -15,22 +15,13 @@ sublane/lane-aligned broadcast (TPU-native WB geometry 8x128; the paper's
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _fit(pref: int, total: int, multiple: int) -> int:
-    """Largest block <= pref that divides total and is a multiple-multiple."""
-    best = multiple
-    d = multiple
-    while d <= min(pref, total):
-        if total % d == 0:
-            best = d
-        d += multiple
-    return best
+from .pallas_utils import fit_block, pad_dim, resolve_interpret, round_up
 
 
 def _kernel(x_ref, planes_ref, sign_ref, mask_ref, scale_ref, o_ref, *,
@@ -68,23 +59,35 @@ def _kernel(x_ref, planes_ref, sign_ref, mask_ref, scale_ref, o_ref, *,
 def bitplane_matmul(x, planes_packed, sign_packed, mask, scale, *,
                     n_bits: int = 8, wbr: int = 8, wbc: int = 128,
                     block_m: int = 128, block_n: int = 256,
-                    block_k: int = 512, interpret: bool = True):
+                    block_k: int = 512, interpret: bool | None = None):
     """y[M,N] = x[M,K] @ compose(planes, sign, mask, scale).
 
     planes_packed: (n_bits, K//8, N) uint8; sign_packed: (K//8, N) uint8;
-    mask: (n_bits, K//wbr, N//wbc); scale: (1,) f32 per-layer.
+    mask: (n_bits, K//wbr, N//wbc); scale: (1,) f32 per-layer.  M/K/N that
+    do not divide the tile sizes are zero-padded up to tile multiples and
+    the output trimmed back.  ``interpret=None`` auto-selects interpret
+    mode off-TPU.
     """
+    interpret = resolve_interpret(interpret)
     m, k = x.shape
     n = planes_packed.shape[-1]
-    block_m = _fit(block_m, m, 1)
-    block_n = _fit(block_n, n, wbc)
-    block_k = _fit(block_k, k, max(8, wbr))
-    assert k % block_k == 0 and n % block_n == 0 and m % block_m == 0
-    grid = (m // block_m, n // block_n, k // block_k)
+    unit_k = math.lcm(8, wbr)          # bit-packing rows AND WB rows align
+    kp = round_up(k, unit_k)
+    np_ = round_up(n, wbc)
+    mp = round_up(m, 8)
+    x = pad_dim(pad_dim(x, 1, kp), 0, mp)
+    planes_packed = pad_dim(pad_dim(planes_packed, 1, kp // 8), 2, np_)
+    sign_packed = pad_dim(pad_dim(sign_packed, 0, kp // 8), 1, np_)
+    mask = pad_dim(pad_dim(mask, 1, kp // wbr), 2, np_ // wbc)
+
+    block_m = fit_block(min(block_m, mp), mp, 8)
+    block_n = fit_block(min(block_n, np_), np_, wbc)
+    block_k = fit_block(min(block_k, kp), kp, unit_k)
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
 
     kern = functools.partial(_kernel, n_bits=n_bits, wbr=wbr, wbc=wbc,
                              block_k=block_k)
-    return pl.pallas_call(
+    y = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
@@ -97,6 +100,7 @@ def bitplane_matmul(x, planes_packed, sign_packed, mask, scale, *,
             pl.BlockSpec((1,), lambda i, j, kk: (0,)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
     )(x, planes_packed, sign_packed, mask, scale)
+    return y[:m, :n]

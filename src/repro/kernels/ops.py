@@ -3,6 +3,32 @@
 ``to_bitplane_layout`` / ``to_packed_layout`` convert a trained
 QuantizedTensor (after requantization) into the deployment tensors the
 Pallas kernels consume; ``bwq_dense_*`` are drop-in y = x @ W ops.
+
+PackedLayout / ServingWeight contract
+-------------------------------------
+:class:`PackedLayout` is the kernel-facing view of one packed matrix and
+:class:`repro.serve.deploy.ServingWeight` is the same wire format carried
+inside a model param tree (plus the true, unpadded ``shape``).  Both obey:
+
+* geometry comes from the per-WB ``scale`` grid — Kp = GR * wbr rows and
+  Np = GC * wbc cols of *block-padded* weight; a ServingWeight's true
+  (K, N) = ``shape[-2:]`` satisfies K <= Kp, N <= Np and the padded tail
+  is exact zeros;
+* ``w_int`` stores int8 rows directly, or int4 two's-complement nibble
+  pairs packed along K (row 2j in the low nibble).  An odd Kp packs one
+  trailing zero row so ``w_int`` has ceil(Kp/2) byte rows;
+* ``scale`` is the per-WB *effective* scale: blocks whose live bit-width
+  exceeds the container are power-of-two rescaled at pack time with the
+  factor folded into their scale entry, so ``dequant = w_int * scale``
+  reproduces every block at its own effective bit-width exactly (BWQ's
+  mixed precision stays visible to the kernel — nothing is flattened to
+  uniform int8);
+* dequantization is therefore always ``expand_block_map(scale) * w_int``
+  followed by trimming to the true (K, N).
+
+``serve.deploy.serving_to_packed_layout`` adapts a ServingWeight leaf to a
+PackedLayout with no copy; ``models.common.qmatmul`` is the call site that
+routes model matmuls here.
 """
 from __future__ import annotations
 
@@ -88,13 +114,16 @@ def to_packed_layout(qt: QuantizedTensor, bits: int = 8) -> PackedLayout:
     raise ValueError(bits)
 
 
-def bwq_dense_bitplane(x, layout: BitplaneLayout, interpret: bool = True):
+def bwq_dense_bitplane(x, layout: BitplaneLayout,
+                       interpret: bool | None = None):
+    """y = x @ W from the bit-plane layout (interpret auto-detected)."""
     return bitplane_matmul(x, layout.planes_packed, layout.sign_packed,
                            layout.mask, layout.scale, n_bits=layout.n_bits,
                            wbr=layout.wbr, wbc=layout.wbc,
                            interpret=interpret)
 
 
-def bwq_dense_packed(x, layout: PackedLayout, interpret: bool = True):
+def bwq_dense_packed(x, layout: PackedLayout, interpret: bool | None = None):
+    """y = x @ W from the packed-integer layout (interpret auto-detected)."""
     return packed_matmul(x, layout.w_int, layout.scale, bits=layout.bits,
                          wbr=layout.wbr, wbc=layout.wbc, interpret=interpret)

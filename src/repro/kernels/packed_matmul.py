@@ -5,6 +5,12 @@ a per-WB scale — this is what serving reads from HBM.  The kernel streams
 the packed tile, dequantizes in VMEM (nibble unpack + per-block scale
 broadcast) and performs a single MXU matmul.  HBM weight traffic drops 2x
 (int8) / 4x (int4) vs bf16 — the roofline lever for decode shapes.
+
+Geometry is defined by the per-WB scale grid: K = scale.shape[0] * wbr and
+N = scale.shape[1] * wbc.  Operands that do not divide the tile sizes are
+zero-padded up to tile multiples and the output is trimmed back — this
+covers decode-shaped M in 1..16, ragged K/N, and the int4 odd-block-padded
+K case (an extra zero WB row absorbs the unpaired nibble).
 """
 from __future__ import annotations
 
@@ -13,6 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .pallas_utils import fit_block, pad_dim, resolve_interpret, round_up
 
 
 def _kernel8(x_ref, w_ref, s_ref, o_ref, *, wbr, wbc):
@@ -52,24 +60,46 @@ def _kernel4(x_ref, w_ref, s_ref, o_ref, *, wbr, wbc, block_k):
                                              "interpret"))
 def packed_matmul(x, w_int, scale, *, bits: int = 8, wbr: int = 8,
                   wbc: int = 128, block_m: int = 128, block_n: int = 256,
-                  block_k: int = 512, interpret: bool = True):
-    """y[M,N] = x[M,K] @ (dequant(w_int) * per-WB scale).
+                  block_k: int = 512, interpret: bool | None = None):
+    """y[M, N] = x[M, K] @ (dequant(w_int) * per-WB scale).
 
-    int8: w_int (K, N) int8.  int4: w_int (K//2, N) uint8 (row 2j low nibble).
-    scale: (K//wbr, N//wbc) f32.
+    int8: w_int (K, N) int8.  int4: w_int (ceil(K/2), N) uint8 (row 2j in
+    the low nibble; an odd K carries one zero pad row in the last byte).
+    scale: (K//wbr, N//wbc) f32.  x may have fewer than K columns (the
+    unpadded true fan-in); the missing columns multiply zero-padded weight
+    rows and are zero-filled here.  ``interpret=None`` auto-selects
+    interpret mode off-TPU.
     """
-    from .bitplane_matmul import _fit
-    m, k = x.shape
-    n = w_int.shape[-1]
-    block_m = _fit(block_m, m, 1)
-    block_n = _fit(block_n, n, wbc)
-    block_k = _fit(block_k, k, max(2, wbr))
-    assert k % block_k == 0 and n % block_n == 0 and m % block_m == 0
-    grid = (m // block_m, n // block_n, k // block_k)
+    interpret = resolve_interpret(interpret)
+    m, k_x = x.shape
+    gr, gc = scale.shape
+    k, n = gr * wbr, gc * wbc
+    if k_x > k or w_int.shape[-1] != n:
+        raise ValueError(f"operand geometry mismatch: x K={k_x}, "
+                         f"scale grid K={k} N={n}, w N={w_int.shape[-1]}")
+
+    # pad K up to a tile unit that is both a WB-row multiple and (for int4)
+    # an even row count, so nibble unpacking never straddles a tile edge
+    unit_k = wbr if (bits == 8 or wbr % 2 == 0) else 2 * wbr
+    kp = round_up(k, unit_k)
+    mp = round_up(m, 8)            # decode-shaped M (1..16) pads to one tile
+    x = pad_dim(pad_dim(x, 1, kp), 0, mp)
+    scale = pad_dim(scale, 0, kp // wbr)
+    if bits == 8:
+        w_int = pad_dim(w_int, 0, kp)
+    elif bits == 4:
+        w_int = pad_dim(w_int, 0, kp // 2)
+    else:
+        raise ValueError(bits)
+
+    block_m = fit_block(min(block_m, mp), mp, 8)
+    block_n = fit_block(min(block_n, n), n, wbc)
+    block_k = fit_block(min(block_k, kp), kp, unit_k)
+    grid = (mp // block_m, n // block_n, kp // block_k)
     common = dict(
         grid=grid,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
         interpret=interpret,
     )
     s_spec = pl.BlockSpec((block_k // wbr, block_n // wbc),
@@ -78,11 +108,10 @@ def packed_matmul(x, w_int, scale, *, bits: int = 8, wbr: int = 8,
     if bits == 8:
         kern = functools.partial(_kernel8, wbr=wbr, wbc=wbc)
         w_spec = pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j))
-    elif bits == 4:
+    else:
         kern = functools.partial(_kernel4, wbr=wbr, wbc=wbc, block_k=block_k)
         w_spec = pl.BlockSpec((block_k // 2, block_n),
                               lambda i, j, kk: (kk, j))
-    else:
-        raise ValueError(bits)
-    return pl.pallas_call(kern, in_specs=[x_spec, w_spec, s_spec],
-                          **common)(x, w_int, scale)
+    y = pl.pallas_call(kern, in_specs=[x_spec, w_spec, s_spec],
+                       **common)(x, w_int, scale)
+    return y[:m]

@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .pallas_utils import fit_block, pad_dim, resolve_interpret, round_up
+
 
 def _kernel(x_ref, beta_ref, o_ref, *, act_bits: int):
     x = x_ref[...]
@@ -23,17 +25,23 @@ def _kernel(x_ref, beta_ref, o_ref, *, act_bits: int):
 @functools.partial(jax.jit, static_argnames=("act_bits", "block_rows",
                                              "interpret"))
 def pact_quant_pallas(x, beta, *, act_bits: int = 8, block_rows: int = 256,
-                      interpret: bool = True):
-    """x: (R, C) any float dtype; beta: (1,) clip level."""
+                      interpret: bool | None = None):
+    """x: (R, C) any float dtype; beta: (1,) clip level.
+
+    Rows that do not divide ``block_rows`` are padded and trimmed back;
+    ``interpret=None`` auto-selects interpret mode off-TPU."""
+    interpret = resolve_interpret(interpret)
     r, c = x.shape
-    block_rows = min(block_rows, r)
-    assert r % block_rows == 0
-    return pl.pallas_call(
+    rp = round_up(r, 8)
+    block_rows = fit_block(min(block_rows, rp), rp, 8)
+    x = pad_dim(x, 0, rp)
+    y = pl.pallas_call(
         functools.partial(_kernel, act_bits=act_bits),
-        grid=(r // block_rows,),
+        grid=(rp // block_rows,),
         in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
                   pl.BlockSpec((1,), lambda i: (0,))],
         out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((rp, c), x.dtype),
         interpret=interpret,
     )(x, beta)
+    return y[:r]

@@ -1,0 +1,50 @@
+"""Shared helpers for the Pallas kernels: platform-aware interpret default
+and pad-and-trim tiling geometry.
+
+Every kernel entry point takes ``interpret=None`` and resolves it here, so
+the same call site runs compiled on TPU and interpreted everywhere else
+(CPU CI, tests, notebooks) without the caller threading a platform flag.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas kernels everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def round_up(x: int, multiple: int) -> int:
+    return -(-x // multiple) * multiple
+
+
+def fit_block(pref: int, total: int, multiple: int) -> int:
+    """Largest block <= pref that divides total and is a multiple-multiple.
+
+    ``total`` must itself be a multiple of ``multiple`` (the pad-and-trim
+    wrappers guarantee this), so a valid block always exists.
+    """
+    best = multiple
+    d = multiple
+    while d <= min(pref, total):
+        if total % d == 0:
+            best = d
+        d += multiple
+    return best
+
+
+def pad_dim(a: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    """Zero-pad ``a`` along ``axis`` up to length ``target`` (no-op if
+    already there)."""
+    cur = a.shape[axis]
+    if cur == target:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, target - cur)
+    return jnp.pad(a, pad)

@@ -57,7 +57,11 @@ def bitplane_matmul_ref(x, planes_packed, sign_packed, mask, scale,
 def packed_matmul_ref(x, w_int, scale, bits: int = 8,
                       wbr: int = 8, wbc: int = 128,
                       out_dtype=jnp.float32) -> jnp.ndarray:
-    """y = x @ (dequant(w_int) * per-block scale)."""
+    """y = x @ (dequant(w_int) * per-block scale).
+
+    Shares the kernel's geometry contract: K/N come from the scale grid;
+    an int4 odd block-padded K carries one zero pad row in the last byte
+    (trimmed here), and x may have fewer than K columns (zero-filled)."""
     if bits == 8:
         w = w_int.astype(jnp.float32)
     elif bits == 4:
@@ -71,6 +75,9 @@ def packed_matmul_ref(x, w_int, scale, bits: int = 8,
     else:
         raise ValueError(bits)
     s = expand_mask(scale, wbr, wbc)
+    w = w[:s.shape[0]]
+    if x.shape[-1] < s.shape[0]:
+        x = jnp.pad(x, ((0, 0), (0, s.shape[0] - x.shape[-1])))
     return (x.astype(jnp.float32) @ (w * s)).astype(out_dtype)
 
 

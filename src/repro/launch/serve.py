@@ -15,7 +15,7 @@ from ..configs import REGISTRY
 from ..models.api import build
 from ..models.common import QuantConfig
 from ..serve import Request, SamplingParams, ServeEngine
-from ..serve.deploy import to_serving_params
+from ..serve.deploy import default_deploy_bits, to_serving_params
 
 
 def _prompts(cfg, args):
@@ -42,6 +42,10 @@ def main():
                     choices=[0, 4, 8], help="0 = QAT weights")
     ap.add_argument("--kv-bits", type=int, default=32, choices=[4, 8, 32],
                     help="quantized-at-rest KV cache precision")
+    ap.add_argument("--backend", default="dense",
+                    choices=["dense", "pallas", "ref"],
+                    help="matmul execution backend for deployed weights "
+                         "(pallas/ref imply --deploy-bits 8 unless set)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -66,11 +70,13 @@ def main():
     cfg = cfg.with_quant(QuantConfig(mode="fake", n_bits=8, act_bits=8))
     api = build(cfg)
     params = api.init(jax.random.PRNGKey(0))
+    args.deploy_bits = default_deploy_bits(args.backend, args.deploy_bits)
     if args.deploy_bits:
         params = to_serving_params(params, args.deploy_bits)
         print(f"deployed: packed int{args.deploy_bits} serving weights")
 
-    eng = ServeEngine(api, params, kv_quant_bits=args.kv_bits)
+    eng = ServeEngine(api, params, kv_quant_bits=args.kv_bits,
+                      backend=args.backend)
     batch = _prompts(cfg, args)
 
     if args.requests:

@@ -1,1 +1,2 @@
-from .common import QuantConfig, materialize, rms_norm
+from .common import (QuantConfig, materialize, matmul_backend,
+                     prepare_params, qdense, qmatmul, rms_norm)

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from ..core.quantize import pack_int4, unpack_int4
 from ..dist.sharding import constraint
+from .common import qmatmul
 from .common import softcap as _softcap
 from .rope import apply_rope, mrope_angles, rope_angles
 
@@ -225,9 +226,13 @@ def attn_forward(p: Dict, x: jnp.ndarray, positions: jnp.ndarray, *,
     cache (decode / incremental prefill).  ``x_kv`` enables cross-attention.
     """
     xk_src = x_kv if x_kv is not None else x
-    q = x @ p["wq"] + p.get("bq", 0.0) if "bq" in p else x @ p["wq"]
-    k = xk_src @ p["wk"] + p.get("bk", 0.0) if "bk" in p else xk_src @ p["wk"]
-    v = xk_src @ p["wv"] + p.get("bv", 0.0) if "bv" in p else xk_src @ p["wv"]
+    q = qmatmul(x, p["wq"])
+    k = qmatmul(xk_src, p["wk"])
+    v = qmatmul(xk_src, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
     q = _split_heads(q, n_heads, d_head)
     k = _split_heads(k, n_kv, d_head)
     v = _split_heads(v, n_kv, d_head)
@@ -284,4 +289,4 @@ def attn_forward(p: Dict, x: jnp.ndarray, positions: jnp.ndarray, *,
                          window=window, attn_softcap=attn_softcap,
                          kv_len=kv_len)
     out = out.reshape(*x.shape[:-1], n_heads * d_head)
-    return out @ p["wo"], new_cache
+    return qmatmul(out, p["wo"]), new_cache

@@ -14,10 +14,10 @@ from typing import Any, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.bitrep import QuantizedTensor, compose, from_float
-from ..core.fakequant import FakeQuantTensor, fq_compose, fq_from_float
+from ..core.bitrep import QuantizedTensor, from_float
+from ..core.fakequant import FakeQuantTensor, fq_from_float
 from ..core.pact import pact_quant
-from .common import QuantConfig
+from .common import QuantConfig, qdense, qmatmul
 
 
 @jax.tree_util.register_static
@@ -44,19 +44,26 @@ def conv_init(key, c_in: int, c_out: int, k: int, qc: QuantConfig):
 
 def conv_apply(p: Dict, x: jnp.ndarray, stride: int = 1,
                act_beta=None, qc: QuantConfig | None = None) -> jnp.ndarray:
-    """x: (B, H, W, C_in) NHWC."""
+    """x: (B, H, W, C_in) NHWC.
+
+    Packed serving weights take the im2col path: input patches are
+    extracted in the (C_in, kh, kw) order of the CSP-flattened 2-D weight
+    — exactly the layout the paper blocks into WBs — and pushed through
+    ``qmatmul``, so a deployed conv executes on the compressed
+    representation.  QAT / plain weights keep the fused lax conv."""
+    from ..serve.deploy import ServingWeight
     meta = p["meta"]
     wq = p["qt"]
-    if isinstance(wq, QuantizedTensor):
-        w2d = compose(wq)
-    elif isinstance(wq, FakeQuantTensor):
-        w2d = fq_compose(wq)
-    else:
-        w2d = wq
-    w = w2d.reshape(meta.c_in, meta.k, meta.k, meta.c_out)
-    w = jnp.transpose(w, (1, 2, 0, 3))               # HWIO
     if act_beta is not None and qc is not None and qc.act_bits < 32:
         x = pact_quant(x, act_beta, qc.act_bits)     # paper PACT (post-ReLU)
+    if isinstance(wq, ServingWeight):
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (meta.k, meta.k), (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return qmatmul(patches, wq)
+    w2d = qdense(wq)
+    w = w2d.reshape(meta.c_in, meta.k, meta.k, meta.c_out)
+    w = jnp.transpose(w, (1, 2, 0, 3))               # HWIO
     return jax.lax.conv_general_dilated(
         x, w, (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))

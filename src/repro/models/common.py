@@ -1,13 +1,31 @@
-"""Shared building blocks: quantizable Dense, norms, embeddings.
+"""Shared building blocks: quantizable Dense, norms, embeddings — and the
+quantized-linear dispatch layer.
 
 Params are plain nested dicts.  Weight matrices may be stored as
 ``QuantizedTensor`` (paper-faithful bit planes), ``FakeQuantTensor``
-(memory-scalable BWQ mode) or raw arrays; ``materialize`` converts a whole
-param tree to plain weights once per step (outside the layer scan) so the
-layer code only ever sees arrays.
+(memory-scalable BWQ mode), ``ServingWeight`` (deployed packed integers)
+or raw arrays.  Layer code never dequantizes a weight itself: every
+``x @ W`` goes through :func:`qmatmul`, which dispatches on the weight
+representation and the active execution backend:
+
+* ``dense``  — dequantize the leaf in-graph and run a plain ``jnp`` dot
+  (works for every representation; the only backend that training uses);
+* ``pallas`` — stream the packed ServingWeight through the Pallas
+  ``packed_matmul`` kernel (interpret mode off-TPU), so the compiled
+  program never holds a dequantized weight;
+* ``ref``    — the pure-jnp kernel oracle (``kernels/ref.py``), bit-exact
+  with ``pallas`` and useful for cross-checking.
+
+The backend is selected per call (``backend=``), or ambiently with
+``matmul_backend("pallas")`` — the serving engine wraps its jitted
+prefill/decode in that context.  ``prepare_params`` is the once-per-step
+tree prep (cast plain floats, compose bit-plane tensors that cannot ride a
+layer scan); packed representations stay packed until qmatmul consumes
+them one layer at a time inside the scan.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Dict, Optional
 
@@ -18,6 +36,26 @@ from ..core.bitrep import QuantizedTensor, compose, from_float
 from ..core.blocking import BlockingSpec
 from ..core.fakequant import FakeQuantTensor, fq_compose, fq_from_float
 from ..core.pact import pact_sym_quant
+
+MATMUL_BACKENDS = ("dense", "pallas", "ref")
+_BACKEND_STACK = ["dense"]
+
+
+@contextlib.contextmanager
+def matmul_backend(name: str):
+    """Ambient execution backend for :func:`qmatmul` (trace-time)."""
+    if name not in MATMUL_BACKENDS:
+        raise ValueError(f"unknown matmul backend {name!r}; "
+                         f"choose from {MATMUL_BACKENDS}")
+    _BACKEND_STACK.append(name)
+    try:
+        yield
+    finally:
+        _BACKEND_STACK.pop()
+
+
+def current_matmul_backend() -> str:
+    return _BACKEND_STACK[-1]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,7 +102,11 @@ def _is_quant(x) -> bool:
 
 
 def materialize(params: Any, dtype=None) -> Any:
-    """Quantized leaves -> plain weight arrays (done once, pre-scan)."""
+    """Quantized leaves -> plain weight arrays (whole-tree dequant).
+
+    Retained for offline tooling (checkpoint export, analysis); the model
+    forward paths use :func:`prepare_params` + :func:`qmatmul` instead and
+    never materialize a whole tree per step."""
     from ..serve.deploy import ServingWeight, serving_compose
 
     def conv(x):
@@ -74,6 +116,84 @@ def materialize(params: Any, dtype=None) -> Any:
             return fq_compose(x, dtype)
         if isinstance(x, ServingWeight):
             return serving_compose(x, dtype or jnp.bfloat16)
+        if dtype is not None and isinstance(x, jnp.ndarray) \
+                and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(conv, params, is_leaf=_is_quant)
+
+
+def qdense(w: Any, dtype=None) -> jnp.ndarray:
+    """Dequantize ONE weight leaf to a plain array (the dense backend).
+
+    The only sanctioned dequantization entry point outside ``kernels/``:
+    call sites that genuinely need a dense weight (ragged MoE dispatch,
+    the lax-conv CNN path) go through here so the packed format keeps a
+    single owner."""
+    from ..serve.deploy import ServingWeight, serving_compose
+    if isinstance(w, QuantizedTensor):
+        return compose(w, dtype)
+    if isinstance(w, FakeQuantTensor):
+        return fq_compose(w, dtype)
+    if isinstance(w, ServingWeight):
+        return serving_compose(w, dtype or jnp.bfloat16)
+    if dtype is not None and isinstance(w, jnp.ndarray) \
+            and jnp.issubdtype(w.dtype, jnp.floating):
+        return w.astype(dtype)
+    return w
+
+
+def _qmatmul_packed(x: jnp.ndarray, sw, backend: str) -> jnp.ndarray:
+    """x (..., K) @ packed ServingWeight (Kp, Np) -> (..., N)."""
+    from ..kernels.packed_matmul import packed_matmul
+    from ..kernels.ref import packed_matmul_ref
+    from ..serve.deploy import serving_to_packed_layout
+    pk = serving_to_packed_layout(sw)
+    n = sw.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if backend == "pallas":
+        y = packed_matmul(x2, pk.w_int, pk.scale, bits=pk.bits,
+                          wbr=pk.wbr, wbc=pk.wbc)
+    else:                                                  # 'ref'
+        y = packed_matmul_ref(x2, pk.w_int, pk.scale, pk.bits,
+                              pk.wbr, pk.wbc)
+    return y[:, :n].reshape(*lead, n).astype(x.dtype)
+
+
+def qmatmul(x: jnp.ndarray, w: Any, *, backend: Optional[str] = None
+            ) -> jnp.ndarray:
+    """y = x @ W for any weight representation (the model-side matmul).
+
+    ``x``: (..., K) activations; ``w``: plain array, QuantizedTensor,
+    FakeQuantTensor or ServingWeight with trailing (K-ish, N) dims.  On
+    the packed serving path the ``pallas``/``ref`` backends execute on the
+    compressed representation directly; every other combination
+    dequantizes the single leaf in-graph and runs a plain dot."""
+    from ..serve.deploy import ServingWeight
+    backend = backend or current_matmul_backend()
+    if isinstance(w, ServingWeight) and backend != "dense" \
+            and w.w_int.ndim == 2:
+        return _qmatmul_packed(x, w, backend)
+    return x @ qdense(w, x.dtype)
+
+
+def prepare_params(params: Any, dtype=None) -> Any:
+    """Once-per-step param prep (before the layer scan).
+
+    Casts plain float leaves to the compute dtype and composes bit-plane
+    ``QuantizedTensor`` leaves up-front (their bit axis leads, so they
+    cannot be sliced by the layer scan).  FakeQuantTensor / ServingWeight
+    leaves stay in their (scan-sliceable) storage — :func:`qmatmul`
+    consumes them one layer at a time, so the serving path never holds a
+    whole dequantized param tree."""
+    from ..serve.deploy import ServingWeight
+
+    def conv(x):
+        if isinstance(x, QuantizedTensor):
+            return compose(x, dtype)
+        if isinstance(x, (FakeQuantTensor, ServingWeight)):
+            return x
         if dtype is not None and isinstance(x, jnp.ndarray) \
                 and jnp.issubdtype(x.dtype, jnp.floating):
             return x.astype(dtype)

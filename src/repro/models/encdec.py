@@ -11,7 +11,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..dist.sharding import constraint, shard_params_tree
 from .attention import attn_forward
-from .common import embed_init, make_weight, materialize, rms_norm
+from .common import (embed_init, make_weight, prepare_params, qmatmul,
+                     rms_norm)
 from .transformer import scan_or_loop
 from .ffn import mlp_forward
 
@@ -83,7 +84,7 @@ def init_encdec(key, cfg: ModelConfig) -> Dict:
 
 def _conformer_conv(lp, x):
     """Pointwise-GLU -> depthwise conv -> pointwise (simplified Conformer)."""
-    h = x @ lp["conv_pw1"]
+    h = qmatmul(x, lp["conv_pw1"])
     a, b = jnp.split(h, 2, axis=-1)
     h = a * jax.nn.sigmoid(b)                     # GLU
     w = lp["conv_dw"]                             # (K, d)
@@ -91,7 +92,7 @@ def _conformer_conv(lp, x):
     h = jax.lax.conv_general_dilated(
         h, w[:, None, :].astype(h.dtype), (1,), [(k // 2, k - 1 - k // 2)],
         dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=d)
-    return jax.nn.silu(h) @ lp["conv_pw2"]
+    return qmatmul(jax.nn.silu(h), lp["conv_pw2"])
 
 
 def encode(mp, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
@@ -102,7 +103,6 @@ def encode(mp, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
 
     def body(carry, lp):
         h = carry
-        lp = materialize(lp, jnp.dtype(cfg.dtype))
         x = rms_norm(h, lp["ln_attn"])
         out, _ = attn_forward(lp["attn"], x, pos, n_heads=cfg.n_heads,
                               n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
@@ -136,7 +136,6 @@ def decode(mp, cfg: ModelConfig, tokens, enc_out, cache=None, index=None):
 
     def body(carry, lp):
         h, cache_c, li = carry
-        lp = materialize(lp, jnp.dtype(cfg.dtype))
         layer_cache = _index_cache(cache_c, li) if cache_c is not None \
             else None
         out, new_lc = attn_forward(
@@ -161,25 +160,13 @@ def decode(mp, cfg: ModelConfig, tokens, enc_out, cache=None, index=None):
         body, (h, cache, jnp.asarray(0, jnp.int32)), mp["dec_layers"],
         cfg.scan_layers, cfg.n_layers)
     h = rms_norm(h, mp["final_norm"])
-    logits = (h @ mp["embed"].T).astype(jnp.float32)
+    logits = qmatmul(h, mp["embed"].T).astype(jnp.float32)
     return constraint(logits, "batch", None, "vocab"), new_cache
-
-
-def _materialize_for_walk(params, dtype):
-    from .transformer import _contains_bitplane
-    out = {}
-    for k, v in params.items():
-        if k in ("enc_layers", "dec_layers") and not _contains_bitplane(v):
-            out[k] = v
-        else:
-            out[k] = materialize(v, dtype)
-    return out
 
 
 def encdec_forward(params, cfg: ModelConfig, frames, tokens,
                    cache=None, index=None):
-    mp = shard_params_tree(_materialize_for_walk(params,
-                                                 jnp.dtype(cfg.dtype)))
+    mp = shard_params_tree(prepare_params(params, jnp.dtype(cfg.dtype)))
     enc_out = encode(mp, cfg, frames)
     logits, new_cache = decode(mp, cfg, tokens, enc_out, cache, index)
     return logits, new_cache, enc_out
@@ -204,7 +191,6 @@ def encdec_decode_step(params, cfg: ModelConfig, tokens, cache, index,
                        enc_out):
     """One decoder token; encoder output precomputed at prefill time.
     ``index`` may be a scalar or a per-slot (B,) vector."""
-    mp = shard_params_tree(_materialize_for_walk(params,
-                                                 jnp.dtype(cfg.dtype)))
+    mp = shard_params_tree(prepare_params(params, jnp.dtype(cfg.dtype)))
     logits, new_cache = decode(mp, cfg, tokens, enc_out, cache, index)
     return logits[:, -1], new_cache

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import constraint
-from .common import make_weight
+from .common import make_weight, qmatmul
 
 
 def init_mlp(key, d_model: int, d_ff: int, qc, kind: str = "swiglu",
@@ -27,10 +27,10 @@ def init_mlp(key, d_model: int, d_ff: int, qc, kind: str = "swiglu",
 
 def mlp_forward(p: Dict, x: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
     if kind == "swiglu":
-        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = jax.nn.silu(qmatmul(x, p["w_gate"])) * qmatmul(x, p["w_up"])
         h = constraint(h, "batch", None, "ff")
-        return h @ p["w_down"]
+        return qmatmul(h, p["w_down"])
     act = jax.nn.gelu if kind == "gelu" else jax.nn.relu
-    h = act(x @ p["w_in"])
+    h = act(qmatmul(x, p["w_in"]))
     h = constraint(h, "batch", None, "ff")
-    return h @ p["w_out"]
+    return qmatmul(h, p["w_out"])

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import batch_axes, constraint, get_mesh, spec
-from .common import make_weight
+from .common import make_weight, qdense, qmatmul
 
 
 @jax.custom_vjp
@@ -72,11 +72,15 @@ GROUPED_IMPL = {"impl": "ragged", "capacity_factor": 2.0}
 def grouped_matmul_capacity(x, w, group_sizes, capacity: int):
     """Capacity-bounded grouped matmul over sorted tokens.
 
-    x: (M, K) tokens sorted by group; w: (E, K, N); returns (M, N) with
+    x: (M, K) tokens sorted by group; w: (E, K, N) — a plain array or a
+    scan-sliceable quantized representation (ServingWeight /
+    FakeQuantTensor with E leading): the scan over experts slices one
+    expert's (packed) weight per step and ``qmatmul`` executes it, so
+    packed experts run on the compressed format.  Returns (M, N) with
     zeros for tokens past their group's capacity (dropped).
     """
     m, k = x.shape
-    e, _, n = w.shape
+    e, n = w.shape[0], w.shape[-1]
     starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                               jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
     x_pad = jnp.concatenate([x, jnp.zeros((capacity, k), x.dtype)], axis=0)
@@ -85,7 +89,7 @@ def grouped_matmul_capacity(x, w, group_sizes, capacity: int):
         w_e, start, size = ins
         xs = jax.lax.dynamic_slice(x_pad, (start, 0), (capacity, k))
         mask = (jnp.arange(capacity) < size)[:, None].astype(x.dtype)
-        ys = ((xs * mask) @ w_e) * mask
+        ys = qmatmul(xs * mask, w_e) * mask
         idx = start + jnp.arange(capacity)
         y = y.at[idx].add(ys, mode="drop")
         return y, None
@@ -102,10 +106,19 @@ def _capacity(m: int, e: int) -> int:
 
 
 def _grouped(x, w, group_sizes):
+    """Grouped dispatch over possibly-quantized expert weights.
+
+    The capacity scan consumes quantized experts natively (one packed
+    expert sliced per scan step); ``ragged_dot`` needs a dense (E, K, N)
+    operand, so that path dequantizes through the sanctioned
+    ``common.qdense`` entry."""
+    from ..core.bitrep import QuantizedTensor
+    if isinstance(w, QuantizedTensor):
+        w = qdense(w, x.dtype)     # bit axis leads: not scan-sliceable
     if GROUPED_IMPL["impl"] == "capacity":
         return grouped_matmul_capacity(x, w, group_sizes,
                                        _capacity(x.shape[0], w.shape[0]))
-    return grouped_matmul(x, w, group_sizes)
+    return grouped_matmul(x, qdense(w, x.dtype), group_sizes)
 
 
 def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int,
@@ -179,8 +192,9 @@ def _moe_forward_local(p: Dict, x: jnp.ndarray, top_k: int
     out = out.reshape(b, s, d)
 
     if "shared_gate" in p:
-        hs = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
-        out = out + hs @ p["shared_down"]
+        hs = jax.nn.silu(qmatmul(x, p["shared_gate"])) \
+            * qmatmul(x, p["shared_up"])
+        out = out + qmatmul(hs, p["shared_down"])
 
     # load-balance auxiliary loss (Switch-style)
     frac_tokens = jnp.mean(
@@ -221,9 +235,12 @@ def _moe_forward_sharded(p: Dict, x: jnp.ndarray, top_k: int, mesh
     else:
         wspec_g = wspec_u = P(None, None, "model" if has_model else None)
         wspec_d = P(None, "model" if has_model else None, None)
-    wg = reshard(p["expert_gate"], wspec_g)
-    wu = reshard(p["expert_up"], wspec_u)
-    wd = reshard(p["expert_down"], wspec_d)
+    # shard_map needs dense (E, K, N) operands with one spec per array;
+    # packed expert execution under shard_map is future work, so quantized
+    # experts dequantize here through the sanctioned common.qdense entry.
+    wg = reshard(qdense(p["expert_gate"], x.dtype), wspec_g)
+    wu = reshard(qdense(p["expert_up"], x.dtype), wspec_u)
+    wd = reshard(qdense(p["expert_down"], x.dtype), wspec_d)
     rw = reshard(p["router_w"], P())
 
     def local_moe(xs, rw, wg, wu, wd):
@@ -251,14 +268,32 @@ def _moe_forward_sharded(p: Dict, x: jnp.ndarray, top_k: int, mesh
                 [jnp.zeros((1,), jnp.int32),
                  jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
             start0 = jax.lax.dynamic_slice(starts, (offs,), (1,))[0]
-            # roll so this rank's tokens start at row 0, then run the
-            # capacity matmul over just the local experts
+            # roll so this rank's tokens start at row 0
             xloc = jnp.roll(xsrt, -start0, axis=0)
-            cap = _capacity(xt.shape[0] * top_k, e)
-            gate = grouped_matmul_capacity(xloc, wg, gs_local, cap)
-            up = grouped_matmul_capacity(xloc, wu, gs_local, cap)
-            h = jax.nn.silu(gate) * up
-            ys = grouped_matmul_capacity(h, wd, gs_local, cap)
+            if GROUPED_IMPL["impl"] == "ragged":
+                # exact/no-drop EP dispatch (honors the impl flag): append
+                # a zero dummy expert whose group absorbs the other ranks'
+                # tokens, so every local token is computed regardless of
+                # routing skew and the psum over 'model' reassembles the
+                # single-device exact output.
+                rest = (jnp.asarray(xloc.shape[0], jnp.int32)
+                        - jnp.sum(gs_local).astype(jnp.int32))[None]
+                gs_ext = jnp.concatenate([gs_local, rest])
+
+                def _ext(w):
+                    return jnp.concatenate(
+                        [w, jnp.zeros((1,) + w.shape[1:], w.dtype)])
+
+                gate = grouped_matmul(xloc, _ext(wg), gs_ext)
+                up = grouped_matmul(xloc, _ext(wu), gs_ext)
+                h = jax.nn.silu(gate) * up
+                ys = grouped_matmul(h, _ext(wd), gs_ext)
+            else:
+                cap = _capacity(xt.shape[0] * top_k, e)
+                gate = grouped_matmul_capacity(xloc, wg, gs_local, cap)
+                up = grouped_matmul_capacity(xloc, wu, gs_local, cap)
+                h = jax.nn.silu(gate) * up
+                ys = grouped_matmul_capacity(h, wd, gs_local, cap)
             ys = jnp.roll(ys, start0, axis=0)
         else:
             gate = _grouped(xsrt, wg, group_sizes)
@@ -296,7 +331,8 @@ def _moe_forward_sharded(p: Dict, x: jnp.ndarray, top_k: int, mesh
                     out_specs=out_specs)(x, rw, wg, wu, wd)
 
     if "shared_gate" in p:
-        hs = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
+        hs = jax.nn.silu(qmatmul(x, p["shared_gate"])) \
+            * qmatmul(x, p["shared_up"])
         hs = constraint(hs, "batch", None, "ff")
-        out = out + hs @ p["shared_down"]
+        out = out + qmatmul(hs, p["shared_down"])
     return out, aux

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import constraint
-from .common import make_weight, rms_norm
+from .common import make_weight, qmatmul, rms_norm
 
 
 def init_rwkv6(key, d_model: int, n_heads: int, qc, lora_r: int = 64,
@@ -126,10 +126,10 @@ def rwkv6_forward(p: Dict, h: jnp.ndarray, *, n_heads: int,
     def mix(mu):
         return x + (shifted - x) * mu
 
-    r = (mix(p["mix_r"]) @ p["wr"]).reshape(b, L, n_heads, dh)
-    k = (mix(p["mix_k"]) @ p["wk"]).reshape(b, L, n_heads, dh)
-    v = (mix(p["mix_v"]) @ p["wv"]).reshape(b, L, n_heads, dh)
-    g = jax.nn.silu(mix(p["mix_w"]) @ p["wg"])
+    r = qmatmul(mix(p["mix_r"]), p["wr"]).reshape(b, L, n_heads, dh)
+    k = qmatmul(mix(p["mix_k"]), p["wk"]).reshape(b, L, n_heads, dh)
+    v = qmatmul(mix(p["mix_v"]), p["wv"]).reshape(b, L, n_heads, dh)
+    g = jax.nn.silu(qmatmul(mix(p["mix_w"]), p["wg"]))
     r = constraint(r, "batch", None, "heads", None)
 
     xw = mix(p["mix_w"])
@@ -163,7 +163,7 @@ def rwkv6_forward(p: Dict, h: jnp.ndarray, *, n_heads: int,
 
     o = o.reshape(b, L, d).astype(x.dtype)
     o = rms_norm(o, p["ln_x_scale"] - 1.0) * g
-    h = h + o @ p["wo_t"]
+    h = h + qmatmul(o, p["wo_t"])
 
     # channel mix (with its own token shift) on the updated residual stream
     xc = rms_norm(h, p["ln_c"])
@@ -173,10 +173,10 @@ def rwkv6_forward(p: Dict, h: jnp.ndarray, *, n_heads: int,
     def mixc(mu):
         return xc + (shifted_c - xc) * mu
 
-    rc = jax.nn.sigmoid(mixc(p["cm_mix_r"]) @ p["cm_wr"])
-    kc = jnp.square(jax.nn.relu(mixc(p["cm_mix_k"]) @ p["cm_wk"]))
+    rc = jax.nn.sigmoid(qmatmul(mixc(p["cm_mix_r"]), p["cm_wr"]))
+    kc = jnp.square(jax.nn.relu(qmatmul(mixc(p["cm_mix_k"]), p["cm_wk"])))
     kc = constraint(kc, "batch", None, "ff")
-    h = h + rc * (kc @ p["cm_wv"])
+    h = h + rc * qmatmul(kc, p["cm_wv"])
 
     new_state = None
     if state is not None:

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import constraint
-from .common import make_weight, rms_norm
+from .common import make_weight, qmatmul, rms_norm
 
 
 def init_mamba2(key, d_model: int, n_state: int, qc, expand: int = 2,
@@ -114,11 +114,11 @@ def mamba2_forward(p: Dict, x: jnp.ndarray, *, n_state: int,
     """x: (B, L, D).  With ``state`` (decode), L is typically 1."""
     b, L, d = x.shape
     chunk = min(chunk, L)
-    xi = x @ p["in_x"]
-    z = x @ p["in_z"]
-    Bp = x @ p["in_B"]
-    Cp = x @ p["in_C"]
-    dt = jax.nn.softplus(x @ p["in_dt"] + p["dt_bias"])   # (B,L,H)
+    xi = qmatmul(x, p["in_x"])
+    z = qmatmul(x, p["in_z"])
+    Bp = qmatmul(x, p["in_B"])
+    Cp = qmatmul(x, p["in_C"])
+    dt = jax.nn.softplus(qmatmul(x, p["in_dt"]) + p["dt_bias"])   # (B,L,H)
     h = dt.shape[-1]
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
     da = (dt.astype(jnp.float32) * a)                     # (B,L,H) log decay
@@ -156,7 +156,7 @@ def mamba2_forward(p: Dict, x: jnp.ndarray, *, n_state: int,
         * xh.astype(jnp.float32)
     y = y.reshape(b, L, h * headdim).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
-    out = y @ p["out_proj"]
+    out = qmatmul(y, p["out_proj"])
     new_state = None
     if state is not None:
         new_state = {"conv": new_conv, "ssm": h_fin}

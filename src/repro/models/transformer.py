@@ -1,9 +1,12 @@
 """Decoder-only LM assembly: dense / MoE / SSM / hybrid families.
 
 One scan-over-layers drives training, prefill and decode; the layer body
-dispatches on the config family.  Params hold stacked (L, ...) leaves —
-quantized weights are materialized ONCE per step (outside the scan) so the
-bit-level compose cost is amortized and the scan body sees plain arrays.
+dispatches on the config family.  Params hold stacked (L, ...) leaves.
+``prepare_params`` runs once per step (outside the scan) to cast plain
+floats and compose bit-plane tensors; scan-sliceable quantized storage
+(FakeQuantTensor, packed ServingWeight) rides the scan untouched and is
+consumed per layer by ``qmatmul`` — on the packed serving path the layer
+code never sees a dequantized full-precision weight.
 """
 from __future__ import annotations
 
@@ -17,7 +20,7 @@ from ..configs.base import ModelConfig
 from ..dist.sharding import constraint, shard_params_tree
 from .attention import attn_forward, init_attn
 from .common import (act_quant, embed_init, make_beta, make_weight,
-                     materialize, rms_norm, softcap)
+                     prepare_params, qmatmul, rms_norm, softcap)
 from .ffn import init_mlp, mlp_forward
 from .moe import init_moe, moe_forward
 from .rwkv import init_rwkv6, rwkv6_forward, rwkv6_init_state
@@ -153,28 +156,6 @@ def init_lm(key, cfg: ModelConfig) -> Dict:
     return params
 
 
-def _contains_bitplane(tree) -> bool:
-    from ..core.bitrep import QuantizedTensor
-    return any(isinstance(x, QuantizedTensor)
-               for x in jax.tree_util.tree_leaves(
-                   tree, is_leaf=lambda y: isinstance(y, QuantizedTensor)))
-
-
-def _materialize_for_walk(params, dtype):
-    """Materialize top-level params; keep stacked layer weights in their
-    quantized storage so each scan step dequantizes ONE layer in VMEM-side
-    registers (packed int8/int4 streams from HBM — the BWQ serving win).
-    Bit-plane tensors carry the bit axis first (not scan-sliceable), so
-    that mode composes up-front instead."""
-    out = {}
-    for k, v in params.items():
-        if k == "layers" and not _contains_bitplane(v):
-            out[k] = v
-        else:
-            out[k] = materialize(v, dtype)
-    return out
-
-
 def _index_cache(cache, i):
     """Slice layer i's cache out of stacked (L, ...) leaves."""
     return jax.tree_util.tree_map(
@@ -241,7 +222,6 @@ def _walk_dense(mp, cfg, h, positions, cache, index):
         # (xs/ys threading would double-buffer multi-GiB caches).
         h, aux, cache_c, li = carry
         lp, loc = xs
-        lp = materialize(lp, _cdtype(cfg))
         layer_cache = _index_cache(cache_c, li) if cache_c is not None \
             else None
         h, new_lc = _attn_block(lp, h, positions, cfg, loc,
@@ -264,7 +244,6 @@ def _walk_dense(mp, cfg, h, positions, cache, index):
 def _walk_ssm(mp, cfg, h, cache, index):
     def body(carry, lp):
         h, aux, cache_c, li = carry
-        lp = materialize(lp, _cdtype(cfg))
         layer_state = _index_cache(cache_c, li) if cache_c is not None \
             else None
         h, new_state = rwkv6_forward(lp, h, n_heads=cfg.n_heads,
@@ -295,7 +274,6 @@ def _walk_hybrid(mp, cfg, h, emb0, positions, cache, index):
 
     def mamba_body(carry, lp):
         h, aux, mstates, li = carry
-        lp = materialize(lp, _cdtype(cfg))
         layer_state = _index_cache(mstates, li) if mstates is not None \
             else None
         x = rms_norm(h, lp["ln"])
@@ -358,7 +336,7 @@ def _embed_inputs(mp, cfg: ModelConfig, tokens, vision_embeds, positions):
     d = cfg.d_model
     h = jnp.take(mp["embed"], tokens, axis=0)
     if cfg.family == "vlm" and vision_embeds is not None:
-        v = vision_embeds @ mp["vision_proj"]
+        v = qmatmul(vision_embeds, mp["vision_proj"])
         h = jnp.concatenate([v.astype(h.dtype), h], axis=1)
     b, s, _ = h.shape
     if positions is None:
@@ -370,7 +348,7 @@ def _embed_inputs(mp, cfg: ModelConfig, tokens, vision_embeds, positions):
 def forward(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
             positions=None, cache=None, index=None):
     """Returns (logits, aux, new_cache)."""
-    mp = shard_params_tree(_materialize_for_walk(params, _cdtype(cfg)))
+    mp = shard_params_tree(prepare_params(params, _cdtype(cfg)))
     h, positions = _embed_inputs(mp, cfg, tokens, vision_embeds, positions)
     h = constraint(h, "batch", None, None)
     emb0 = h
@@ -385,7 +363,7 @@ def forward(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
         raise ValueError(cfg.family)
     h = rms_norm(h, mp["final_norm"])
     head = mp["lm_head"] if "lm_head" in mp else mp["embed"].T
-    logits = (h @ head).astype(jnp.float32)
+    logits = qmatmul(h, head).astype(jnp.float32)
     logits = softcap(logits, cfg.logit_softcap)
     logits = constraint(logits, "batch", None, "vocab")
     return logits, aux, new_cache

@@ -85,6 +85,43 @@ def to_serving_params(params: Any, bits: int = 8) -> Any:
         is_leaf=lambda x: isinstance(x, (QuantizedTensor, FakeQuantTensor)))
 
 
+def serving_to_packed_layout(sw: ServingWeight):
+    """Adapt a (2-D) ServingWeight leaf to the kernel-facing PackedLayout.
+
+    Zero-copy: both sides share the wire format (see kernels/ops.py for the
+    contract), so deployment packing feeds ``packed_matmul`` directly.  The
+    per-WB scale already folds each block's power-of-two rescale factor, so
+    blocks quantized to fewer bits dequantize exactly — BWQ's mixed
+    precision reaches the kernel instead of being flattened to uniform
+    int8.  Stacked leaves (L/E leading dims) are sliced by the layer scan
+    before they get here; ``sw.shape`` then still carries the stacked true
+    shape, so only the trailing (K, N) may be consulted.
+    """
+    from ..kernels.ops import PackedLayout
+    return PackedLayout(w_int=sw.w_int, scale=sw.scale, bits=sw.bits,
+                        wbr=sw.spec.wb_rows, wbc=sw.spec.wb_cols)
+
+
+def default_deploy_bits(backend: str, deploy_bits: int) -> int:
+    """CLI rule with one owner: packed execution backends need packed
+    weights, so an unset ``--deploy-bits`` defaults to int8 for them."""
+    return deploy_bits or (8 if backend != "dense" else 0)
+
+
+def weight_stream_bytes(params) -> int:
+    """HBM bytes of weight state one full forward/decode step streams.
+
+    ServingWeight leaves count their packed payload (w_int + per-WB
+    scales); QAT representations and plain arrays count every array leaf
+    as stored — which is exactly what the dense backend reads per step.
+    """
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+    return total
+
+
 def serving_compose(sw: ServingWeight, dtype=jnp.bfloat16) -> jnp.ndarray:
     """In-graph dequantization (int8/int4 stream -> bf16 weights)."""
     if sw.bits == 8:

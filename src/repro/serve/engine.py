@@ -15,6 +15,15 @@ placed by ``param_pspecs`` and prompt/state tensors by ``batch_pspecs`` /
 ``cache_pspecs``, so prefill and decode run sharded (batch on the data
 axes, KV heads on the model axis) with no API change.
 
+``backend`` selects how deployed (ServingWeight) matmuls execute inside
+the jitted prefill/decode: ``dense`` dequantizes each leaf in-graph and
+runs plain dots; ``pallas`` streams the packed int8/int4 representation
+through the ``packed_matmul`` kernel (interpret mode auto-detected
+off-TPU); ``ref`` is the pure-jnp kernel oracle.  The flag is applied as a
+trace-time ``models.common.matmul_backend`` context around every jitted
+entry point, so the whole serving program is built for one backend and
+A/B comparisons (benchmarks/serve_bench.py --backend) are apples-to-apples.
+
 Two call surfaces:
   * ``generate(batch, max_new)`` — one-shot static-batch decoding (legacy).
   * ``serve(requests)`` — request-level continuous batching through
@@ -23,6 +32,7 @@ Two call surfaces:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -32,6 +42,7 @@ from jax.sharding import NamedSharding
 from ..dist.sharding import (batch_pspecs, cache_pspecs, get_mesh,
                              param_pspecs, use_mesh)
 from ..models.api import ModelAPI
+from ..models.common import MATMUL_BACKENDS, matmul_backend
 from .sampling import SamplingParams, sample_token
 
 
@@ -45,9 +56,20 @@ class ServeEngine:
     api: ModelAPI
     params: Any
     kv_quant_bits: int = 32       # 8 / 4 select the quantized-at-rest cache
+    backend: str = "dense"        # 'dense' | 'pallas' | 'ref' matmul exec
 
     def __post_init__(self):
         cfg = self.api.cfg
+        if self.backend not in MATMUL_BACKENDS:
+            raise ValueError(f"backend must be one of {MATMUL_BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.backend != "dense" and not self._has_packed_weights():
+            import warnings
+            warnings.warn(
+                f"backend={self.backend!r} only accelerates deployed packed "
+                f"weights (serve.deploy.to_serving_params); this param tree "
+                f"has none, so execution is identical to 'dense'",
+                stacklevel=2)
         if self.kv_quant_bits < 32:
             if self.kv_quant_bits not in (4, 8):
                 raise ValueError(f"kv_quant_bits must be 4, 8 or >=32, "
@@ -62,12 +84,31 @@ class ServeEngine:
                                       kv_cache_bits=self.kv_quant_bits)
             self.api = ModelAPI(cfg)
         self.mesh = get_mesh()
-        self._prefill_j = jax.jit(self.api.prefill,
-                                  static_argnames=("extra_slots",))
-        self._prefill_at_j = jax.jit(self.api.prefill_at)
-        self._decode_j = jax.jit(self.api.decode_step)
+        self._prefill_j = self._jit(self.api.prefill,
+                                    static_argnames=("extra_slots",))
+        self._prefill_at_j = self._jit(self.api.prefill_at)
+        self._decode_j = self._jit(self.api.decode_step)
         if self.mesh is not None:
             self.params = self._place(self.params, param_pspecs)
+
+    def _has_packed_weights(self) -> bool:
+        from .deploy import ServingWeight
+        return any(isinstance(leaf, ServingWeight)
+                   for leaf in jax.tree_util.tree_leaves(
+                       self.params,
+                       is_leaf=lambda x: isinstance(x, ServingWeight)))
+
+    def _jit(self, fn, **jit_kwargs):
+        """jit ``fn`` with the engine's matmul backend active at trace
+        time — the backend is part of the traced program, and each engine
+        owns its jit cache, so traces never leak across backends."""
+        backend = self.backend
+
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            with matmul_backend(backend):
+                return fn(*args, **kwargs)
+        return jax.jit(run, **jit_kwargs)
 
     # ---- sharding helpers -----------------------------------------------
     def _place(self, tree, spec_fn, *args):

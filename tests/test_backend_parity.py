@@ -1,0 +1,206 @@
+"""Kernel-vs-dense execution backend parity.
+
+* every model family forward (dense / MoE / enc-dec / CNN) on deployed
+  packed weights under ``backend="pallas"`` (interpret mode on CPU) and
+  ``backend="ref"`` matches ``backend="dense"`` within fp32 tolerance —
+  including int4 with the paper's 9x8 WB geometry, whose block padding
+  produces an odd K (one zero nibble row);
+* stacked (scanned) weights: a layer slice of a stacked ServingWeight
+  executes identically through the kernel;
+* the decoder-only ServeEngine is token-identical across backends under
+  greedy decode (the PR acceptance criterion);
+* ep_mode sharded MoE honors ``GROUPED_IMPL["impl"] == "ragged"`` (exact,
+  no capacity drops) — 2-device subprocess vs the single-device oracle.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.kernels import default_interpret
+from repro.models.api import build
+from repro.models.common import (QuantConfig, make_weight, matmul_backend,
+                                 qmatmul)
+from repro.serve import ServeEngine
+from repro.serve.deploy import to_serving_params
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _setup(arch, bits):
+    cfg = REGISTRY[arch].tiny(dtype="float32").with_quant(
+        QuantConfig(mode="fake", n_bits=8, act_bits=8))   # 9x8 WB geometry
+    api = build(cfg)
+    params = to_serving_params(api.init(jax.random.PRNGKey(0)), bits)
+    return cfg, api, params
+
+
+def _batch(cfg, b=2, p=8):
+    batch = {"tokens": jax.random.randint(
+        KEY, (b, p), 0, cfg.vocab).astype(jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.fold_in(KEY, 1),
+            (b, cfg.vision_tokens, cfg.d_model)) * 0.1
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(KEY, 1), (b, p, cfg.d_model)) * 0.1
+    return batch
+
+
+def test_interpret_autodetects_off_tpu():
+    assert default_interpret() == (jax.default_backend() != "tpu")
+
+
+# ---------------------------------------------------------------------------
+# forward-logit parity per family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "granite-moe-3b-a800m",
+                                  "seamless-m4t-large-v2"])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_family_forward_parity(arch, bits):
+    """Prefill logits agree across backends on int8 AND int4 packing
+    (int4 under the default 9x8 spec exercises odd block-padded K)."""
+    cfg, api, params = _setup(arch, bits)
+    batch = _batch(cfg)
+    ref, _ = ServeEngine(api, params, backend="dense").prefill(batch)
+    for be in ("pallas", "ref"):
+        got, _ = ServeEngine(api, params, backend=be).prefill(batch)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"{arch} int{bits} {be}")
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_cnn_forward_parity(bits):
+    """ResNet im2col path: packed conv weights through the kernel match
+    the dense dequant path."""
+    from repro.models.cnn import resnet_apply, resnet_init
+    qc = QuantConfig(mode="fake", n_bits=8)              # 9x8 blocks
+    params = resnet_init(jax.random.PRNGKey(0), qc, depth=8)
+    sp = to_serving_params(params, bits)
+    x = jax.random.normal(KEY, (2, 8, 8, 3))
+    with matmul_backend("dense"):
+        ref = np.asarray(resnet_apply(sp, x, qc))
+    for be in ("pallas", "ref"):
+        with matmul_backend(be):
+            got = np.asarray(resnet_apply(sp, x, qc))
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"cnn int{bits} {be}")
+
+
+def test_bitplane_matmul_ragged_n_pads_and_trims():
+    """N not a multiple of wbc must pad-and-trim, not return uninitialized
+    memory (regression: a zero-size grid dimension silently yielded NaN)."""
+    from repro.core import BlockingSpec, from_float, requantize
+    from repro.kernels import bitplane_matmul, to_bitplane_layout
+    from repro.kernels.ref import bitplane_matmul_ref
+    qt = requantize(from_float(
+        jax.random.normal(KEY, (256, 128)) * 0.05, 8, BlockingSpec(8, 128)))
+    bl = to_bitplane_layout(qt)
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (4, 256))
+    n = 100                                              # ragged slice
+    y = bitplane_matmul(x, bl.planes_packed[:, :, :n], bl.sign_packed[:, :n],
+                        bl.mask, bl.scale)
+    y_ref = bitplane_matmul_ref(x, bl.planes_packed, bl.sign_packed,
+                                bl.mask, bl.scale[0])[:, :n]
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stacked_scanned_weight_slice():
+    """A layer slice of a stacked (L, K, N) ServingWeight — what the layer
+    scan feeds qmatmul — runs identically through the packed kernel.
+    K=63 with 9x8 blocks pads to an odd Kp=63, hitting the int4 odd-K
+    packing."""
+    qc = QuantConfig(mode="fake", n_bits=8)
+    w = make_weight(jax.random.PRNGKey(2), (3, 63, 32), qc)
+    x = jax.random.normal(KEY, (4, 5, 63))               # (B, S, K)
+    for bits in (8, 4):
+        sw = to_serving_params({"w": w}, bits)["w"]
+        sw1 = jax.tree_util.tree_map(lambda a: a[1], sw)  # scan slice
+        y_ref = qmatmul(x, sw1, backend="dense")
+        for be in ("pallas", "ref"):
+            y = qmatmul(x, sw1, backend=be)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=f"int{bits} {be}")
+
+
+# ---------------------------------------------------------------------------
+# token-identical engine decode (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_engine_greedy_decode_token_identical(bits):
+    cfg, api, params = _setup("phi3-mini-3.8b", bits)
+    batch = _batch(cfg, b=3, p=8)
+    out = {be: np.asarray(
+        ServeEngine(api, params, kv_quant_bits=8, backend=be)
+        .generate(batch, max_new=6)) for be in ("dense", "pallas", "ref")}
+    np.testing.assert_array_equal(out["dense"], out["pallas"])
+    np.testing.assert_array_equal(out["dense"], out["ref"])
+
+
+def test_backend_validation_and_warning():
+    cfg, api, params = _setup("phi3-mini-3.8b", 8)
+    with pytest.raises(ValueError):
+        ServeEngine(api, params, backend="tpuv7")
+    qat = api.init(jax.random.PRNGKey(0))               # no packed leaves
+    with pytest.warns(UserWarning, match="packed"):
+        ServeEngine(api, qat, backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# ep_mode honors the exact 'ragged' dispatch (2 devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_EP_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import REGISTRY
+from repro.models.api import build
+from repro.models.common import QuantConfig
+from repro.models import moe as moe_mod
+from repro.dist.sharding import use_mesh
+from repro.launch.mesh import make_mesh
+
+assert jax.device_count() == 2, jax.device_count()
+assert moe_mod.GROUPED_IMPL["impl"] == "ragged"
+cfg = REGISTRY["granite-moe-3b-a800m"].tiny(dtype="float32").with_quant(
+    QuantConfig(mode="fake", n_bits=8, act_bits=8))
+api = build(cfg)
+params = api.init(jax.random.PRNGKey(0))
+# skewed routing comes free from a random init; batch >> capacity*mean
+batch = {"tokens": jax.random.randint(
+    jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab).astype(jnp.int32),
+    "labels": jnp.zeros((4, 16), jnp.int32)}
+ref, _ = api.loss(params, batch)
+with use_mesh(make_mesh((1, 2), ("data", "model"))):
+    got, _ = api.loss(params, batch)
+np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                           rtol=1e-5, atol=1e-5)
+print("EP_RAGGED_OK")
+"""
+
+
+def test_ep_mode_ragged_exact_two_devices():
+    """Sharded ep_mode MoE with the exact 'ragged' impl must match the
+    single-device no-drop path bit-for-bit-ish even under skewed routing
+    (regression: it silently used capacity-dropping dispatch)."""
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")] +
+                   sys.path))
+    out = subprocess.run([sys.executable, "-c", _EP_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "EP_RAGGED_OK" in out.stdout
