@@ -1,6 +1,6 @@
 """Serving throughput benchmark: prefill + decode tokens/sec across
-batch sizes, KV-cache precisions and matmul execution backends, JSON
-output.
+batch sizes, KV-cache precisions and matmul execution backends, plus a
+paged-vs-fixed-width cache-residency comparison, JSON output.
 
 ``--backend {dense,pallas,ref}`` selects how deployed packed weights
 execute (models.common.qmatmul); every row also reports the per-step HBM
@@ -15,8 +15,14 @@ criterion is that at-rest decode is no slower at batch >= 8, since it
 replaces O(cache) requant work per token with a one-time write-side
 rounding.
 
+The ``paged_utilization`` row drives a mixed-length request workload
+through the continuous-batching scheduler twice — paged pool vs
+fixed-width slots — and reports resident cache bytes (peak pages in use x
+per-page footprint vs the ``n_slots * max_len`` rows a fixed layout keeps
+alive) plus a parity check that both produced identical tokens.
+
     PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--out f.json]
-        [--backend pallas] [--deploy-bits 8]
+        [--backend pallas] [--deploy-bits 8] [--page-size 8]
 """
 from __future__ import annotations
 
@@ -31,7 +37,7 @@ from repro.configs import REGISTRY
 from repro.core.pact import quantize_signed
 from repro.models.api import build
 from repro.models.common import QuantConfig
-from repro.serve import ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine
 from repro.serve.deploy import (default_deploy_bits, to_serving_params,
                                 weight_stream_bytes)
 
@@ -126,6 +132,47 @@ def bench_legacy_requant(api, params, batch_size: int,
     }
 
 
+def bench_paged_utilization(api, params, n_requests: int, kv_bits: int = 8,
+                            page_size: int = 8,
+                            backend: str = "dense") -> dict:
+    """Mixed-length workload, paged vs fixed-width resident cache bytes."""
+    cfg = api.cfg
+    eng = ServeEngine(api, params, kv_quant_bits=kv_bits, backend=backend)
+    p_lens = [4, 8, 16, 32]
+    new_toks = [4, 16, 8, 4]
+    reqs = []
+    for i in range(n_requests):
+        pl, mn = p_lens[i % 4], new_toks[i % 4]
+        toks = jax.random.randint(jax.random.PRNGKey(100 + i), (1, pl), 0,
+                                  cfg.vocab).astype(jnp.int32)
+        reqs.append(Request(uid=i, inputs={"tokens": toks},
+                            sampling=SamplingParams(max_new_tokens=mn),
+                            arrival=i // 2))
+    paged = eng.make_scheduler(reqs, n_slots=n_requests,
+                               page_size=page_size)
+    res_p = paged.run(list(reqs))
+    rep_p = paged.cache_report()
+    fixed = eng.make_scheduler(reqs, n_slots=n_requests, page_size=0)
+    res_f = fixed.run(list(reqs))
+    rep_f = fixed.cache_report()
+    return {
+        "benchmark": "paged_utilization",
+        "batch": n_requests,
+        "kv_bits": kv_bits,
+        "page_size": page_size,
+        "max_len": paged.max_len,
+        "peak_pages_in_use": rep_p["peak_pages_in_use"],
+        "pool_capacity_pages": rep_p["pool_capacity_pages"],
+        "page_bytes": rep_p["page_bytes"],
+        "paged_bytes_in_use_peak": rep_p["bytes_in_use_peak"],
+        "fixed_resident_bytes": rep_f["resident_bytes"],
+        "cache_utilization_vs_fixed": round(
+            rep_p["bytes_in_use_peak"] / max(rep_f["resident_bytes"], 1), 4),
+        "tokens_match_fixed": all(a.tokens == b.tokens
+                                  for a, b in zip(res_p, res_f)),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-mini-3.8b")
@@ -139,6 +186,9 @@ def main():
     ap.add_argument("--deploy-bits", type=int, default=0, choices=[0, 4, 8],
                     help="pack weights to int8/int4 serving form first "
                          "(0 = QAT weights)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="page size for the paged-utilization row "
+                         "(0 skips it)")
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch].tiny(dtype="float32").with_quant(
@@ -171,6 +221,18 @@ def main():
     summary = {"legacy_vs_at_rest_decode_speedup": round(speedup, 3),
                "at_rest_no_slower": bool(speedup >= 1.0),
                "compare_batch": b_cmp}
+    if args.page_size:
+        # residency comparison at batch 16 (8 in quick mode): the paged
+        # pool only keeps pages that hold live tokens resident
+        util = bench_paged_utilization(api, params,
+                                       n_requests=8 if args.quick else 16,
+                                       page_size=args.page_size,
+                                       backend=args.backend)
+        rows.append(util)
+        print(json.dumps(util), flush=True)
+        summary["paged_cache_utilization"] = \
+            util["cache_utilization_vs_fixed"]
+        summary["paged_tokens_match_fixed"] = util["tokens_match_fixed"]
     print(json.dumps(summary), flush=True)
     if args.out:
         with open(args.out, "w") as f:

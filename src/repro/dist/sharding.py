@@ -267,14 +267,33 @@ def cache_pspecs(state, batch_size: int) -> Any:
     leading dim is the stacked layer axis) shards on the data axes, and the
     KV-head dim of rank>=5 ``(L, B, T, KV, dh)`` cache leaves shards on
     'model' — fitted, so e.g. 2 KV heads on a 16-way model axis degrade to
-    replicated instead of failing."""
-    mesh = get_mesh()
+    replicated instead of failing.
 
-    def leaf(x):
+    Paged caches are recognized by path: pool leaves under ``'pages'``
+    (stack, P, page, KV, ...) shard their *page* axis on the data axes (the
+    paged analog of per-slot batch sharding — gathers/scatters through the
+    block table reshard as needed) and keep the rank>=5 KV-head rule;
+    ``'table'`` block tables are tiny int32 maps and stay replicated."""
+    mesh = get_mesh()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+
+    def _keys(path) -> List[str]:
+        return [k.key for k in path
+                if isinstance(k, jax.tree_util.DictKey)]
+
+    def leaf(path, x):
         shape = tuple(getattr(x, "shape", ()))
         if mesh is None or not shape:
             return P()
         dims: List[Any] = [None] * len(shape)
+        keys = _keys(path)
+        if keys and keys[-1] == "table":
+            return P(*dims)
+        if "pages" in keys:
+            dims[1] = _batch_entry(mesh)
+            if len(shape) >= 5:
+                dims[-2] = "model"
+            return fit_spec(P(*dims), shape, mesh)
         # rank>=4 leaves are stacked (L, B, ...): dim 0 is the layer axis,
         # so never batch-shard it even when n_layers == batch_size.
         start = 1 if len(shape) >= 4 else 0
@@ -286,4 +305,5 @@ def cache_pspecs(state, batch_size: int) -> Any:
             dims[-2] = "model"
         return fit_spec(P(*dims), shape, mesh)
 
-    return jax.tree_util.tree_map(leaf, state)
+    specs = [leaf(path, x) for path, x in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

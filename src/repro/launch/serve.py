@@ -62,6 +62,14 @@ def main():
                     help="decode slots for --requests (0 = batch size)")
     ap.add_argument("--arrival-gap", type=int, default=2,
                     help="ticks between request arrivals in --requests mode")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: tokens per page (0 = contiguous "
+                         "fixed-width slots); --requests mode only")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page-pool capacity (0 = worst case + trash page)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="insert prompts in chunks this wide, interleaved "
+                         "with decode (0 = monolithic prefill)")
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch]
@@ -76,7 +84,9 @@ def main():
         print(f"deployed: packed int{args.deploy_bits} serving weights")
 
     eng = ServeEngine(api, params, kv_quant_bits=args.kv_bits,
-                      backend=args.backend)
+                      backend=args.backend, page_size=args.page_size,
+                      n_pages=args.n_pages or None,
+                      prefill_chunk=args.prefill_chunk)
     batch = _prompts(cfg, args)
 
     if args.requests:
@@ -89,11 +99,15 @@ def main():
                             seed=args.seed + i),
                         arrival=i * args.arrival_gap)
                 for i in range(args.batch)]
-        results = eng.serve(reqs, n_slots=args.n_slots or args.batch)
+        sched = eng.make_scheduler(reqs, n_slots=args.n_slots or args.batch)
+        results = sched.run(reqs)
         for r in results:
             print(f"[{r.uid}] arrived@{reqs[r.uid].arrival} "
                   f"admitted@{r.admitted_tick} done@{r.finished_tick} "
                   f"({r.finish_reason}): {r.tokens}")
+        if args.page_size:
+            import json
+            print(json.dumps(sched.cache_report()))
         return
 
     key = jax.random.PRNGKey(args.seed) if args.temperature > 0 else None

@@ -30,6 +30,49 @@ def _write_rows(big, small, slot, batch_dim: int):
                                         tuple(starts))
 
 
+def cache_is_paged(cache) -> bool:
+    """True if any KV sub-dict of a decode cache carries a block table."""
+    if isinstance(cache, dict):
+        return "table" in cache or any(cache_is_paged(v)
+                                       for v in cache.values())
+    return False
+
+
+def _row_cache_view(cache, slot, fresh=None):
+    """Single-slot view of a decode cache: paged sub-dicts keep the whole
+    page pool but narrow the block table to ``slot``'s row; contiguous /
+    recurrent leaves (stack, B, ...) are row-sliced on the batch dim.
+
+    ``fresh`` (traced bool) zeroes *recurrent* rows — when the view starts
+    a brand-new request (first prompt chunk), the slot's previous
+    occupant's rwkv/mamba state must read as the zero init a standalone
+    prefill would use.  KV rows have no such hazard (stale positions stay
+    masked by the fill level) and pass through untouched."""
+    if isinstance(cache, dict):
+        if "table" in cache:
+            return dict(cache, table=jax.lax.dynamic_slice_in_dim(
+                cache["table"], slot, 1, axis=1))
+        if "k" in cache and "v" in cache:
+            return {k: jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=1)
+                    for k, v in cache.items()}
+        return {k: _row_cache_view(v, slot, fresh) for k, v in cache.items()}
+    row = jax.lax.dynamic_slice_in_dim(cache, slot, 1, axis=1)
+    if fresh is not None:
+        row = jnp.where(fresh, jnp.zeros_like(row), row)
+    return row
+
+
+def _row_cache_unview(big, row, slot):
+    """Merge an updated single-slot view back: paged pools were scattered
+    into in place (all slots share them) and replace wholesale, with the
+    full block table restored; row-sliced leaves write back at ``slot``."""
+    if isinstance(big, dict):
+        if "table" in big:
+            return dict(row, table=big["table"])
+        return {k: _row_cache_unview(big[k], row[k], slot) for k in big}
+    return _write_rows(big, row, slot, batch_dim=1)
+
+
 @dataclasses.dataclass
 class ModelAPI:
     cfg: ModelConfig
@@ -85,18 +128,100 @@ class ModelAPI:
                                                 state["cache"], index)
         return logits, {**state, "cache": cache}
 
+    def init_decode_state(self, params, batch, n_slots: int, max_len: int,
+                          page_size: int = 0,
+                          n_pages: Optional[int] = None) -> Any:
+        """Empty decode state for ``n_slots`` continuous-batching slots.
+
+        The state *tree* (cache layout per family, enc-dec encoder buffer)
+        comes from ``jax.eval_shape`` over this model's own prefill on the
+        example ``batch`` — no forward pass runs.  ``page_size > 0`` builds
+        the paged layout (global pool of ``n_pages`` pages, default
+        ``1 + n_slots * nb`` so worst-case demand plus the trash page
+        always fits; allocators may size it tighter) instead of contiguous
+        ``max_len``-wide slots.  Prompts are inserted per-request via
+        :meth:`prefill_at` / :meth:`prefill_chunk_at`."""
+        sub = jax.eval_shape(
+            lambda p, b: self.prefill(p, b, extra_slots=0)[1], params, batch)
+        if page_size > 0:
+            nb = -(-max_len // page_size)
+            n_pages = n_pages or (1 + n_slots * nb)
+            cache = transformer.paginate_cache_tree(
+                sub["cache"], n_slots, n_pages, page_size, nb)
+        else:
+            cache = transformer.rebatch_cache_tree(sub["cache"], n_slots,
+                                                   max_len)
+        state = {"cache": cache}
+        if "enc_out" in sub:
+            eo = sub["enc_out"]
+            state["enc_out"] = jnp.zeros((n_slots, *eo.shape[1:]), eo.dtype)
+        return state
+
+    def prefill_chunk_at(self, params, batch, state, slot, start) -> tuple:
+        """Insert a prompt *chunk* into batch row ``slot`` of a live state.
+
+        ``batch`` carries the chunk's tokens (1, W) — plus ``frames`` /
+        ``vision_embeds`` on the first chunk, which must start at
+        ``start == 0`` — and ``start`` is the cache position of the chunk's
+        first token (VLM text chunks count from ``vision_tokens``).  The
+        chunk runs through the family forward against a single-slot view of
+        the state, attending over the slot's already-cached prefix, so
+        chunk-by-chunk insertion reproduces a monolithic prefill
+        bit-for-bit (stale positions past the written prefix stay masked by
+        the fill level).  Returns the full (1, W, V) chunk logits — callers
+        take the last *real* column when the final chunk is padded — and
+        the updated state."""
+        cfg = self.cfg
+        slot = jnp.asarray(slot, jnp.int32)
+        start = jnp.asarray(start, jnp.int32)
+        row_cache = _row_cache_view(state["cache"], slot, fresh=(start == 0))
+        new_state = dict(state)
+        if cfg.is_encdec:
+            if "frames" in batch:
+                logits, row_cache, enc_out = encdec.encdec_forward(
+                    params, cfg, batch["frames"], batch["tokens"],
+                    row_cache, start)
+                new_state["enc_out"] = _write_rows(
+                    state["enc_out"], enc_out, slot, batch_dim=0)
+            else:
+                enc_row = jax.lax.dynamic_slice_in_dim(
+                    state["enc_out"], slot, 1, axis=0)
+                logits, row_cache = encdec.encdec_decode_tokens(
+                    params, cfg, batch["tokens"], row_cache, start, enc_row)
+        else:
+            positions = None
+            if batch.get("vision_embeds") is None:
+                pos1 = transformer.decode_positions(
+                    start, 1, batch["tokens"].shape[1])
+                positions = jnp.stack([pos1] * 3, axis=-1) if cfg.mrope \
+                    else pos1
+            logits, _, row_cache = transformer.forward(
+                params, cfg, batch["tokens"],
+                vision_embeds=batch.get("vision_embeds"),
+                positions=positions, cache=row_cache, index=start)
+        new_state["cache"] = _row_cache_unview(state["cache"], row_cache,
+                                               slot)
+        return logits, new_state
+
     def prefill_at(self, params, batch, state, slot) -> tuple:
         """Prefill ``batch`` (nb prompt rows) INTO an existing decode state.
 
-        Runs a standalone prefill for the sub-batch and writes the resulting
-        cache / recurrent-state / encoder rows into batch rows
-        [slot, slot+nb) of ``state`` — the continuous-batching insertion
-        primitive (a prompt joins a live decode batch without touching the
-        other slots).  Every cache leaf is stacked (L, B, ...) so the batch
-        dim is 1; ``enc_out`` carries batch at dim 0.  The target cache's
-        time axis must be at least the sub-batch's prefill width; stale
-        positions past the prompt stay masked by the per-slot fill level.
-        Returns (last-token logits of the inserted rows, updated state)."""
+        With a *paged* state this is single-row whole-prompt insertion —
+        one :meth:`prefill_chunk_at` call at ``start=0``, writing through
+        the slot's block table.  Contiguous states run a standalone prefill
+        for the sub-batch and write the resulting cache /
+        recurrent-state / encoder rows into batch rows [slot, slot+nb) of
+        ``state`` — the continuous-batching insertion primitive (a prompt
+        joins a live decode batch without touching the other slots).  Every
+        cache leaf is stacked (L, B, ...) so the batch dim is 1;
+        ``enc_out`` carries batch at dim 0.  The target cache's time axis
+        must be at least the sub-batch's prefill width; stale positions
+        past the prompt stay masked by the per-slot fill level.  Returns
+        (last-token logits of the inserted rows, updated state)."""
+        if cache_is_paged(state["cache"]):
+            logits, new_state = self.prefill_chunk_at(params, batch, state,
+                                                      slot, 0)
+            return logits[:, -1], new_state
         logits, sub = self.prefill(params, batch, extra_slots=0)
         slot = jnp.asarray(slot, jnp.int32)
         new_state = dict(state)

@@ -53,7 +53,12 @@ def _split_heads(x, n, d):
 # value per byte; int4 nibble-packs pairs along the head dim.
 
 def cache_bits(cache) -> int:
-    """Storage precision of a KV cache dict: 32 (float), 8, or 4."""
+    """Storage precision of a KV cache dict: 32 (float), 8, or 4.
+
+    Accepts either a contiguous cache ``{"k", "v", ...}`` or a paged one
+    ``{"pages": {"k", ...}, "table": ...}``."""
+    if "pages" in cache:
+        cache = cache["pages"]
     dt = cache["k"].dtype
     if dt == jnp.int8:
         return 8
@@ -95,6 +100,42 @@ def _cache_write(buf, update, idx, axis: int = 1):
             lambda b, u, i: jax.lax.dynamic_update_slice_in_dim(
                 b, u, i, axis=axis - 1))(buf, update, idx)
     return jax.lax.dynamic_update_slice_in_dim(buf, update, idx, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# paged cache (block-granular pool + per-slot block tables)
+# ---------------------------------------------------------------------------
+#
+# A paged layer cache is ``{"pages": {k, v[, k_scale, v_scale]}, "table"}``:
+# pool leaves carry a global page axis (P, page, KV, ...) instead of the
+# per-slot (B, T, ...) layout, and ``table`` (B, nb) maps each slot's
+# block b to the pool page holding its tokens [b*page, (b+1)*page).  Page 0
+# is reserved as the trash page: parked slots and unallocated table entries
+# point at it, and everything routed there stays masked by the per-slot
+# fill level.  The storage format (int8 / nibble-packed int4 + per-token
+# scales) is identical to the contiguous cache — paging changes residency,
+# not representation.
+
+def page_coords(table, idx, seq: int, page: int):
+    """Slot-relative write positions -> (pool page ids, in-page offsets).
+
+    ``table``: (B, nb) block table; ``idx``: scalar or (B,) fill level.
+    Returns two (B, seq) int32 arrays for positions idx .. idx+seq-1.
+    Positions past the table end clamp into the last block (jnp gather
+    semantics); callers only ever send masked scratch writes there."""
+    b = table.shape[0]
+    idx = jnp.asarray(idx, jnp.int32)
+    base = idx[:, None] if jnp.ndim(idx) == 1 else idx
+    pos = jnp.broadcast_to(base + jnp.arange(seq, dtype=jnp.int32), (b, seq))
+    pids = jnp.take_along_axis(table, pos // page, axis=1)
+    return pids, pos % page
+
+
+def paged_gather(pool_leaf, table):
+    """(P, page, ...) pool leaf + (B, nb) table -> contiguous (B, T, ...)
+    per-slot view (T = nb * page), token order preserved."""
+    g = jnp.take(pool_leaf, table, axis=0)
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
 
 
 def _mask_for(q_pos, kv_pos, causal, window, kv_len):
@@ -269,17 +310,45 @@ def attn_forward(p: Dict, x: jnp.ndarray, positions: jnp.ndarray, *,
             # at ~3% metadata overhead without compounding rounding error.
             kq, ks_sc = quantize_kv(k, bits)
             vq, vs_sc = quantize_kv(v, bits)
-            cks = _cache_write(cache["k_scale"], ks_sc, idx)
-            cvs = _cache_write(cache["v_scale"], vs_sc, idx)
-        ck = _cache_write(cache["k"], kq, idx)
-        cv = _cache_write(cache["v"], vq, idx)
-        new_cache = dict(cache, k=ck, v=cv)
-        if bits < 32:
-            new_cache.update(k_scale=cks, v_scale=cvs)
-            k = dequantize_kv(ck, cks, q.dtype)
-            v = dequantize_kv(cv, cvs, q.dtype)
+        if "table" in cache:
+            # paged: scatter the new tokens into their slots' pool pages,
+            # then gather each slot's block list back into a contiguous
+            # (B, T) view — token order matches the contiguous cache, so
+            # attention (and therefore decoding) is bit-identical.
+            table = cache["table"]
+            store = cache["pages"]
+            pids, offs = page_coords(table, idx, k.shape[1],
+                                     store["k"].shape[1])
+            new_store = dict(store,
+                             k=store["k"].at[pids, offs].set(kq),
+                             v=store["v"].at[pids, offs].set(vq))
+            if bits < 32:
+                new_store.update(
+                    k_scale=store["k_scale"].at[pids, offs].set(ks_sc),
+                    v_scale=store["v_scale"].at[pids, offs].set(vs_sc))
+            new_cache = dict(cache, pages=new_store)
+            ck = paged_gather(new_store["k"], table)
+            cv = paged_gather(new_store["v"], table)
+            if bits < 32:
+                k = dequantize_kv(ck, paged_gather(new_store["k_scale"],
+                                                   table), q.dtype)
+                v = dequantize_kv(cv, paged_gather(new_store["v_scale"],
+                                                   table), q.dtype)
+            else:
+                k, v = ck, cv
         else:
-            k, v = ck, cv
+            if bits < 32:
+                cks = _cache_write(cache["k_scale"], ks_sc, idx)
+                cvs = _cache_write(cache["v_scale"], vs_sc, idx)
+            ck = _cache_write(cache["k"], kq, idx)
+            cv = _cache_write(cache["v"], vq, idx)
+            new_cache = dict(cache, k=ck, v=cv)
+            if bits < 32:
+                new_cache.update(k_scale=cks, v_scale=cvs)
+                k = dequantize_kv(ck, cks, q.dtype)
+                v = dequantize_kv(cv, cvs, q.dtype)
+            else:
+                k, v = ck, cv
         t = ck.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(t)[None, :], (x.shape[0], t))
         kv_len = jnp.broadcast_to(jnp.asarray(idx) + x.shape[1],

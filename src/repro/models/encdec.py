@@ -187,10 +187,19 @@ def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return make_kv_cache(cfg, cfg.n_layers, batch, max_len)
 
 
+def encdec_decode_tokens(params, cfg: ModelConfig, tokens, cache, index,
+                         enc_out):
+    """Decoder-only forward over a (B, S) token block starting at cache
+    position ``index`` (encoder output precomputed) — full (B, S, V)
+    logits.  S=1 is the decode step; S>1 is a chunked-prefill insertion."""
+    mp = shard_params_tree(prepare_params(params, jnp.dtype(cfg.dtype)))
+    return decode(mp, cfg, tokens, enc_out, cache, index)
+
+
 def encdec_decode_step(params, cfg: ModelConfig, tokens, cache, index,
                        enc_out):
     """One decoder token; encoder output precomputed at prefill time.
     ``index`` may be a scalar or a per-slot (B,) vector."""
-    mp = shard_params_tree(prepare_params(params, jnp.dtype(cfg.dtype)))
-    logits, new_cache = decode(mp, cfg, tokens, enc_out, cache, index)
+    logits, new_cache = encdec_decode_tokens(params, cfg, tokens, cache,
+                                             index, enc_out)
     return logits[:, -1], new_cache

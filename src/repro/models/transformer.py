@@ -398,6 +398,52 @@ def make_kv_cache(cfg: ModelConfig, stack: int, batch: int,
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
+def _walk_cache_tree(cache, kv_fn, leaf_fn):
+    """Apply ``kv_fn`` to KV sub-dicts ({"k","v",...} leaves with a time
+    axis) and ``leaf_fn`` to recurrent leaves (no time axis) of a stacked
+    decode-cache tree (works on arrays or ShapeDtypeStructs)."""
+    if isinstance(cache, dict):
+        if "k" in cache and "v" in cache:
+            return kv_fn(cache)
+        return {k: _walk_cache_tree(v, kv_fn, leaf_fn)
+                for k, v in cache.items()}
+    return leaf_fn(cache)
+
+
+def rebatch_cache_tree(cache, n_slots: int, time_len: int):
+    """Zero contiguous decode cache re-sized to ``n_slots`` slots of
+    ``time_len`` positions, mirroring ``cache``'s tree/dtypes (which may
+    come from ``jax.eval_shape`` — no allocation until here)."""
+    return _walk_cache_tree(
+        cache,
+        lambda node: {n: jnp.zeros((l.shape[0], n_slots, time_len,
+                                    *l.shape[3:]), l.dtype)
+                      for n, l in node.items()},
+        lambda l: jnp.zeros((l.shape[0], n_slots, *l.shape[2:]), l.dtype))
+
+
+def paginate_cache_tree(cache, n_slots: int, n_pages: int, page_size: int,
+                        nb: int):
+    """Zero *paged* decode cache mirroring contiguous ``cache``.
+
+    Every KV sub-dict becomes ``{"pages", "table"}``: pool leaves trade the
+    per-slot (B, T) layout for a global (n_pages, page_size) page axis —
+    same storage dtypes, so int8/int4-at-rest formats carry over — and the
+    (stack, n_slots, nb) block table starts all-trash (page 0 is reserved;
+    a slot's block b maps to the pool page holding its tokens
+    [b*page_size, (b+1)*page_size)).  Recurrent leaves (no time axis) are
+    plain re-batched rows, as in :func:`rebatch_cache_tree`."""
+    return _walk_cache_tree(
+        cache,
+        lambda node: {
+            "pages": {n: jnp.zeros((l.shape[0], n_pages, page_size,
+                                    *l.shape[3:]), l.dtype)
+                      for n, l in node.items()},
+            "table": jnp.zeros((node["k"].shape[0], n_slots, nb),
+                               jnp.int32)},
+        lambda l: jnp.zeros((l.shape[0], n_slots, *l.shape[2:]), l.dtype))
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
     dt = _cdtype(cfg)
     if cfg.family in ("dense", "moe", "vlm"):

@@ -27,7 +27,10 @@ A/B comparisons (benchmarks/serve_bench.py --backend) are apples-to-apples.
 Two call surfaces:
   * ``generate(batch, max_new)`` — one-shot static-batch decoding (legacy).
   * ``serve(requests)`` — request-level continuous batching through
-    :class:`repro.serve.scheduler.Scheduler`.
+    :class:`repro.serve.scheduler.Scheduler`; ``page_size`` /
+    ``prefill_chunk`` engine fields (or per-call overrides) select the
+    paged block-table KV cache and chunked prompt insertion — both
+    token-identical to the contiguous monolithic path.
 """
 from __future__ import annotations
 
@@ -37,7 +40,8 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from ..dist.sharding import (batch_pspecs, cache_pspecs, get_mesh,
                              param_pspecs, use_mesh)
@@ -57,6 +61,9 @@ class ServeEngine:
     params: Any
     kv_quant_bits: int = 32       # 8 / 4 select the quantized-at-rest cache
     backend: str = "dense"        # 'dense' | 'pallas' | 'ref' matmul exec
+    page_size: int = 0            # >0: paged KV cache (tokens per page)
+    n_pages: Optional[int] = None  # page-pool capacity (None = worst case)
+    prefill_chunk: int = 0        # >0: insert prompts in chunks this wide
 
     def __post_init__(self):
         cfg = self.api.cfg
@@ -87,6 +94,7 @@ class ServeEngine:
         self._prefill_j = self._jit(self.api.prefill,
                                     static_argnames=("extra_slots",))
         self._prefill_at_j = self._jit(self.api.prefill_at)
+        self._prefill_chunk_j = self._jit(self.api.prefill_chunk_at)
         self._decode_j = self._jit(self.api.decode_step)
         if self.mesh is not None:
             self.params = self._place(self.params, param_pspecs)
@@ -150,6 +158,48 @@ class ServeEngine:
         with use_mesh(self.mesh):
             return self._prefill_at_j(self.params, batch, state, slot)
 
+    def prefill_chunk_at(self, batch: Dict[str, jnp.ndarray], state: Any,
+                         slot, start) -> tuple:
+        """Insert a prompt chunk at cache position ``start`` of row
+        ``slot``; returns (full (1, W, V) chunk logits, updated state)."""
+        batch = self._shard_inputs(batch)
+        with use_mesh(self.mesh):
+            return self._prefill_chunk_j(
+                self.params, batch, state,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(start, jnp.int32))
+
+    def init_decode_state(self, example: Dict[str, jnp.ndarray],
+                          n_slots: int, max_len: int, page_size: int = 0,
+                          n_pages: Optional[int] = None) -> Any:
+        """Empty (zeroed) decode state for the continuous-batching
+        scheduler — paged when ``page_size > 0`` — placed per
+        ``cache_pspecs`` under an active mesh."""
+        state = self.api.init_decode_state(self.params, example, n_slots,
+                                           max_len, page_size=page_size,
+                                           n_pages=n_pages)
+        return self._shard_state(state, n_slots)
+
+    def set_tables(self, state: Any, tables) -> Any:
+        """Push host-side block tables ((n_slots, nb) int32) into every
+        paged KV sub-dict of ``state`` (broadcast over each stack dim).
+        Allocation is host-owned (scheduler free list); storage is
+        device-owned — only this tiny map crosses per change."""
+        tables = np.asarray(tables, np.int32)
+
+        def walk(cache):
+            if isinstance(cache, dict):
+                if "table" in cache:
+                    stack = cache["table"].shape[0]
+                    t = jnp.asarray(
+                        np.broadcast_to(tables[None], (stack, *tables.shape)))
+                    if self.mesh is not None:
+                        t = jax.device_put(t, NamedSharding(
+                            self.mesh, PartitionSpec()))
+                    return dict(cache, table=t)
+                return {k: walk(v) for k, v in cache.items()}
+            return cache
+        return dict(state, cache=walk(state["cache"]))
+
     def decode(self, tokens: jnp.ndarray, state: Any, index) -> tuple:
         """One decode step; ``index`` is a () or per-slot (B,) fill level."""
         if self.mesh is not None:
@@ -199,18 +249,39 @@ class ServeEngine:
         return jnp.stack(outs, axis=1)
 
     # ---- request-level API ----------------------------------------------
-    def serve(self, requests, n_slots: int = 8,
-              max_len: Optional[int] = None):
-        """Run ``requests`` through a continuous-batching scheduler.
+    def make_scheduler(self, requests, n_slots: int = 8,
+                       max_len: Optional[int] = None,
+                       page_size: Optional[int] = None,
+                       n_pages: Optional[int] = None,
+                       prefill_chunk: Optional[int] = None):
+        """Continuous-batching scheduler sized for ``requests``.
 
         ``max_len`` (total per-slot cache width) defaults to the widest
         request's prompt plus 64-rounded generation headroom — the same
         rounding ``generate`` uses, so both paths compile identical decode
-        shapes.  Returns results in submission order."""
+        shapes.  ``page_size`` / ``n_pages`` / ``prefill_chunk`` default to
+        the engine's settings (0 = contiguous slots / monolithic prefill).
+        The scheduler is the stats surface too (``cache_report()``)."""
         from .scheduler import Scheduler
         if max_len is None:
             max_len = max(self.prompt_width(r.inputs) +
                           _roundup64(r.sampling.max_new_tokens)
                           for r in requests)
-        sched = Scheduler(self, n_slots=n_slots, max_len=max_len)
-        return sched.run(requests)
+        return Scheduler(
+            self, n_slots=n_slots, max_len=max_len,
+            page_size=self.page_size if page_size is None else page_size,
+            n_pages=self.n_pages if n_pages is None else n_pages,
+            prefill_chunk=(self.prefill_chunk if prefill_chunk is None
+                           else prefill_chunk))
+
+    def serve(self, requests, n_slots: int = 8,
+              max_len: Optional[int] = None,
+              page_size: Optional[int] = None,
+              n_pages: Optional[int] = None,
+              prefill_chunk: Optional[int] = None):
+        """Run ``requests`` through a continuous-batching scheduler (see
+        :meth:`make_scheduler`); results come back in submission order."""
+        return self.make_scheduler(
+            requests, n_slots=n_slots, max_len=max_len,
+            page_size=page_size, n_pages=n_pages,
+            prefill_chunk=prefill_chunk).run(requests)

@@ -1,18 +1,43 @@
-"""Slot-based continuous-batching scheduler.
+"""Slot-based continuous-batching scheduler with a paged KV option.
 
 A fixed-capacity decode batch of ``n_slots`` rows; requests are admitted
 into free slots as they arrive (their prompt is prefilled INTO the live
-cache at that batch row via ``ModelAPI.prefill_at``), every live slot
-advances one token per tick through a single jitted decode step with a
-per-slot index vector, and slots retire on EOS / max-token budget, freeing
-the row for the next waiting request.  Rows are fully independent in
-attention (masked by each slot's own fill level), so a request's tokens are
-identical whether it runs one-shot or staggered through a live batch —
-tests/test_serving.py asserts this token-for-token.  (One exception:
-MoE models under capacity-dropping dispatch — ``GROUPED_IMPL['impl'] ==
-'capacity'`` — route parked rows' dummy tokens through the same expert
-capacity budget, which can perturb live rows; the constructor warns.  The
-default exact 'ragged' dispatch is row-independent.)
+cache at that batch row), every live slot advances one token per tick
+through a single jitted decode step with a per-slot index vector, and
+slots retire on EOS / max-token budget, freeing the row for the next
+waiting request.  Rows are fully independent in attention (masked by each
+slot's own fill level), so a request's tokens are identical whether it
+runs one-shot or staggered through a live batch — tests/test_serving.py
+asserts this token-for-token.  (One exception: MoE models under
+capacity-dropping dispatch — ``GROUPED_IMPL['impl'] == 'capacity'`` —
+route parked rows' dummy tokens through the same expert capacity budget,
+which can perturb live rows; the constructor warns.  The default exact
+'ragged' dispatch is row-independent.)
+
+Two extensions over the fixed-width layout (both default-off and
+token-identical to it):
+
+* ``page_size > 0`` — **paged KV cache**: instead of every slot owning a
+  contiguous ``max_len``-wide cache row, K/V live in a global pool of
+  fixed-size pages (same int8 / nibble-packed int4 + per-token-scale
+  at-rest format) addressed through per-slot block tables.  The scheduler
+  owns a host-side free list (page 0 is the reserved trash page that
+  parked slots write into): a request is admitted when its worst-case
+  page total fits the pool's free-minus-reserved headroom, takes only its
+  prompt's pages up front, grows one page at a time as decode crosses
+  block boundaries (drawing from its reservation — mid-decode exhaustion
+  is impossible by construction), and returns everything on retirement —
+  so resident cache bytes track the tokens actually held, not
+  ``n_slots * max_len`` worst case.  When the pool lacks headroom,
+  admission waits (head-of-line) until pages free up.
+
+* ``prefill_chunk > 0`` — **chunked prefill**: prompts longer than the
+  chunk width are inserted over several ticks (one chunk per tick via
+  ``ModelAPI.prefill_chunk_at``, attending over the slot's cached prefix)
+  interleaved with the other slots' decode steps, instead of one
+  monolithic latency-spike prefill.  The final chunk is padded to the
+  chunk width so chunk shapes compile once; padded positions are masked
+  until decode overwrites them.
 
 Time is measured in scheduler *ticks* (one decode step per tick), which
 keeps admission order deterministic and lets tests/benchmarks replay
@@ -38,26 +63,112 @@ class _Slot:
     last_tok: int
     generated: List[int]
     admitted_tick: int
+    pages: List[int] = dataclasses.field(default_factory=list)
+    reserve_left: int = 0         # growth pages still drawable from pool
+    # queued prompt chunks: (inputs, start, last-logit column or None)
+    chunks: List[tuple] = dataclasses.field(default_factory=list)
 
     @property
     def key(self):
         return jax.random.PRNGKey(self.req.sampling.seed)
 
 
+class PageAllocator:
+    """Host-side free list over the global page pool.
+
+    Page 0 is reserved as the trash page (parked-slot scratch writes and
+    unallocated block-table entries), so capacity ``n_pages`` serves at
+    most ``n_pages - 1`` live pages.  Pops lowest-id-first so allocation
+    traces are deterministic and replayable.
+
+    Admission control is *reservation*-based: a request only enters a slot
+    when its worst-case page total (prompt + generation budget) fits in
+    ``free - reserved``, and its not-yet-drawn tail is recorded in
+    ``reserved``.  Pages are still *allocated* lazily (prompt pages at
+    admission, decode pages one block at a time), so ``in_use``/
+    ``peak_in_use`` track tokens actually held — but mid-decode growth can
+    never exhaust the pool, and EOS-early retirement hands its unused
+    reservation straight back."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"page pool needs >= 2 pages (one is the "
+                             f"reserved trash page), got {n_pages}")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, 0, -1))
+        self.reserved = 0          # promised to live slots, not yet drawn
+        self.peak_in_use = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - 1 - len(self._free)
+
+    def can_admit(self, total_pages: int) -> bool:
+        return total_pages <= len(self._free) - self.reserved
+
+    def alloc(self, n: int, from_reserve: int = 0) -> Optional[List[int]]:
+        """n pages (releasing ``from_reserve`` of the caller's
+        reservation), or None if the free list cannot satisfy it."""
+        if n > len(self._free):
+            return None
+        self.reserved -= from_reserve
+        pages = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def release(self, pages: List[int], from_reserve: int = 0) -> None:
+        self.reserved -= from_reserve
+        self._free.extend(sorted(pages, reverse=True))
+
+
+def _paged_pool_bytes(cache) -> int:
+    """Total at-rest bytes of every page-pool leaf in a cache tree."""
+    if isinstance(cache, dict):
+        if "table" in cache:
+            return sum(int(leaf.nbytes) for leaf in
+                       jax.tree_util.tree_leaves(cache["pages"]))
+        return sum(_paged_pool_bytes(v) for v in cache.values())
+    return 0
+
+
+def _kv_resident_bytes(cache) -> int:
+    """At-rest bytes of a contiguous cache's KV leaves (k/v + scales)."""
+    if isinstance(cache, dict):
+        if "k" in cache and "v" in cache:
+            return sum(int(leaf.nbytes) for leaf in
+                       jax.tree_util.tree_leaves(cache))
+        return sum(_kv_resident_bytes(v) for v in cache.values())
+    return 0
+
+
 class Scheduler:
     """Continuous batching over a :class:`ServeEngine`.
 
     ``max_len`` is the per-slot cache width; a request needs
-    ``prompt_width + max_new_tokens - 1 <= max_len`` positions.  The decode
-    state is created lazily on the first admission (the first prompt is
-    tiled across all rows so the state tree — cache layout, enc-dec
-    encoder buffer — comes straight from the model's own prefill)."""
+    ``prompt_width + max_new_tokens - 1 <= max_len`` positions.  With the
+    fixed-width cache the decode state is created lazily on the first
+    admission (the first prompt is tiled across all rows so the state
+    tree — cache layout, enc-dec encoder buffer — comes straight from the
+    model's own prefill).  Paged / chunked modes build a zeroed state via
+    ``ModelAPI.init_decode_state`` instead and insert every prompt —
+    including the first — through the same block-table write path."""
 
-    def __init__(self, engine, n_slots: int = 8, max_len: int = 256):
+    def __init__(self, engine, n_slots: int = 8, max_len: int = 256,
+                 page_size: int = 0, n_pages: Optional[int] = None,
+                 prefill_chunk: int = 0):
         self.engine = engine
         self.n_slots = n_slots
         self.max_len = max_len
         cfg = engine.api.cfg
+        if page_size and cfg.family == "ssm":
+            import warnings
+            warnings.warn("family 'ssm' has no KV cache to page; "
+                          "page_size ignored", stacklevel=3)
+            page_size = 0
         if cfg.n_experts:
             from ..models.moe import GROUPED_IMPL
             if GROUPED_IMPL["impl"] == "capacity":
@@ -68,6 +179,23 @@ class Scheduler:
                     "expert capacity, so live requests may diverge from "
                     "one-shot generate(); use GROUPED_IMPL['impl']="
                     "'ragged' for exact parity", stacklevel=3)
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self.paged = page_size > 0
+        if self.paged:
+            self.nb = -(-max_len // page_size)
+            self.total_len = self.nb * page_size
+            self.allocator = PageAllocator(n_pages or
+                                           1 + n_slots * self.nb)
+            self.tables = np.zeros((n_slots, self.nb), np.int32)
+        else:
+            self.nb = 0
+            self.total_len = max_len
+            self.allocator = None
+            self.tables = None
+        self._tables_dirty = False
+        # paged / chunked prompts go through the zero-state insertion path
+        self._insert_path = self.paged or prefill_chunk > 0
         self.state: Any = None
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self.waiting: List[Request] = []
@@ -87,6 +215,12 @@ class Scheduler:
             raise ValueError(
                 f"request {req.uid} needs {need} cache positions, "
                 f"scheduler max_len is {self.max_len}")
+        if self.paged:
+            pages = -(-need // self.page_size)
+            if pages > self.allocator.n_pages - 1:
+                raise ValueError(
+                    f"request {req.uid} needs {pages} pages, pool capacity "
+                    f"is {self.allocator.n_pages - 1} live pages")
         self.waiting.append(req)
         self.waiting.sort(key=lambda r: r.arrival)
 
@@ -98,9 +232,96 @@ class Scheduler:
         slot.generated.append(tok)
         slot.last_tok = tok
 
-    def _admit_into(self, i: int, req: Request) -> None:
+    def _flush_tables(self) -> None:
+        if self._tables_dirty:
+            self.state = self.engine.set_tables(self.state, self.tables)
+            self._tables_dirty = False
+
+    def _plan_chunks(self, req: Request) -> List[tuple]:
+        """Split a prompt into (inputs, start, last-col) insertion chunks.
+
+        The vision prefix / encoder frames ride the first chunk (which
+        therefore starts at cache position 0); later chunks carry tokens
+        only and start at their cache position (vision offset included).
+        Only the final chunk reports a logits column (the last *real*
+        token — the final chunk is zero-padded to the chunk width so every
+        chunk compiles to one shape).
+
+        Recurrent-state families (ssm, hybrid) always insert monolithic:
+        their state has no fill-level masking, so padded tokens would
+        pollute it, and the rwkv/mamba chunked scans are only
+        FP-*approximately* invariant to the chunk decomposition — not the
+        bit-exact parity this scheduler guarantees."""
+        inputs = req.inputs
+        toks = np.asarray(inputs["tokens"])
+        p = toks.shape[1]
+        cw = self.prefill_chunk
+        cfg = self.engine.api.cfg
+        tv = cfg.vision_tokens if cfg.family == "vlm" else 0
+        if cw <= 0 or p <= cw or cfg.family in ("ssm", "hybrid"):
+            return [(inputs, 0, None)]
+        chunks = []
+        n_c = -(-p // cw)
+        for c in range(n_c):
+            lo, hi = c * cw, min((c + 1) * cw, p)
+            w = hi - lo
+            ct = toks[:, lo:hi]
+            last = c == n_c - 1
+            if last and w < cw:
+                # pad to the chunk width for one compile shape, but never
+                # past the slot's cache extent: an overflowing write would
+                # clamp (contiguous) or alias in-page offsets (paged) onto
+                # real prompt K/V
+                padded = min(cw, self.total_len - (tv + lo))
+                ct = np.pad(ct, ((0, 0), (0, padded - w)))
+            b = {"tokens": jnp.asarray(ct)}
+            if c == 0:
+                for extra in ("vision_embeds", "frames"):
+                    if extra in inputs:
+                        b[extra] = inputs[extra]
+            start = 0 if c == 0 else tv + lo
+            col = ((tv if c == 0 else 0) + w - 1) if last else None
+            chunks.append((b, start, col))
+        return chunks
+
+    def _admit_into(self, i: int, req: Request) -> bool:
+        """Place ``req`` into free slot ``i``; False if the page pool
+        cannot cover its prompt yet (request stays queued)."""
         inputs = req.inputs
         pw = self.engine.prompt_width(inputs)
+        if self._insert_path:
+            if self.state is None:
+                self.state = self.engine.init_decode_state(
+                    inputs, self.n_slots, self.max_len,
+                    page_size=self.page_size,
+                    n_pages=self.allocator.n_pages if self.paged else None)
+            if "frames" in inputs and \
+                    inputs["frames"].shape[1] != \
+                    self.state["enc_out"].shape[1]:
+                raise ValueError(
+                    "enc-dec slot insertion needs the same encoder length "
+                    f"as the live batch: {inputs['frames'].shape[1]} != "
+                    f"{self.state['enc_out'].shape[1]}")
+            reserve = 0
+            if self.paged:
+                need = pw + req.sampling.max_new_tokens - 1
+                total = -(-need // self.page_size)
+                prompt_pages = min(-(-pw // self.page_size), total)
+                if not self.allocator.can_admit(total):
+                    return False
+                pages = self.allocator.alloc(prompt_pages)
+                reserve = total - prompt_pages
+                self.allocator.reserved += reserve
+                self.tables[i, :len(pages)] = pages
+                self._tables_dirty = True
+            else:
+                pages = []
+            self.slots[i] = _Slot(req=req, index=pw, last_tok=0,
+                                  generated=[], admitted_tick=self.tick,
+                                  pages=pages, reserve_left=reserve,
+                                  chunks=self._plan_chunks(req))
+            return True
+        # ---- legacy fixed-width path (monolithic prefill) ---------------
         if self.state is None:
             # Lazy state init: prefill the first prompt ONCE at full cache
             # width, then broadcast its state rows across all slots (rows
@@ -128,13 +349,50 @@ class Scheduler:
         self._first_token(slot, row)
         self.slots[i] = slot
         self._maybe_retire(i)
+        return True
 
     def _admit(self) -> None:
         for i in range(self.n_slots):
             if not self.waiting or self.waiting[0].arrival > self.tick:
                 return
             if self.slots[i] is None:
-                self._admit_into(i, self.waiting.pop(0))
+                if not self._admit_into(i, self.waiting[0]):
+                    return          # head-of-line blocked on free pages
+                self.waiting.pop(0)
+
+    # ---- chunked / paged prompt insertion --------------------------------
+    def _advance_prefills(self) -> None:
+        """One prompt chunk per mid-prefill slot per tick; the final chunk
+        samples the request's first token (as monolithic admission does)."""
+        for i, s in enumerate(self.slots):
+            if s is None or not s.chunks:
+                continue
+            self._flush_tables()
+            batch, start, col = s.chunks.pop(0)
+            logits, self.state = self.engine.prefill_chunk_at(
+                batch, self.state, i, start)
+            if not s.chunks:
+                self._first_token(s, logits[0, -1 if col is None else col])
+                self._maybe_retire(i)
+
+    # ---- paged growth ----------------------------------------------------
+    def _grow_pages(self, live: List[int]) -> None:
+        """Allocate the next page for any slot whose upcoming decode write
+        crosses a block boundary (decode advances one token per tick, so
+        at most one page per slot per tick)."""
+        for i in live:
+            s = self.slots[i]
+            blk = s.index // self.page_size
+            if blk >= len(s.pages):
+                # drawn from this slot's admission-time reservation, so
+                # the free list can never come up short here
+                page = self.allocator.alloc(1, from_reserve=1)
+                assert page is not None and s.reserve_left > 0, \
+                    f"reservation accounting broke for slot {i}"
+                s.reserve_left -= 1
+                s.pages += page
+                self.tables[i, blk] = page[0]
+                self._tables_dirty = True
 
     # ---- retirement ------------------------------------------------------
     def _maybe_retire(self, i: int) -> None:
@@ -149,18 +407,31 @@ class Scheduler:
                 prompt_len=slot.req.inputs["tokens"].shape[1],
                 admitted_tick=slot.admitted_tick,
                 finished_tick=self.tick)
+            if self.paged and (slot.pages or slot.reserve_left):
+                self.allocator.release(slot.pages,
+                                       from_reserve=slot.reserve_left)
+                self.tables[i, :] = 0
+                self._tables_dirty = True
             self.slots[i] = None
 
     # ---- one tick --------------------------------------------------------
     def step(self) -> None:
-        """Admit what has arrived, then advance every live slot one token."""
+        """Admit what has arrived, advance mid-prefill slots one chunk,
+        then advance every decoding slot one token."""
         self._admit()
-        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if self._insert_path:
+            self._advance_prefills()
+        live = [i for i, s in enumerate(self.slots)
+                if s is not None and not s.chunks]
         if live:
+            if self.paged:
+                self._grow_pages(live)
+            self._flush_tables()
             toks = np.zeros((self.n_slots, 1), np.int32)
-            # parked rows write their (ignored) K/V at the last position,
-            # which stays masked by the row's fill level until overwritten
-            idx = np.full((self.n_slots,), self.max_len - 1, np.int32)
+            # parked rows write their (ignored) K/V at the last position —
+            # with a paged cache that position routes to the trash page —
+            # where it stays masked by the row's fill level
+            idx = np.full((self.n_slots,), self.total_len - 1, np.int32)
             for i in live:
                 toks[i, 0] = self.slots[i].last_tok
                 idx[i] = self.slots[i].index
@@ -180,6 +451,35 @@ class Scheduler:
                 slot.index += 1
                 self._maybe_retire(i)
         self.tick += 1
+
+    # ---- reporting -------------------------------------------------------
+    def cache_report(self) -> Dict[str, Any]:
+        """Resident-cache accounting (the paged-vs-fixed-width headline).
+
+        ``bytes_in_use_peak`` charges each allocated page its full at-rest
+        footprint across every layer; ``fixed_equiv_bytes`` is what the
+        same workload would hold resident as ``n_slots`` fixed
+        ``max_len``-wide rows."""
+        if self.state is None:
+            return {"paged": self.paged}
+        if not self.paged:
+            return {"paged": False,
+                    "resident_bytes": _kv_resident_bytes(
+                        self.state["cache"])}
+        pool_bytes = _paged_pool_bytes(self.state["cache"])
+        cap = self.allocator.n_pages
+        page_bytes = pool_bytes // cap
+        return {
+            "paged": True,
+            "page_size": self.page_size,
+            "pool_capacity_pages": cap,
+            "pages_in_use": self.allocator.in_use,
+            "peak_pages_in_use": self.allocator.peak_in_use,
+            "page_bytes": page_bytes,
+            "bytes_in_use_peak": self.allocator.peak_in_use * page_bytes,
+            "fixed_equiv_bytes": page_bytes * self.n_slots *
+            self.max_len // self.page_size,
+        }
 
     # ---- drive to completion --------------------------------------------
     def run(self, requests: List[Request]) -> List[GenerationResult]:

@@ -1,0 +1,2 @@
+"""Test-support utilities (fallback property-test driver)."""
+from . import proptest  # noqa: F401

@@ -1,0 +1,112 @@
+"""Deterministic fallback property-test driver (a `hypothesis` micro-shim).
+
+``hypothesis`` is an *optional* dependency; historically the property
+suites were ``importorskip``-gated, so environments without it silently
+lost all randomized coverage.  This module implements the tiny subset of
+the hypothesis API those suites use — ``@given`` / ``@settings`` and the
+``integers`` / ``floats`` / ``sampled_from`` / ``booleans`` /
+``composite`` strategies — driven by a ``random.Random`` seeded from the
+test's name, so without the real library the same tests still run a
+bounded, *deterministic* set of drawn cases (no shrinking, no example
+database; a failure reports the falsifying draw so it can be pinned as a
+regression case).
+
+Usage (test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from repro.testing import proptest as _pt
+        given, settings, st = _pt.given, _pt.settings, _pt
+"""
+from __future__ import annotations
+
+import functools
+import random
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """A value generator: ``example(rng)`` draws one value."""
+
+    def __init__(self, fn: Callable[[random.Random], Any]):
+        self._fn = fn
+
+    def example(self, rng: random.Random) -> Any:
+        return self._fn(rng)
+
+    def map(self, f: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: f(self._fn(rng)))
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements: Sequence) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+class _Draw:
+    def __init__(self, rng: random.Random):
+        self.rng = rng
+
+    def __call__(self, strategy: Strategy) -> Any:
+        return strategy.example(self.rng)
+
+
+def composite(f: Callable) -> Callable[..., Strategy]:
+    """``@composite``-decorated builders take ``draw`` as first argument."""
+    @functools.wraps(f)
+    def builder(*args, **kwargs) -> Strategy:
+        return Strategy(lambda rng: f(_Draw(rng), *args, **kwargs))
+    return builder
+
+
+def settings(**kwargs) -> Callable:
+    """Records ``max_examples`` (other hypothesis knobs are ignored);
+    composes with :func:`given` in either decorator order."""
+    def deco(fn):
+        fn._prop_settings = dict(kwargs)
+        return fn
+    return deco
+
+
+def given(*strategies: Strategy, **kw_strategies: Strategy) -> Callable:
+    """Run the test once per drawn example (seeded by the test name)."""
+    def deco(fn):
+        # metadata only — NOT functools.wraps: exposing the wrapped
+        # signature (__wrapped__) would make pytest treat the drawn
+        # parameters as fixtures
+        def run(*args, **kwargs):
+            cfg = getattr(run, "_prop_settings",
+                          getattr(fn, "_prop_settings", {}))
+            n = cfg.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"proptest:{fn.__module__}.{fn.__name__}")
+            for i in range(n):
+                vals = [s.example(rng) for s in strategies]
+                kvals = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *vals, **kvals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (draw {i + 1}/{n}): "
+                        f"args={vals} kwargs={kvals}") from e
+        run.__name__ = fn.__name__
+        run.__qualname__ = fn.__qualname__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        run.__dict__.update(fn.__dict__)   # carries pytest marks/settings
+        return run
+    return deco

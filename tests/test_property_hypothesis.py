@@ -1,4 +1,9 @@
-"""Property-based tests (hypothesis) for BWQ-A invariants."""
+"""Property-based tests: BWQ-A invariants and qmatmul backend parity.
+
+Runs under `hypothesis` when installed; otherwise the deterministic
+fallback driver (`repro.testing.proptest`) draws a bounded seeded case
+set, so these properties are exercised in every environment instead of
+silently skipping."""
 import dataclasses
 
 import jax
@@ -6,14 +11,22 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")          # optional dep; skip, don't error
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # optional dep: seeded fallback
+    from repro.testing import proptest as _pt
+    given, settings, st = _pt.given, _pt.settings, _pt
 
 from repro.core import (BlockingSpec, adjust_precision, bitwidths, compose,
                         from_float, layer_bit_count, requantize)
 from repro.core.blocking import block_elem_counts
 from repro.core.fakequant import fq_from_float, fq_maintenance, fq_compose
 from repro.kernels.ref import pack_bits, unpack_bits
+from repro.models.common import QuantConfig, make_weight, qmatmul
+from repro.serve.deploy import to_serving_params
+
+# the whole module is randomized sweeps: full-tier / local-only
+pytestmark = pytest.mark.slow
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -108,3 +121,61 @@ def test_pack_unpack_bits_roundtrip(rows8, cols, seed):
     packed = pack_bits(jnp.asarray(bits))
     out = np.asarray(unpack_bits(packed))
     np.testing.assert_array_equal(out, bits)
+
+
+# ---------------------------------------------------------------------------
+# qmatmul backend parity (pad-and-trim kernel paths)
+# ---------------------------------------------------------------------------
+#
+# The PR 3 kernels pad non-tile-divisible M/K/N and trim the result; until
+# now only hand-picked shapes were covered (tests/test_kernels.py).  These
+# draw random matmul problems — decode-shaped M=1..16, ragged N, and K
+# values whose block padding is odd under the paper's 9x8 WB geometry (the
+# int4 nibble-pack must add a zero row) — and assert the dense in-graph
+# dequant, the Pallas kernel (interpret mode on CPU), and the pure-jnp
+# oracle agree on deployed packed weights.
+
+@st.composite
+def matmul_case(draw):
+    m = draw(st.sampled_from([1, 2, 3, 5, 7, 8, 13, 16, 33, 64]))
+    # 9-row WBs (paper geometry) make K=9/27/63 block-pad to odd rows
+    wbr, wbc = draw(st.sampled_from([(9, 8), (3, 8), (8, 128)]))
+    k = draw(st.sampled_from([9, 17, 27, 63, 64, 72, 128]))
+    n = draw(st.sampled_from([8, 24, 56, 96, 128, 200]))
+    bits = draw(st.sampled_from([8, 4]))
+    seed = draw(st.integers(0, 2 ** 16))
+    return m, k, n, bits, wbr, wbc, seed
+
+
+@given(matmul_case())
+@settings(max_examples=10, deadline=None)
+def test_qmatmul_backend_parity_random_shapes(case):
+    m, k, n, bits, wbr, wbc, seed = case
+    qc = QuantConfig(mode="fake", n_bits=8, wb_rows=wbr, wb_cols=wbc)
+    w = make_weight(jax.random.PRNGKey(seed), (k, n), qc)
+    sw = to_serving_params({"w": w}, bits=bits)["w"]
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (m, k))
+    y_dense = np.asarray(qmatmul(x, sw, backend="dense"))
+    y_ref = np.asarray(qmatmul(x, sw, backend="ref"))
+    y_pal = np.asarray(qmatmul(x, sw, backend="pallas"))
+    assert y_dense.shape == y_ref.shape == y_pal.shape == (m, n)
+    scale = np.abs(y_ref).max() + 1e-9
+    np.testing.assert_allclose(y_pal / scale, y_ref / scale, atol=1e-5)
+    np.testing.assert_allclose(y_dense / scale, y_ref / scale, atol=1e-4)
+
+
+@given(matmul_case(), st.integers(1, 4))
+@settings(max_examples=6, deadline=None)
+def test_qmatmul_batched_inputs_match_flat(case, extra_dim):
+    """qmatmul flattens leading dims before the kernel and restores them —
+    a (B, S, K) activation must equal row-by-row 2-D calls."""
+    m, k, n, bits, wbr, wbc, seed = case
+    qc = QuantConfig(mode="fake", n_bits=8, wb_rows=wbr, wb_cols=wbc)
+    w = make_weight(jax.random.PRNGKey(seed), (k, n), qc)
+    sw = to_serving_params({"w": w}, bits=bits)["w"]
+    x = jax.random.normal(jax.random.PRNGKey(seed + 2), (extra_dim, m, k))
+    y = np.asarray(qmatmul(x, sw, backend="ref"))
+    assert y.shape == (extra_dim, m, n)
+    for b in range(extra_dim):
+        yb = np.asarray(qmatmul(x[b], sw, backend="ref"))
+        np.testing.assert_allclose(y[b], yb, rtol=1e-6, atol=1e-6)

@@ -3,12 +3,16 @@
 * continuous-batching parity: staggered requests through the scheduler are
   token-identical to one-shot ``generate`` for decoder-only, VLM, and
   enc-dec families (incl. quantized-at-rest caches and slot reuse);
+* paged-cache parity: the block-table page pool (with slot reuse, chunked
+  prefill, int8/int4 at-rest storage) reproduces the same tokens and
+  drains without leaking pages, at lower resident bytes than fixed-width
+  slots (randomized workloads: tests/test_serving_stress.py);
 * KV bit-stability: a written slot's stored K/V never changes on later
   decode steps (the old engine re-quantized the whole cache every step);
 * per-slot index vectors match the legacy scalar-index decode path;
 * int4 odd-K deployment packing round-trips through serving_compose;
 * sharded decode on a 2-device mesh matches single-device (subprocess:
-  the test session is pinned to one CPU device).
+  the test session is pinned to one CPU device), contiguous and paged.
 """
 import os
 import subprocess
@@ -76,6 +80,60 @@ def test_staggered_requests_match_oneshot(arch, kv_bits):
         assert r.tokens == oneshot[i].tolist(), f"slot-parity broke @req {i}"
         assert r.finish_reason == "length"
         assert r.admitted_tick >= reqs[i].arrival
+
+
+@pytest.mark.parametrize("arch,kv_bits,page,chunk", [
+    ("phi3-mini-3.8b", 8, 4, 0),
+    ("phi3-mini-3.8b", 4, 4, 3),
+    ("seamless-m4t-large-v2", 8, 4, 3),
+    ("seamless-m4t-large-v2", 4, 4, 0),
+    ("granite-moe-3b-a800m", 8, 4, 0),
+    ("granite-moe-3b-a800m", 4, 4, 3),
+    ("qwen2-vl-2b", 8, 4, 3),
+    ("zamba2-1.2b", 8, 4, 0),     # hybrid: paged attn + recurrent rows
+])
+def test_paged_staggered_requests_match_oneshot(arch, kv_bits, page, chunk):
+    """The paged cache (block tables over a shared page pool, slot reuse,
+    optional chunked prefill) must reproduce one-shot greedy tokens
+    exactly, and drain with every page back on the free list."""
+    cfg, eng = _setup(arch, kv_bits)
+    b, max_new = 4, 6
+    batch = _batch(cfg, b=b)
+    oneshot = np.asarray(eng.generate(batch, max_new=max_new))
+    reqs = [Request(uid=i,
+                    inputs={k: v[i:i + 1] for k, v in batch.items()},
+                    sampling=SamplingParams(max_new_tokens=max_new),
+                    arrival=2 * i)
+            for i in range(b)]
+    sched = eng.make_scheduler(reqs, n_slots=3, page_size=page,
+                               prefill_chunk=chunk)
+    results = sched.run(reqs)
+    for i, r in enumerate(results):
+        assert r.tokens == oneshot[i].tolist(), f"paged parity @req {i}"
+    report = sched.cache_report()
+    assert report["pages_in_use"] == 0, f"leaked pages: {report}"
+    assert report["peak_pages_in_use"] > 0
+    assert (sched.tables == 0).all()
+
+
+def test_paged_resident_bytes_below_fixed_width():
+    """Mixed-length requests: the paged pool's peak resident bytes must
+    undercut the fixed-width layout's always-resident rows."""
+    cfg, eng = _setup("phi3-mini-3.8b", 8)
+    reqs = []
+    for i, (pl, mn) in enumerate([(2, 2), (8, 4), (16, 4), (4, 2)]):
+        toks = jax.random.randint(jax.random.fold_in(KEY, 10 + i),
+                                  (1, pl), 0, cfg.vocab).astype(jnp.int32)
+        reqs.append(Request(uid=i, inputs={"tokens": toks},
+                            sampling=SamplingParams(max_new_tokens=mn),
+                            arrival=i))
+    paged = eng.make_scheduler(reqs, n_slots=4, max_len=64, page_size=4)
+    res_p = paged.run(list(reqs))
+    fixed = eng.make_scheduler(reqs, n_slots=4, max_len=64, page_size=0)
+    res_f = fixed.run(list(reqs))
+    assert all(a.tokens == b.tokens for a, b in zip(res_p, res_f))
+    rp, rf = paged.cache_report(), fixed.cache_report()
+    assert rp["bytes_in_use_peak"] < rf["resident_bytes"], (rp, rf)
 
 
 def test_eos_retirement_frees_slot():
@@ -238,12 +296,33 @@ for shape in [(2, 1), (1, 2)]:
     assert (out == ref).all(), shape
     assert all(res[i].tokens == ref[i].tolist() for i in range(4)), shape
 print("SHARDED_OK")
+
+# paged cache placed via cache_pspecs (page pool on the data axes, KV
+# heads on the model axis, block tables replicated) must decode
+# token-identically to single-device, int8 and int4 at-rest
+for kv_bits in (8, 4):
+    ref_res = ServeEngine(api, params, kv_quant_bits=kv_bits).serve(
+        [Request(uid=i, inputs={"tokens": batch["tokens"][i:i+1]},
+                 sampling=SamplingParams(max_new_tokens=6), arrival=i)
+         for i in range(4)], n_slots=3, page_size=4, prefill_chunk=4)
+    for shape in [(2, 1), (1, 2)]:
+        with use_mesh(make_mesh(shape, ("data", "model"))):
+            eng = ServeEngine(api, params, kv_quant_bits=kv_bits)
+            res = eng.serve(
+                [Request(uid=i, inputs={"tokens": batch["tokens"][i:i+1]},
+                         sampling=SamplingParams(max_new_tokens=6),
+                         arrival=i)
+                 for i in range(4)], n_slots=3, page_size=4,
+                prefill_chunk=4)
+        assert all(res[i].tokens == ref_res[i].tokens for i in range(4)), (
+            kv_bits, shape)
+print("SHARDED_PAGED_OK")
 """
 
 
 def test_sharded_decode_matches_single_device():
     """Data- and model-sharded 2-device serving must emit the exact tokens
-    of the single-device engine (generate + scheduler paths)."""
+    of the single-device engine (generate + scheduler + paged paths)."""
     env = dict(os.environ,
                JAX_PLATFORMS="cpu",
                XLA_FLAGS="--xla_force_host_platform_device_count=2",
@@ -251,6 +330,7 @@ def test_sharded_decode_matches_single_device():
                    [os.path.join(os.path.dirname(__file__), "..", "src")] +
                    sys.path))
     out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=600)
+                         capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "SHARDED_OK" in out.stdout
+    assert "SHARDED_PAGED_OK" in out.stdout

@@ -1,0 +1,206 @@
+"""Randomized continuous-batching stress harness.
+
+Draws whole serving workloads — arrival times, prompt lengths,
+``max_new_tokens``, slot counts, KV precision, page size, prefill chunk
+width, EOS cut-offs — and checks the two invariants the scheduler
+guarantees:
+
+* every request's tokens are identical to its one-shot ``generate()``
+  output (greedy), no matter how it was staggered, paged, chunked, or
+  slot-recycled;
+* the page pool leaks nothing: after the queue drains, every page is back
+  on the free list and all block tables point at the trash page.
+
+Runs under `hypothesis` when installed, else the deterministic fallback
+driver (`repro.testing.proptest`).  The whole module is `slow` (it
+compiles many prompt shapes); CI's fast tier skips it, the full tier and
+plain `pytest` run it.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # optional dep: seeded fallback
+    from repro.testing import proptest as _pt
+    given, settings, st = _pt.given, _pt.settings, _pt
+
+from repro.configs import REGISTRY
+from repro.models.api import build
+from repro.models.common import QuantConfig
+from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve.scheduler import Scheduler
+
+pytestmark = pytest.mark.slow
+
+
+@functools.lru_cache(maxsize=None)
+def _engine(arch: str, kv_bits: int) -> ServeEngine:
+    """One engine per (arch, kv) so jit caches amortize across examples."""
+    cfg = REGISTRY[arch].tiny(dtype="float32").with_quant(
+        QuantConfig(mode="fake", n_bits=8, act_bits=8))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return ServeEngine(api, params, kv_quant_bits=kv_bits)
+
+
+# prompt lengths drawn from a small pool so prefill compiles are reused
+_PROMPT_LENS = (1, 2, 3, 5, 8, 11, 16)
+
+
+@st.composite
+def workload(draw):
+    arch = draw(st.sampled_from(["phi3-mini-3.8b", "granite-moe-3b-a800m"]))
+    kv_bits = draw(st.sampled_from([32, 8, 4]))
+    n_slots = draw(st.integers(1, 4))
+    page_size = draw(st.sampled_from([0, 3, 4, 8]))
+    prefill_chunk = draw(st.sampled_from([0, 4]))
+    n_req = draw(st.integers(3, 6))
+    reqs = [dict(prompt_len=draw(st.sampled_from(_PROMPT_LENS)),
+                 max_new=draw(st.integers(1, 8)),
+                 arrival=draw(st.integers(0, 12)),
+                 eos_cut=draw(st.sampled_from([0, 0, 2, 3])),
+                 seed=draw(st.integers(0, 2 ** 16)))
+            for _ in range(n_req)]
+    return arch, kv_bits, n_slots, page_size, prefill_chunk, reqs
+
+
+def _run_workload(arch, kv_bits, n_slots, page_size, prefill_chunk, specs):
+    eng = _engine(arch, kv_bits)
+    cfg = eng.api.cfg
+    requests, expected = [], []
+    for uid, spec in enumerate(specs):
+        toks = jax.random.randint(jax.random.PRNGKey(spec["seed"]),
+                                  (1, spec["prompt_len"]), 0,
+                                  cfg.vocab).astype(jnp.int32)
+        ref = np.asarray(eng.generate({"tokens": toks},
+                                      max_new=spec["max_new"]))[0].tolist()
+        # eos_cut > 0 forces an early 'stop' at that reference token
+        eos_id = None
+        if 0 < spec["eos_cut"] <= len(ref):
+            eos_id = ref[spec["eos_cut"] - 1]
+            ref = ref[:ref.index(eos_id) + 1]
+        requests.append(Request(
+            uid=uid, inputs={"tokens": toks},
+            sampling=SamplingParams(max_new_tokens=spec["max_new"],
+                                    eos_id=eos_id),
+            arrival=spec["arrival"]))
+        expected.append(ref)
+    sched = eng.make_scheduler(requests, n_slots=n_slots,
+                               page_size=page_size,
+                               prefill_chunk=prefill_chunk)
+    results = sched.run(requests)
+    for r, ref in zip(results, expected):
+        assert r.tokens == ref, (
+            f"uid {r.uid}: {r.tokens} != one-shot {ref} "
+            f"(slots={n_slots} page={page_size} chunk={prefill_chunk} "
+            f"kv={kv_bits})")
+        eos = requests[r.uid].sampling.eos_id
+        assert r.finish_reason == \
+            ("stop" if eos is not None and ref[-1] == eos else "length")
+    if page_size:
+        rep = sched.cache_report()
+        assert rep["pages_in_use"] == 0, f"leaked pages: {rep}"
+        assert sched.allocator.free_count == sched.allocator.n_pages - 1
+        assert sched.allocator.reserved == 0, "leaked page reservations"
+        assert (sched.tables == 0).all(), "block table not returned to trash"
+    return sched
+
+
+@given(workload())
+@settings(max_examples=4, deadline=None)
+def test_randomized_serving_matches_generate(case):
+    _run_workload(*case)
+
+
+def test_tight_pool_blocks_admission_then_drains():
+    """A pool far smaller than worst case forces head-of-line waiting;
+    every request must still finish with exact tokens and no page leaks."""
+    eng = _engine("phi3-mini-3.8b", 8)
+    cfg = eng.api.cfg
+    specs = [dict(prompt_len=8, max_new=6, arrival=0, eos_cut=0,
+                  seed=100 + i) for i in range(6)]
+    requests, expected = [], []
+    for uid, spec in enumerate(specs):
+        toks = jax.random.randint(jax.random.PRNGKey(spec["seed"]),
+                                  (1, spec["prompt_len"]), 0,
+                                  cfg.vocab).astype(jnp.int32)
+        expected.append(np.asarray(eng.generate(
+            {"tokens": toks}, max_new=spec["max_new"]))[0].tolist())
+        requests.append(Request(uid=uid, inputs={"tokens": toks},
+                                sampling=SamplingParams(max_new_tokens=6),
+                                arrival=0))
+    # 8 + 6 - 1 = 13 positions -> 4 pages/request reserved; a pool of 9
+    # live pages admits at most 2 concurrent requests though 4 slots exist
+    sched = eng.make_scheduler(requests, n_slots=4, page_size=4,
+                               n_pages=10)
+    results = sched.run(requests)
+    for r, ref in zip(results, expected):
+        assert r.tokens == ref
+    rep = sched.cache_report()
+    assert rep["pages_in_use"] == 0
+    assert rep["peak_pages_in_use"] <= 8       # 2 concurrent x 4 pages
+    assert sched.allocator.free_count == 9
+    assert sched.allocator.reserved == 0
+    assert (sched.tables == 0).all()
+
+
+def test_oversized_request_rejected_up_front():
+    eng = _engine("phi3-mini-3.8b", 8)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    sched = Scheduler(eng, n_slots=2, max_len=32, page_size=4, n_pages=4)
+    with pytest.raises(ValueError, match="pool capacity"):
+        sched.submit(Request(uid=0, inputs={"tokens": toks},
+                             sampling=SamplingParams(max_new_tokens=16)))
+
+
+def test_padded_final_chunk_respects_cache_extent():
+    """Regression: with a tight max_len, the final chunk's compile-shape
+    padding must stop at the slot's cache extent — an overflowing write
+    would clamp backwards onto real prompt K/V (contiguous) or alias
+    in-page offsets over the last prompt page (paged)."""
+    eng = _engine("phi3-mini-3.8b", 8)
+    cfg = eng.api.cfg
+    toks = jax.random.randint(jax.random.PRNGKey(11), (1, 17), 0,
+                              cfg.vocab).astype(jnp.int32)
+    ref = np.asarray(eng.generate({"tokens": toks}, max_new=4))[0].tolist()
+    for page in (0, 4):
+        sched = Scheduler(eng, n_slots=1, max_len=20, page_size=page,
+                          prefill_chunk=16)
+        res = sched.run([Request(uid=0, inputs={"tokens": toks},
+                                 sampling=SamplingParams(
+                                     max_new_tokens=4))])
+        assert res[0].tokens == ref, f"page_size={page}"
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long prompt inserted in chunks must not stall short requests:
+    the short request admitted on the same tick finishes first, and both
+    match one-shot decoding."""
+    eng = _engine("phi3-mini-3.8b", 8)
+    cfg = eng.api.cfg
+    long_toks = jax.random.randint(jax.random.PRNGKey(7), (1, 16), 0,
+                                   cfg.vocab).astype(jnp.int32)
+    short_toks = jax.random.randint(jax.random.PRNGKey(8), (1, 2), 0,
+                                    cfg.vocab).astype(jnp.int32)
+    ref_long = np.asarray(eng.generate({"tokens": long_toks},
+                                       max_new=4))[0].tolist()
+    ref_short = np.asarray(eng.generate({"tokens": short_toks},
+                                        max_new=3))[0].tolist()
+    reqs = [Request(uid=0, inputs={"tokens": long_toks},
+                    sampling=SamplingParams(max_new_tokens=4), arrival=0),
+            Request(uid=1, inputs={"tokens": short_toks},
+                    sampling=SamplingParams(max_new_tokens=3), arrival=0)]
+    sched = eng.make_scheduler(reqs, n_slots=2, page_size=4,
+                               prefill_chunk=4)
+    results = sched.run(reqs)
+    assert results[0].tokens == ref_long
+    assert results[1].tokens == ref_short
+    # 16/4 = 4 chunks -> the long prompt's first token lands on tick 3;
+    # the short request decoded from tick 0 and finished before that
+    assert results[1].finished_tick < results[0].admitted_tick + 4
+    assert sched.cache_report()["pages_in_use"] == 0
