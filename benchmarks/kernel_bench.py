@@ -21,21 +21,31 @@ import numpy as np
 from repro.core import BlockingSpec, adjust_precision, from_float, requantize
 from repro.kernels import (bwq_dense_bitplane, bwq_dense_packed,
                            to_bitplane_layout, to_packed_layout)
+from repro.serve.deploy import to_serving_params, weight_stream_bytes
+
+
+def _mixed_qt(k: int, n: int, pruned_frac: float = 0.5, seed: int = 0):
+    """A QuantizedTensor with a genuinely mixed precision assignment."""
+    import dataclasses
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * 0.05
+    qt = requantize(from_float(w, 8, BlockingSpec(8, 128)))
+    cut = int(n * pruned_frac) // 128 * 128
+    planes = qt.planes.at[4:, :, :cut].set(0.0)
+    return requantize(adjust_precision(dataclasses.replace(qt,
+                                                           planes=planes)))
 
 
 def layout_bytes(k: int = 1024, n: int = 1024, pruned_frac: float = 0.5
                  ) -> List[Dict]:
     """Weight bytes streamed from HBM per matmul for each storage layout."""
-    import dataclasses
-    w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.05
-    qt = requantize(from_float(w, 8, BlockingSpec(8, 128)))
-    cut = int(n * pruned_frac) // 128 * 128
-    planes = qt.planes.at[4:, :, :cut].set(0.0)
-    qt = requantize(adjust_precision(dataclasses.replace(qt, planes=planes)))
+    qt = _mixed_qt(k, n, pruned_frac)
 
     bl = to_bitplane_layout(qt)
     pk8 = to_packed_layout(qt, 8)
     pk4 = to_packed_layout(qt, 4)
+    # serving wire formats (what ServeEngine actually streams per step)
+    bp8 = to_serving_params({"w": qt}, 8, layout="bitplane")
+    bp4 = to_serving_params({"w": qt}, 4, layout="bitplane")
     rows = [
         dict(layout="bf16 dense", bytes_per_weight=2.0),
         dict(layout="f32 dense", bytes_per_weight=4.0),
@@ -49,17 +59,26 @@ def layout_bytes(k: int = 1024, n: int = 1024, pruned_frac: float = 0.5
         dict(layout="bwq int4 + per-WB scale",
              bytes_per_weight=round(
                  (pk4.w_int.size + pk4.scale.size * 4) / (k * n), 4)),
+        # per-block plane occupancy: only live (bit, block) planes stream,
+        # so bytes track the precision assignment (backend="bitplane")
+        dict(layout="bwq bitplane serving int8 (plane occupancy)",
+             bytes_per_weight=round(weight_stream_bytes(bp8) / (k * n), 4)),
+        dict(layout="bwq bitplane serving int4 (plane occupancy)",
+             bytes_per_weight=round(weight_stream_bytes(bp4) / (k * n), 4)),
     ]
     return rows
 
 
 def kernel_timings(m: int = 64, k: int = 512, n: int = 512) -> List[Dict]:
+    from repro.models.common import qmatmul
     w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.05
     qt = requantize(from_float(w, 8, BlockingSpec(8, 128)))
     x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
     bl = to_bitplane_layout(qt)
     pk8 = to_packed_layout(qt, 8)
     pk4 = to_packed_layout(qt, 4)
+    bp8 = to_serving_params({"w": _mixed_qt(k, n)}, 8,
+                            layout="bitplane")["w"]
 
     def t(f, *a):
         f(*a)  # compile
@@ -72,6 +91,8 @@ def kernel_timings(m: int = 64, k: int = 512, n: int = 512) -> List[Dict]:
     return [
         dict(kernel="bitplane_matmul(interp)", us=round(t(
             lambda: bwq_dense_bitplane(x, bl)), 1)),
+        dict(kernel="bitplane_serving_matmul(interp)", us=round(t(
+            lambda: qmatmul(x, bp8, backend="bitplane")), 1)),
         dict(kernel="packed_matmul8(interp)", us=round(t(
             lambda: bwq_dense_packed(x, pk8)), 1)),
         dict(kernel="packed_matmul4(interp)", us=round(t(

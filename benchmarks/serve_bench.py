@@ -2,11 +2,14 @@
 batch sizes, KV-cache precisions and matmul execution backends, plus a
 paged-vs-fixed-width cache-residency comparison, JSON output.
 
-``--backend {dense,pallas,ref}`` selects how deployed packed weights
-execute (models.common.qmatmul); every row also reports the per-step HBM
-weight-bytes the backend streams, so the roofline column stays comparable
-across backends — on CPU the wall-clock of interpret-mode pallas is NOT
-TPU time, the bytes column is the transferable quantity.
+``--backend {dense,pallas,ref,bitplane}`` selects how deployed weights
+execute (models.common.qmatmul); ``bitplane`` deploys the plane-sliced
+layout, whose ``weight_bytes_per_step`` counts true per-block plane
+occupancy — the only backend whose streamed bytes vary with the BWQ-A
+precision assignment.  Every row reports the per-step HBM weight-bytes
+the backend streams, so the roofline column stays comparable across
+backends — on CPU the wall-clock of interpret-mode pallas is NOT TPU
+time, the bytes column is the transferable quantity.
 
 Also times the OLD engine's per-step whole-tree requantization (the
 pre-redesign ``_maybe_quant_cache`` behavior, reproduced inline) against
@@ -38,8 +41,8 @@ from repro.core.pact import quantize_signed
 from repro.models.api import build
 from repro.models.common import QuantConfig
 from repro.serve import Request, SamplingParams, ServeEngine
-from repro.serve.deploy import (default_deploy_bits, to_serving_params,
-                                weight_stream_bytes)
+from repro.serve.deploy import (default_deploy_bits, default_deploy_layout,
+                                to_serving_params, weight_stream_bytes)
 
 
 def _sync(tree):
@@ -180,9 +183,10 @@ def main():
                     help="single small point (CI smoke)")
     ap.add_argument("--out", default=None, help="write JSON here")
     ap.add_argument("--backend", default="dense",
-                    choices=["dense", "pallas", "ref"],
-                    help="matmul execution backend (pallas/ref imply "
-                         "--deploy-bits 8 unless set)")
+                    choices=["dense", "pallas", "ref", "bitplane"],
+                    help="matmul execution backend (non-dense implies "
+                         "--deploy-bits 8 unless set; bitplane deploys "
+                         "the plane-sliced layout)")
     ap.add_argument("--deploy-bits", type=int, default=0, choices=[0, 4, 8],
                     help="pack weights to int8/int4 serving form first "
                          "(0 = QAT weights)")
@@ -197,7 +201,8 @@ def main():
     params = api.init(jax.random.PRNGKey(0))
     args.deploy_bits = default_deploy_bits(args.backend, args.deploy_bits)
     if args.deploy_bits:
-        params = to_serving_params(params, args.deploy_bits)
+        params = to_serving_params(params, args.deploy_bits,
+                                   layout=default_deploy_layout(args.backend))
 
     # the requant-vs-at-rest comparison is only meaningful once the cache
     # dominates the step (batch >= 8), so quick mode benches there too

@@ -25,7 +25,7 @@ from .pallas_utils import fit_block, pad_dim, resolve_interpret, round_up
 
 
 def _kernel(x_ref, planes_ref, sign_ref, mask_ref, scale_ref, o_ref, *,
-            n_bits: int, wbr: int, wbc: int, block_k: int):
+            n_bits: int, wbr: int, wbc: int, block_k: int, per_block: bool):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -49,7 +49,13 @@ def _kernel(x_ref, planes_ref, sign_ref, mask_ref, scale_ref, o_ref, *,
         mag = mag + (2.0 ** b) * plane * m
 
     sign = 1.0 - 2.0 * unpack(sign_ref[...]).astype(jnp.float32)
-    w = sign * mag * (scale_ref[0] / (2.0 ** n_bits - 1.0))
+    if per_block:
+        # per-WB effective scale (serving layout): /(2^n - 1) and each
+        # block's power-of-two rescale factor are pre-folded into the LUT
+        s = jnp.repeat(jnp.repeat(scale_ref[...], wbr, axis=0), wbc, axis=1)
+        w = sign * mag * s
+    else:
+        w = sign * mag * (scale_ref[0] / (2.0 ** n_bits - 1.0))
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
 
@@ -63,22 +69,31 @@ def bitplane_matmul(x, planes_packed, sign_packed, mask, scale, *,
     """y[M,N] = x[M,K] @ compose(planes, sign, mask, scale).
 
     planes_packed: (n_bits, K//8, N) uint8; sign_packed: (K//8, N) uint8;
-    mask: (n_bits, K//wbr, N//wbc); scale: (1,) f32 per-layer.  M/K/N that
-    do not divide the tile sizes are zero-padded up to tile multiples and
-    the output trimmed back.  ``interpret=None`` auto-selects interpret
-    mode off-TPU.
+    mask: (n_bits, K//wbr, N//wbc); scale: (1,) f32 per-layer, divided by
+    ``2^n - 1`` in-kernel, OR (K//wbr, N//wbc) f32 per-WB *effective*
+    scale (the serving layout: /(2^n - 1) and per-block rescale factors
+    pre-folded — this is what carries BWQ's mixed per-block precision to
+    the MXU).  M/K/N that do not divide the tile sizes are zero-padded up
+    to tile multiples and the output trimmed back; ``planes_packed`` may
+    carry extra zero byte-pad rows beyond K//wbr WB rows (odd block-padded
+    K under e.g. the 9x8 paper geometry packs up to the byte boundary).
+    ``interpret=None`` auto-selects interpret mode off-TPU.
     """
     interpret = resolve_interpret(interpret)
     m, k = x.shape
     n = planes_packed.shape[-1]
+    per_block = scale.ndim == 2
     unit_k = math.lcm(8, wbr)          # bit-packing rows AND WB rows align
     kp = round_up(k, unit_k)
+    kp = max(kp, round_up(planes_packed.shape[1] * 8, unit_k))
     np_ = round_up(n, wbc)
     mp = round_up(m, 8)
     x = pad_dim(pad_dim(x, 1, kp), 0, mp)
     planes_packed = pad_dim(pad_dim(planes_packed, 1, kp // 8), 2, np_)
     sign_packed = pad_dim(pad_dim(sign_packed, 0, kp // 8), 1, np_)
     mask = pad_dim(pad_dim(mask, 1, kp // wbr), 2, np_ // wbc)
+    if per_block:
+        scale = pad_dim(pad_dim(scale, 0, kp // wbr), 1, np_ // wbc)
 
     block_m = fit_block(min(block_m, mp), mp, 8)
     block_n = fit_block(min(block_n, np_), np_, wbc)
@@ -86,7 +101,10 @@ def bitplane_matmul(x, planes_packed, sign_packed, mask, scale, *,
     grid = (mp // block_m, np_ // block_n, kp // block_k)
 
     kern = functools.partial(_kernel, n_bits=n_bits, wbr=wbr, wbc=wbc,
-                             block_k=block_k)
+                             block_k=block_k, per_block=per_block)
+    scale_spec = pl.BlockSpec((block_k // wbr, block_n // wbc),
+                              lambda i, j, kk: (kk, j)) if per_block \
+        else pl.BlockSpec((1,), lambda i, j, kk: (0,))
     y = pl.pallas_call(
         kern,
         grid=grid,
@@ -97,7 +115,7 @@ def bitplane_matmul(x, planes_packed, sign_packed, mask, scale, *,
             pl.BlockSpec((block_k // 8, block_n), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((n_bits, block_k // wbr, block_n // wbc),
                          lambda i, j, kk: (0, kk, j)),
-            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+            scale_spec,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),

@@ -28,7 +28,11 @@ inside a model param tree (plus the true, unpadded ``shape``).  Both obey:
 
 ``serve.deploy.serving_to_packed_layout`` adapts a ServingWeight leaf to a
 PackedLayout with no copy; ``models.common.qmatmul`` is the call site that
-routes model matmuls here.
+routes model matmuls here.  The plane-sliced serving wire format
+(``serve.deploy.BitplaneServingWeight`` -> :class:`BitplaneLayout` via
+``serving_to_bitplane_layout``) obeys the same scale-grid geometry, with
+a per-WB *effective* scale LUT instead of the per-layer scalar and K
+byte-padded up to a multiple of 8 for the 1-bit packing.
 """
 from __future__ import annotations
 
@@ -49,7 +53,7 @@ class BitplaneLayout(NamedTuple):
     planes_packed: jnp.ndarray   # (n, K//8, N) uint8
     sign_packed: jnp.ndarray     # (K//8, N) uint8
     mask: jnp.ndarray            # (n, K//wbr, N//wbc) f32
-    scale: jnp.ndarray           # (1,)
+    scale: jnp.ndarray           # (1,) per-layer OR (K//wbr, N//wbc) per-WB
     n_bits: int
     wbr: int
     wbc: int

@@ -43,14 +43,30 @@ def expand_mask(mask: jnp.ndarray, wbr: int, wbc: int) -> jnp.ndarray:
 def bitplane_matmul_ref(x, planes_packed, sign_packed, mask, scale,
                         wbr: int = 8, wbc: int = 128,
                         out_dtype=jnp.float32) -> jnp.ndarray:
-    """y = x @ W, W = (1-2*sign) * scale/(2^n -1) * sum_b 2^b plane_b*mask_b."""
+    """y = x @ W, W = (1-2*sign) * scale/(2^n -1) * sum_b 2^b plane_b*mask_b.
+
+    ``scale``: scalar per-layer (divided by ``2^n - 1`` here) or a 2-D
+    (K//wbr, N//wbc) per-WB *effective* scale LUT (serving layout, applied
+    as-is — the /(2^n-1) and per-block rescale factors are pre-folded).
+    ``planes_packed`` may pack beyond the K//wbr WB rows up to a byte
+    boundary (odd block-padded K); the surplus rows are trimmed, and ``x``
+    with fewer than K columns is zero-filled like the packed oracle."""
     n = planes_packed.shape[0]
-    planes = unpack_bits(planes_packed)            # (n, K, N)
-    sign = 1.0 - 2.0 * unpack_bits(sign_packed)    # (K, N) in {+1,-1}
+    planes = unpack_bits(planes_packed)            # (n, K8, N)
+    sign = 1.0 - 2.0 * unpack_bits(sign_packed)    # (K8, N) in {+1,-1}
     m = jax.vmap(lambda mm: expand_mask(mm, wbr, wbc))(mask)
+    kp = m.shape[-2]
+    if planes.shape[-2] > kp:      # byte-pad rows beyond the WB grid
+        planes = planes[..., :kp, :]
+        sign = sign[:kp, :]
     weights = (2.0 ** jnp.arange(n, dtype=jnp.float32))
     mag = jnp.tensordot(weights, planes * m, axes=(0, 0))
-    w = sign * mag * (scale / (2.0 ** n - 1.0))
+    if jnp.ndim(scale) == 2:
+        w = sign * mag * expand_mask(scale, wbr, wbc)
+    else:
+        w = sign * mag * (scale / (2.0 ** n - 1.0))
+    if x.shape[-1] < w.shape[0]:
+        x = jnp.pad(x, ((0, 0), (0, w.shape[0] - x.shape[-1])))
     return (x.astype(jnp.float32) @ w).astype(out_dtype)
 
 

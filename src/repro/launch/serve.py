@@ -15,7 +15,8 @@ from ..configs import REGISTRY
 from ..models.api import build
 from ..models.common import QuantConfig
 from ..serve import Request, SamplingParams, ServeEngine
-from ..serve.deploy import default_deploy_bits, to_serving_params
+from ..serve.deploy import (default_deploy_bits, default_deploy_layout,
+                            to_serving_params)
 
 
 def _prompts(cfg, args):
@@ -43,9 +44,10 @@ def main():
     ap.add_argument("--kv-bits", type=int, default=32, choices=[4, 8, 32],
                     help="quantized-at-rest KV cache precision")
     ap.add_argument("--backend", default="dense",
-                    choices=["dense", "pallas", "ref"],
+                    choices=["dense", "pallas", "ref", "bitplane"],
                     help="matmul execution backend for deployed weights "
-                         "(pallas/ref imply --deploy-bits 8 unless set)")
+                         "(non-dense implies --deploy-bits 8 unless set; "
+                         "bitplane deploys the plane-sliced layout)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -80,8 +82,9 @@ def main():
     params = api.init(jax.random.PRNGKey(0))
     args.deploy_bits = default_deploy_bits(args.backend, args.deploy_bits)
     if args.deploy_bits:
-        params = to_serving_params(params, args.deploy_bits)
-        print(f"deployed: packed int{args.deploy_bits} serving weights")
+        layout = default_deploy_layout(args.backend)
+        params = to_serving_params(params, args.deploy_bits, layout=layout)
+        print(f"deployed: {layout} int{args.deploy_bits} serving weights")
 
     eng = ServeEngine(api, params, kv_quant_bits=args.kv_bits,
                       backend=args.backend, page_size=args.page_size,

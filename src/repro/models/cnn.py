@@ -51,12 +51,12 @@ def conv_apply(p: Dict, x: jnp.ndarray, stride: int = 1,
     — exactly the layout the paper blocks into WBs — and pushed through
     ``qmatmul``, so a deployed conv executes on the compressed
     representation.  QAT / plain weights keep the fused lax conv."""
-    from ..serve.deploy import ServingWeight
+    from ..serve.deploy import BitplaneServingWeight, ServingWeight
     meta = p["meta"]
     wq = p["qt"]
     if act_beta is not None and qc is not None and qc.act_bits < 32:
         x = pact_quant(x, act_beta, qc.act_bits)     # paper PACT (post-ReLU)
-    if isinstance(wq, ServingWeight):
+    if isinstance(wq, (ServingWeight, BitplaneServingWeight)):
         patches = jax.lax.conv_general_dilated_patches(
             x, (meta.k, meta.k), (stride, stride), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -3,18 +3,24 @@ quantized-linear dispatch layer.
 
 Params are plain nested dicts.  Weight matrices may be stored as
 ``QuantizedTensor`` (paper-faithful bit planes), ``FakeQuantTensor``
-(memory-scalable BWQ mode), ``ServingWeight`` (deployed packed integers)
-or raw arrays.  Layer code never dequantizes a weight itself: every
-``x @ W`` goes through :func:`qmatmul`, which dispatches on the weight
-representation and the active execution backend:
+(memory-scalable BWQ mode), ``ServingWeight`` (deployed packed integers),
+``BitplaneServingWeight`` (deployed 1-bit planes) or raw arrays.  Layer
+code never dequantizes a weight itself: every ``x @ W`` goes through
+:func:`qmatmul`, which dispatches on the weight representation and the
+active execution backend:
 
-* ``dense``  — dequantize the leaf in-graph and run a plain ``jnp`` dot
+* ``dense``    — dequantize the leaf in-graph and run a plain ``jnp`` dot
   (works for every representation; the only backend that training uses);
-* ``pallas`` — stream the packed ServingWeight through the Pallas
-  ``packed_matmul`` kernel (interpret mode off-TPU), so the compiled
+* ``pallas``   — stream the deployed leaf through its Pallas kernel
+  (``packed_matmul`` for ServingWeight, ``bitplane_matmul`` for
+  BitplaneServingWeight; interpret mode off-TPU), so the compiled
   program never holds a dequantized weight;
-* ``ref``    — the pure-jnp kernel oracle (``kernels/ref.py``), bit-exact
-  with ``pallas`` and useful for cross-checking.
+* ``ref``      — the pure-jnp kernel oracle of whichever layout the leaf
+  carries (``kernels/ref.py``), for cross-checking;
+* ``bitplane`` — the paper's precision-aware OU mapping on the hot path:
+  BitplaneServingWeight leaves run through the ``bitplane_matmul`` Pallas
+  kernel (per-block plane occupancy = streamed bytes); other
+  representations fall back to the dense dequant dot.
 
 The backend is selected per call (``backend=``), or ambiently with
 ``matmul_backend("pallas")`` — the serving engine wraps its jitted
@@ -37,7 +43,7 @@ from ..core.blocking import BlockingSpec
 from ..core.fakequant import FakeQuantTensor, fq_compose, fq_from_float
 from ..core.pact import pact_sym_quant
 
-MATMUL_BACKENDS = ("dense", "pallas", "ref")
+MATMUL_BACKENDS = ("dense", "pallas", "ref", "bitplane")
 _BACKEND_STACK = ["dense"]
 
 
@@ -97,8 +103,9 @@ def make_weight(key, shape, qc: QuantConfig, scale: float = 1.0,
 
 
 def _is_quant(x) -> bool:
-    from ..serve.deploy import ServingWeight
-    return isinstance(x, (QuantizedTensor, FakeQuantTensor, ServingWeight))
+    from ..serve.deploy import BitplaneServingWeight, ServingWeight
+    return isinstance(x, (QuantizedTensor, FakeQuantTensor, ServingWeight,
+                          BitplaneServingWeight))
 
 
 def materialize(params: Any, dtype=None) -> Any:
@@ -107,7 +114,8 @@ def materialize(params: Any, dtype=None) -> Any:
     Retained for offline tooling (checkpoint export, analysis); the model
     forward paths use :func:`prepare_params` + :func:`qmatmul` instead and
     never materialize a whole tree per step."""
-    from ..serve.deploy import ServingWeight, serving_compose
+    from ..serve.deploy import (BitplaneServingWeight, ServingWeight,
+                                bitplane_serving_compose, serving_compose)
 
     def conv(x):
         if isinstance(x, QuantizedTensor):
@@ -116,6 +124,8 @@ def materialize(params: Any, dtype=None) -> Any:
             return fq_compose(x, dtype)
         if isinstance(x, ServingWeight):
             return serving_compose(x, dtype or jnp.bfloat16)
+        if isinstance(x, BitplaneServingWeight):
+            return bitplane_serving_compose(x, dtype or jnp.bfloat16)
         if dtype is not None and isinstance(x, jnp.ndarray) \
                 and jnp.issubdtype(x.dtype, jnp.floating):
             return x.astype(dtype)
@@ -130,13 +140,16 @@ def qdense(w: Any, dtype=None) -> jnp.ndarray:
     call sites that genuinely need a dense weight (ragged MoE dispatch,
     the lax-conv CNN path) go through here so the packed format keeps a
     single owner."""
-    from ..serve.deploy import ServingWeight, serving_compose
+    from ..serve.deploy import (BitplaneServingWeight, ServingWeight,
+                                bitplane_serving_compose, serving_compose)
     if isinstance(w, QuantizedTensor):
         return compose(w, dtype)
     if isinstance(w, FakeQuantTensor):
         return fq_compose(w, dtype)
     if isinstance(w, ServingWeight):
         return serving_compose(w, dtype or jnp.bfloat16)
+    if isinstance(w, BitplaneServingWeight):
+        return bitplane_serving_compose(w, dtype or jnp.bfloat16)
     if dtype is not None and isinstance(w, jnp.ndarray) \
             and jnp.issubdtype(w.dtype, jnp.floating):
         return w.astype(dtype)
@@ -161,18 +174,44 @@ def _qmatmul_packed(x: jnp.ndarray, sw, backend: str) -> jnp.ndarray:
     return y[:, :n].reshape(*lead, n).astype(x.dtype)
 
 
+def _qmatmul_bitplane(x: jnp.ndarray, sw, backend: str) -> jnp.ndarray:
+    """x (..., K) @ bit-plane BitplaneServingWeight (Kp, Np) -> (..., N)."""
+    from ..kernels.bitplane_matmul import bitplane_matmul
+    from ..kernels.ref import bitplane_matmul_ref
+    from ..serve.deploy import serving_to_bitplane_layout
+    bl = serving_to_bitplane_layout(sw)
+    n = sw.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if backend == "ref":
+        y = bitplane_matmul_ref(x2, bl.planes_packed, bl.sign_packed,
+                                bl.mask, bl.scale, bl.wbr, bl.wbc)
+    else:                                      # 'bitplane' / 'pallas'
+        y = bitplane_matmul(x2, bl.planes_packed, bl.sign_packed, bl.mask,
+                            bl.scale, n_bits=bl.n_bits, wbr=bl.wbr,
+                            wbc=bl.wbc)
+    return y[:, :n].reshape(*lead, n).astype(x.dtype)
+
+
 def qmatmul(x: jnp.ndarray, w: Any, *, backend: Optional[str] = None
             ) -> jnp.ndarray:
     """y = x @ W for any weight representation (the model-side matmul).
 
     ``x``: (..., K) activations; ``w``: plain array, QuantizedTensor,
-    FakeQuantTensor or ServingWeight with trailing (K-ish, N) dims.  On
-    the packed serving path the ``pallas``/``ref`` backends execute on the
-    compressed representation directly; every other combination
-    dequantizes the single leaf in-graph and runs a plain dot."""
-    from ..serve.deploy import ServingWeight
+    FakeQuantTensor, ServingWeight or BitplaneServingWeight with trailing
+    (K-ish, N) dims.  Deployed leaves execute on their compressed form
+    under a non-dense backend — ``pallas`` runs the leaf's Pallas kernel,
+    ``ref`` its jnp oracle, ``bitplane`` the plane-sliced kernel (and
+    only that: a packed ServingWeight under ``bitplane`` falls back to
+    the dense dequant dot, keeping the backend's byte accounting honest).
+    Every other combination dequantizes the single leaf in-graph and
+    runs a plain dot."""
+    from ..serve.deploy import BitplaneServingWeight, ServingWeight
     backend = backend or current_matmul_backend()
-    if isinstance(w, ServingWeight) and backend != "dense" \
+    if isinstance(w, BitplaneServingWeight) and backend != "dense" \
+            and w.sign.ndim == 2:
+        return _qmatmul_bitplane(x, w, backend)
+    if isinstance(w, ServingWeight) and backend in ("pallas", "ref") \
             and w.w_int.ndim == 2:
         return _qmatmul_packed(x, w, backend)
     return x @ qdense(w, x.dtype)
@@ -184,15 +223,16 @@ def prepare_params(params: Any, dtype=None) -> Any:
     Casts plain float leaves to the compute dtype and composes bit-plane
     ``QuantizedTensor`` leaves up-front (their bit axis leads, so they
     cannot be sliced by the layer scan).  FakeQuantTensor / ServingWeight
-    leaves stay in their (scan-sliceable) storage — :func:`qmatmul`
-    consumes them one layer at a time, so the serving path never holds a
-    whole dequantized param tree."""
-    from ..serve.deploy import ServingWeight
+    / BitplaneServingWeight leaves stay in their (scan-sliceable) storage
+    — :func:`qmatmul` consumes them one layer at a time, so the serving
+    path never holds a whole dequantized param tree."""
+    from ..serve.deploy import BitplaneServingWeight, ServingWeight
 
     def conv(x):
         if isinstance(x, QuantizedTensor):
             return compose(x, dtype)
-        if isinstance(x, (FakeQuantTensor, ServingWeight)):
+        if isinstance(x, (FakeQuantTensor, ServingWeight,
+                          BitplaneServingWeight)):
             return x
         if dtype is not None and isinstance(x, jnp.ndarray) \
                 and jnp.issubdtype(x.dtype, jnp.floating):

@@ -1,12 +1,27 @@
-"""Deployment parameter transform: QAT weights -> packed integer serving
+"""Deployment parameter transform: QAT weights -> compressed serving
 weights (the TPU analogue of BWQ-H's compressed crossbar layout).
 
-``to_serving_params`` converts every quantized leaf into a
-:class:`ServingWeight` holding int8 (or nibble-packed int4) magnitudes plus
-the per-WB scale/bit-width LUT.  ``materialize`` dequantizes in-graph, so
-weight HBM traffic in the compiled program drops 4x/8x vs f32 — exactly the
-memory-roofline lever BWQ's compression buys on a digital accelerator
-(DESIGN.md §2; EXPERIMENTS.md §Perf).
+``to_serving_params`` converts every quantized leaf into one of two wire
+formats sharing the exact same integer grid (``_integer_grid``):
+
+* ``layout="packed"`` — :class:`ServingWeight`: int8 (or nibble-packed
+  int4) magnitudes plus the per-WB scale/bit-width LUT, consumed by the
+  ``packed_matmul`` kernel;
+* ``layout="bitplane"`` — :class:`BitplaneServingWeight`: the paper's
+  precision-aware mapping.  Each weight block is stored as 1-bit planes
+  (8 rows/byte) plus a packed sign plane, a binary (bit, block) mask LUT
+  and the per-WB effective scale; a block quantized to b bits occupies
+  exactly ``min(b, bits)`` live planes, so streamed bytes track the BWQ-A
+  precision assignment (paper Fig. 5c OU mapping).  All tensors keep
+  layer-stack dims leading, so stacked leaves ride the transformer layer
+  scan and are sliced one layer at a time.
+
+Because both layouts quantize through the same math, ``dense`` execution
+composes bit-identical weights from either — the backend-parity matrix in
+tests/test_backend_parity.py holds across representations, not just
+kernels.  ``weight_stream_bytes`` accounts HBM traffic per step; for the
+bitplane layout it counts true per-block plane occupancy (a 2-bit block
+streams 2 planes, not a dtype-wide word).
 """
 from __future__ import annotations
 
@@ -15,11 +30,14 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.bitrep import QuantizedTensor, compose_int, _levels
 from ..core.blocking import BlockingSpec, expand_block_map, pad_to_blocks
 from ..core.fakequant import FakeQuantTensor
 from ..core.quantize import pack_int4, unpack_int4
+
+SERVING_LAYOUTS = ("packed", "bitplane")
 
 
 @jax.tree_util.register_dataclass
@@ -33,8 +51,36 @@ class ServingWeight:
     bits: int = dataclasses.field(default=8, metadata=dict(static=True))
 
 
-def _quantize_leaf(w, scale, bitwidth, spec, n_bits, bits) -> ServingWeight:
-    """Shared packing math for both QAT representations."""
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BitplaneServingWeight:
+    """Bit-plane-sliced weight: the paper's precision-aware OU mapping.
+
+    Layer-stack dims lead every tensor (scan-sliceable, unlike the QAT
+    ``QuantizedTensor`` whose bit axis leads).  ``Kp8`` is the WB-padded
+    row count rounded up to a byte boundary — an odd block-padded K (the
+    9x8 paper geometry) packs zero rows up to the next multiple of 8,
+    mirroring the packed layout's odd-K nibble trick.  ``mask[b, g, h]``
+    is 1 iff block (g, h) keeps plane ``b`` live; dequantization is
+    ``(1 - 2*sign) * sum_b 2^b plane_b mask_b * scale`` with the per-WB
+    effective ``scale`` pre-folding /(2^n - 1) and each block's
+    power-of-two container rescale."""
+    planes: jnp.ndarray      # (..., bits, Kp8//8, Np) uint8 packed planes
+    sign: jnp.ndarray        # (..., Kp8//8, Np) uint8 packed sign plane
+    mask: jnp.ndarray        # (..., bits, GR, GC) f32 in {0., 1.}
+    scale: jnp.ndarray       # (..., GR, GC) f32 per-WB effective scale
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    spec: BlockingSpec = dataclasses.field(metadata=dict(static=True))
+    bits: int = dataclasses.field(default=8, metadata=dict(static=True))
+
+
+def _integer_grid(w, scale, bitwidth, spec, n_bits, bits):
+    """Quantization math shared by both serving layouts.
+
+    Returns ``(wq, gscale, shape)``: block-padded signed integers
+    (..., Kp, Np) in [-2^(bits-1), 2^(bits-1)-1], the per-WB effective
+    scale (..., GR, GC) with each block's power-of-two container rescale
+    folded in, and the true (unpadded) shape."""
     shape = tuple(w.shape)
     wp = pad_to_blocks(w, spec)
     s = scale[..., None, None] if scale.ndim else scale
@@ -52,6 +98,10 @@ def _quantize_leaf(w, scale, bitwidth, spec, n_bits, bits) -> ServingWeight:
     gscale = jnp.broadcast_to(
         (scale[..., None, None] if scale.ndim else scale) / levels,
         bitwidth.shape) * factor
+    return wq, gscale.astype(jnp.float32), shape
+
+
+def _pack_packed(wq, gscale, shape, spec, bits) -> ServingWeight:
     if bits == 8:
         w_int = wq.astype(jnp.int8)
     elif bits == 4:
@@ -64,21 +114,62 @@ def _quantize_leaf(w, scale, bitwidth, spec, n_bits, bits) -> ServingWeight:
         w_int = pack_int4(wq, axis=-2)
     else:
         raise ValueError(bits)
-    return ServingWeight(w_int=w_int, scale=gscale.astype(jnp.float32),
-                         shape=shape, spec=spec, bits=bits)
+    return ServingWeight(w_int=w_int, scale=gscale, shape=shape, spec=spec,
+                         bits=bits)
 
 
-def to_serving_params(params: Any, bits: int = 8) -> Any:
-    """Convert all quantized leaves to packed ServingWeight."""
+def _pack_bitplane(wq, gscale, bitwidth, shape, spec,
+                   bits) -> BitplaneServingWeight:
+    """Slice the shared integer grid into packed 1-bit planes.
+
+    A block whose live bit-width is bw keeps ``min(bw, bits)`` planes:
+    below the container every magnitude fits in bw bits; at/above it the
+    container rescale leaves at most ``bits`` significant bits (the -2^(
+    bits-1) clip endpoint lands exactly on plane ``bits-1``)."""
+    from ..kernels.ref import pack_bits
+    kp = wq.shape[-2]
+    kp8 = -(-kp // 8) * 8
+    if kp8 != kp:                    # odd block-padded K: zero byte-pad rows
+        pad = [(0, 0)] * wq.ndim
+        pad[-2] = (0, kp8 - kp)
+        wq = jnp.pad(wq, pad)
+    mag = jnp.abs(wq)
+    planes = jnp.stack([((mag >> b) & 1).astype(jnp.uint8)
+                        for b in range(bits)], axis=-3)
+    planes_packed = pack_bits(planes)              # (..., bits, Kp8//8, Np)
+    sign_packed = pack_bits((wq < 0).astype(jnp.uint8))
+    live = jnp.minimum(bitwidth, float(bits))      # (..., GR, GC)
+    plane_idx = jnp.arange(bits, dtype=live.dtype).reshape((bits, 1, 1))
+    mask = (plane_idx < live[..., None, :, :]).astype(jnp.float32)
+    return BitplaneServingWeight(planes=planes_packed, sign=sign_packed,
+                                 mask=mask, scale=gscale, shape=shape,
+                                 spec=spec, bits=bits)
+
+
+def _quantize_leaf(w, scale, bitwidth, spec, n_bits, bits,
+                   layout: str = "packed"):
+    wq, gscale, shape = _integer_grid(w, scale, bitwidth, spec, n_bits, bits)
+    if layout == "bitplane":
+        return _pack_bitplane(wq, gscale, bitwidth, shape, spec, bits)
+    return _pack_packed(wq, gscale, shape, spec, bits)
+
+
+def to_serving_params(params: Any, bits: int = 8,
+                      layout: str = "packed") -> Any:
+    """Convert all quantized leaves to the chosen serving wire format."""
+    if layout not in SERVING_LAYOUTS:
+        raise ValueError(f"unknown serving layout {layout!r}; "
+                         f"choose from {SERVING_LAYOUTS}")
+
     def conv(x):
         if isinstance(x, QuantizedTensor):
             from ..core.bitrep import compose
             return _quantize_leaf(compose(x), x.scale,
                                   jnp.sum(x.mask, axis=0), x.spec,
-                                  x.n_bits, bits)
+                                  x.n_bits, bits, layout)
         if isinstance(x, FakeQuantTensor):
             return _quantize_leaf(x.w, x.scale, x.bitwidth, x.spec,
-                                  x.n_bits, bits)
+                                  x.n_bits, bits, layout)
         return x
     return jax.tree_util.tree_map(
         conv, params,
@@ -102,22 +193,66 @@ def serving_to_packed_layout(sw: ServingWeight):
                         wbr=sw.spec.wb_rows, wbc=sw.spec.wb_cols)
 
 
+def serving_to_bitplane_layout(sw: BitplaneServingWeight):
+    """Adapt a (2-D) BitplaneServingWeight leaf to the kernel-facing
+    BitplaneLayout.  Zero-copy, like :func:`serving_to_packed_layout`;
+    the per-WB effective ``scale`` LUT rides along, selecting the
+    kernel's pre-folded per-block dequant path.  Stacked leaves are
+    sliced by the layer scan before they get here."""
+    from ..kernels.ops import BitplaneLayout
+    return BitplaneLayout(planes_packed=sw.planes, sign_packed=sw.sign,
+                          mask=sw.mask, scale=sw.scale, n_bits=sw.bits,
+                          wbr=sw.spec.wb_rows, wbc=sw.spec.wb_cols)
+
+
 def default_deploy_bits(backend: str, deploy_bits: int) -> int:
     """CLI rule with one owner: packed execution backends need packed
     weights, so an unset ``--deploy-bits`` defaults to int8 for them."""
     return deploy_bits or (8 if backend != "dense" else 0)
 
 
+def default_deploy_layout(backend: str) -> str:
+    """The wire format a backend executes natively: ``bitplane`` streams
+    plane-sliced weights, everything else the packed integer form."""
+    return "bitplane" if backend == "bitplane" else "packed"
+
+
+def bitplane_stream_bytes(sw: BitplaneServingWeight) -> int:
+    """Streamed bytes for one pass over a bit-plane leaf, by occupancy.
+
+    Each live (bit, block) mask entry streams one wbr x wbc 1-bit plane
+    tile; a block with any live plane also streams its sign tile (fully
+    masked blocks are skipped whole, like the OUs the memory controller
+    never fetches).  The per-WB scale LUT streams as stored f32 and the
+    binary mask LUT at one bit per entry.  Byte-boundary padding rows are
+    not billed — they exist only for the packed wire format."""
+    wbr, wbc = sw.spec.wb_rows, sw.spec.wb_cols
+    mask = np.asarray(sw.mask)
+    live_planes = int(mask.sum())
+    live_blocks = int((mask.sum(axis=-3) > 0).sum())
+    plane_bits = (live_planes + live_blocks) * wbr * wbc
+    mask_bits = mask.size
+    return int(-(-plane_bits // 8) + -(-mask_bits // 8)
+               + int(sw.scale.nbytes))
+
+
 def weight_stream_bytes(params) -> int:
     """HBM bytes of weight state one full forward/decode step streams.
 
-    ServingWeight leaves count their packed payload (w_int + per-WB
-    scales); QAT representations and plain arrays count every array leaf
-    as stored — which is exactly what the dense backend reads per step.
+    BitplaneServingWeight leaves count per-block plane occupancy
+    (:func:`bitplane_stream_bytes`) — the first accounting where streamed
+    bytes vary with the BWQ-A precision assignment; packed ServingWeight
+    leaves count their packed payload (w_int + per-WB scales); QAT
+    representations and plain arrays count every array leaf as stored —
+    which is exactly what the dense backend reads per step.
     """
     total = 0
-    for leaf in jax.tree_util.tree_leaves(params):
-        if hasattr(leaf, "nbytes"):
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, BitplaneServingWeight))
+    for leaf in leaves:
+        if isinstance(leaf, BitplaneServingWeight):
+            total += bitplane_stream_bytes(leaf)
+        elif hasattr(leaf, "nbytes"):
             total += int(leaf.nbytes)
     return total
 
@@ -132,5 +267,27 @@ def serving_compose(sw: ServingWeight, dtype=jnp.bfloat16) -> jnp.ndarray:
     # odd block-padded K packs one zero row; trim back to the scale map
     wq = wq[..., :s_full.shape[-2], :]
     w = wq * s_full
+    k, n = sw.shape[-2], sw.shape[-1]
+    return w[..., :k, :n].astype(dtype)
+
+
+def bitplane_serving_compose(sw: BitplaneServingWeight,
+                             dtype=jnp.bfloat16) -> jnp.ndarray:
+    """In-graph dequantization of the bit-plane layout (dense backend).
+
+    Elementwise identical to :func:`serving_compose` on the packed form
+    of the same leaf: the plane sum reproduces each |wq| exactly (integer
+    arithmetic below 2^bits is exact in f32) and the per-WB effective
+    scale is the same LUT, so the two layouts are interchangeable under
+    ``dense`` execution."""
+    from ..kernels.ref import unpack_bits
+    planes = unpack_bits(sw.planes)                # (..., bits, Kp8, Np)
+    sign = 1.0 - 2.0 * unpack_bits(sw.sign)        # (..., Kp8, Np)
+    m_full = expand_block_map(sw.mask, sw.spec)    # (..., bits, Kp, Np)
+    kp = m_full.shape[-2]
+    weights = (2.0 ** jnp.arange(sw.bits, dtype=jnp.float32)
+               ).reshape((sw.bits, 1, 1))
+    mag = jnp.sum(planes[..., :kp, :] * m_full * weights, axis=-3)
+    w = sign[..., :kp, :] * (mag * expand_block_map(sw.scale, sw.spec))
     k, n = sw.shape[-2], sw.shape[-1]
     return w[..., :k, :n].astype(dtype)

@@ -15,11 +15,14 @@ placed by ``param_pspecs`` and prompt/state tensors by ``batch_pspecs`` /
 ``cache_pspecs``, so prefill and decode run sharded (batch on the data
 axes, KV heads on the model axis) with no API change.
 
-``backend`` selects how deployed (ServingWeight) matmuls execute inside
-the jitted prefill/decode: ``dense`` dequantizes each leaf in-graph and
-runs plain dots; ``pallas`` streams the packed int8/int4 representation
-through the ``packed_matmul`` kernel (interpret mode auto-detected
-off-TPU); ``ref`` is the pure-jnp kernel oracle.  The flag is applied as a
+``backend`` selects how deployed (ServingWeight / BitplaneServingWeight)
+matmuls execute inside the jitted prefill/decode: ``dense`` dequantizes
+each leaf in-graph and runs plain dots; ``pallas`` streams the deployed
+representation through its Pallas kernel (interpret mode auto-detected
+off-TPU); ``ref`` is the pure-jnp kernel oracle; ``bitplane`` runs the
+paper's plane-sliced precision-aware mapping (deploy with
+``to_serving_params(..., layout="bitplane")``) so per-step weight bytes
+track each block's live bit count.  The flag is applied as a
 trace-time ``models.common.matmul_backend`` context around every jitted
 entry point, so the whole serving program is built for one backend and
 A/B comparisons (benchmarks/serve_bench.py --backend) are apples-to-apples.
@@ -72,10 +75,11 @@ class ServeEngine:
                              f"got {self.backend!r}")
         if self.backend != "dense" and not self._has_packed_weights():
             import warnings
+            hint = ", layout='bitplane'" if self.backend == "bitplane" else ""
             warnings.warn(
                 f"backend={self.backend!r} only accelerates deployed packed "
-                f"weights (serve.deploy.to_serving_params); this param tree "
-                f"has none, so execution is identical to 'dense'",
+                f"weights (serve.deploy.to_serving_params(...{hint})); this "
+                f"param tree has none, so execution is identical to 'dense'",
                 stacklevel=2)
         if self.kv_quant_bits < 32:
             if self.kv_quant_bits not in (4, 8):
@@ -100,11 +104,17 @@ class ServeEngine:
             self.params = self._place(self.params, param_pspecs)
 
     def _has_packed_weights(self) -> bool:
-        from .deploy import ServingWeight
-        return any(isinstance(leaf, ServingWeight)
+        """True if the tree holds leaves this backend can accelerate:
+        ``bitplane`` executes only the plane-sliced layout (packed leaves
+        fall back to dense); ``pallas``/``ref`` run either wire format."""
+        from .deploy import BitplaneServingWeight, ServingWeight
+        deployed = (ServingWeight, BitplaneServingWeight)
+        want = (BitplaneServingWeight,) if self.backend == "bitplane" \
+            else deployed
+        return any(isinstance(leaf, want)
                    for leaf in jax.tree_util.tree_leaves(
                        self.params,
-                       is_leaf=lambda x: isinstance(x, ServingWeight)))
+                       is_leaf=lambda x: isinstance(x, deployed)))
 
     def _jit(self, fn, **jit_kwargs):
         """jit ``fn`` with the engine's matmul backend active at trace

@@ -1,17 +1,25 @@
-"""Kernel-vs-dense execution backend parity.
+"""Kernel-vs-dense execution backend parity, across BOTH wire formats.
 
 * every model family forward (dense / MoE / enc-dec / CNN) on deployed
   packed weights under ``backend="pallas"`` (interpret mode on CPU) and
   ``backend="ref"`` matches ``backend="dense"`` within fp32 tolerance —
   including int4 with the paper's 9x8 WB geometry, whose block padding
   produces an odd K (one zero nibble row);
+* the bit-plane serving layout composes the *bit-identical* weight as the
+  packed layout (same integer grid, same per-WB effective scale), so the
+  parity matrix extends across representations, not just kernels;
 * stacked (scanned) weights: a layer slice of a stacked ServingWeight
   executes identically through the kernel;
-* the decoder-only ServeEngine is token-identical across backends under
-  greedy decode (the PR acceptance criterion);
+* the ServeEngine is token-identical across the FULL backend matrix
+  (dense / pallas / ref on packed, bitplane on plane-sliced) under greedy
+  decode for transformer, MoE and enc-dec families at int8 AND int4 (the
+  PR acceptance criterion);
+* ``weight_stream_bytes`` counts per-block plane occupancy for the
+  bit-plane layout (pinned byte counts for a known mixed assignment);
 * ep_mode sharded MoE honors ``GROUPED_IMPL["impl"] == "ragged"`` (exact,
   no capacity drops) — 2-device subprocess vs the single-device oracle.
 """
+import dataclasses
 import os
 import subprocess
 import sys
@@ -27,16 +35,20 @@ from repro.models.api import build
 from repro.models.common import (QuantConfig, make_weight, matmul_backend,
                                  qmatmul)
 from repro.serve import ServeEngine
-from repro.serve.deploy import to_serving_params
+from repro.serve.deploy import (bitplane_stream_bytes, to_serving_params,
+                                weight_stream_bytes)
 
 KEY = jax.random.PRNGKey(7)
 
+FAMILIES = ["phi3-mini-3.8b", "granite-moe-3b-a800m", "seamless-m4t-large-v2"]
 
-def _setup(arch, bits):
+
+def _setup(arch, bits, layout="packed"):
     cfg = REGISTRY[arch].tiny(dtype="float32").with_quant(
         QuantConfig(mode="fake", n_bits=8, act_bits=8))   # 9x8 WB geometry
     api = build(cfg)
-    params = to_serving_params(api.init(jax.random.PRNGKey(0)), bits)
+    params = to_serving_params(api.init(jax.random.PRNGKey(0)), bits,
+                               layout=layout)
     return cfg, api, params
 
 
@@ -61,17 +73,24 @@ def test_interpret_autodetects_off_tpu():
 # forward-logit parity per family
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "granite-moe-3b-a800m",
-                                  "seamless-m4t-large-v2"])
+@pytest.mark.parametrize("arch", FAMILIES)
 @pytest.mark.parametrize("bits", [8, 4])
 def test_family_forward_parity(arch, bits):
-    """Prefill logits agree across backends on int8 AND int4 packing
-    (int4 under the default 9x8 spec exercises odd block-padded K)."""
+    """Prefill logits agree across backends AND wire formats on int8 and
+    int4 packing (int4 under the default 9x8 spec exercises odd
+    block-padded K).  The dense compose of the bit-plane layout must be
+    *bit-identical* to the packed layout — same integer grid."""
     cfg, api, params = _setup(arch, bits)
+    _, _, bp = _setup(arch, bits, layout="bitplane")
     batch = _batch(cfg)
     ref, _ = ServeEngine(api, params, backend="dense").prefill(batch)
-    for be in ("pallas", "ref"):
-        got, _ = ServeEngine(api, params, backend=be).prefill(batch)
+    ref_bp, _ = ServeEngine(api, bp, backend="dense").prefill(batch)
+    np.testing.assert_allclose(np.asarray(ref_bp), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6,
+                               err_msg=f"{arch} int{bits} cross-layout")
+    for be, p in (("pallas", params), ("ref", params),
+                  ("bitplane", bp), ("ref", bp)):
+        got, _ = ServeEngine(api, p, backend=be).prefill(batch)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=2e-4, atol=2e-4,
                                    err_msg=f"{arch} int{bits} {be}")
@@ -85,12 +104,13 @@ def test_cnn_forward_parity(bits):
     qc = QuantConfig(mode="fake", n_bits=8)              # 9x8 blocks
     params = resnet_init(jax.random.PRNGKey(0), qc, depth=8)
     sp = to_serving_params(params, bits)
+    bp = to_serving_params(params, bits, layout="bitplane")
     x = jax.random.normal(KEY, (2, 8, 8, 3))
     with matmul_backend("dense"):
         ref = np.asarray(resnet_apply(sp, x, qc))
-    for be in ("pallas", "ref"):
+    for be, p in (("pallas", sp), ("ref", sp), ("bitplane", bp)):
         with matmul_backend(be):
-            got = np.asarray(resnet_apply(sp, x, qc))
+            got = np.asarray(resnet_apply(p, x, qc))
         np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4,
                                    err_msg=f"cnn int{bits} {be}")
 
@@ -132,21 +152,40 @@ def test_stacked_scanned_weight_slice():
             np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                        rtol=2e-5, atol=2e-5,
                                        err_msg=f"int{bits} {be}")
+        # same contract for the bit-plane layout: layer-stack dims lead,
+        # so a scan slice is exactly the kernel-facing (bits, K8, N) form
+        bw = to_serving_params({"w": w}, bits, layout="bitplane")["w"]
+        bw1 = jax.tree_util.tree_map(lambda a: a[1], bw)
+        for be in ("bitplane", "ref"):
+            y = qmatmul(x, bw1, backend=be)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=f"bitplane int{bits} {be}")
 
 
 # ---------------------------------------------------------------------------
-# token-identical engine decode (acceptance criterion)
+# token-identical engine decode over the full backend matrix (acceptance)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("arch", FAMILIES)
 @pytest.mark.parametrize("bits", [8, 4])
-def test_engine_greedy_decode_token_identical(bits):
-    cfg, api, params = _setup("phi3-mini-3.8b", bits)
-    batch = _batch(cfg, b=3, p=8)
-    out = {be: np.asarray(
-        ServeEngine(api, params, kv_quant_bits=8, backend=be)
-        .generate(batch, max_new=6)) for be in ("dense", "pallas", "ref")}
-    np.testing.assert_array_equal(out["dense"], out["pallas"])
-    np.testing.assert_array_equal(out["dense"], out["ref"])
+def test_engine_greedy_decode_token_identical_matrix(arch, bits):
+    """Greedy decodes are token-identical across the full backend matrix
+    — dense / pallas / ref on the packed layout, bitplane on the
+    plane-sliced layout — for transformer, MoE and enc-dec families at
+    int8 and int4."""
+    cfg, api, params = _setup(arch, bits)
+    _, _, bp = _setup(arch, bits, layout="bitplane")
+    batch = _batch(cfg, b=2, p=8)
+    out = {}
+    for be, p in (("dense", params), ("pallas", params), ("ref", params),
+                  ("bitplane", bp)):
+        out[be] = np.asarray(
+            ServeEngine(api, p, kv_quant_bits=8, backend=be)
+            .generate(batch, max_new=4))
+    for be in ("pallas", "ref", "bitplane"):
+        np.testing.assert_array_equal(out[be], out["dense"],
+                                      err_msg=f"{arch} int{bits} {be}")
 
 
 def test_backend_validation_and_warning():
@@ -156,6 +195,57 @@ def test_backend_validation_and_warning():
     qat = api.init(jax.random.PRNGKey(0))               # no packed leaves
     with pytest.warns(UserWarning, match="packed"):
         ServeEngine(api, qat, backend="pallas")
+    # bitplane accelerates only the plane-sliced layout: a packed tree
+    # must warn (execution would silently fall back to dense)
+    with pytest.warns(UserWarning, match="bitplane"):
+        ServeEngine(api, params, backend="bitplane")
+
+
+# ---------------------------------------------------------------------------
+# weight_stream_bytes: per-block plane occupancy
+# ---------------------------------------------------------------------------
+
+def test_weight_stream_bytes_bitplane_occupancy():
+    """Pinned byte counts for a known mixed-precision assignment under the
+    paper's 9x8 geometry: (K, N) = (18, 16) -> 2x2 WB grid with live
+    bit-widths [[2, 4], [0, 8]].
+
+    Per live (bit, block) entry one 72-bit plane tile streams; blocks
+    with any live plane also stream their 72-bit sign tile; the mask LUT
+    is 1 bit/entry and the scale LUT stored f32."""
+    qc = QuantConfig(mode="fake", n_bits=8)              # 9x8 blocks
+    fq = make_weight(jax.random.PRNGKey(0), (18, 16), qc)
+    fq = dataclasses.replace(
+        fq, bitwidth=jnp.asarray([[2., 4.], [0., 8.]]))
+    bp8 = to_serving_params({"w": fq}, 8, layout="bitplane")["w"]
+    bp4 = to_serving_params({"w": fq}, 4, layout="bitplane")["w"]
+    # int8 container: live planes min(bw, 8) = 2+4+0+8 = 14, live blocks 3
+    #   -> ceil((14+3)*72 / 8) + ceil(8*4 / 8) + 4*4 = 153 + 4 + 16 = 173
+    assert bitplane_stream_bytes(bp8) == 173
+    # int4 container: live planes min(bw, 4) = 2+4+0+4 = 10
+    #   -> (10+3)*72/8 + ceil(4*4 / 8) + 4*4 = 117 + 2 + 16 = 135
+    assert bitplane_stream_bytes(bp4) == 135
+    assert weight_stream_bytes({"w": bp8}) == 173
+    # the mask LUT mirrors the assignment (plane b live iff b < bw)
+    mask = np.asarray(bp8.mask)                          # (8, 2, 2)
+    np.testing.assert_array_equal(mask.sum(axis=0), [[2, 4], [0, 8]])
+    # pruning planes strictly reduces streamed bytes vs the uniform tree
+    uniform = to_serving_params(
+        {"w": make_weight(jax.random.PRNGKey(0), (18, 16), qc)}, 8,
+        layout="bitplane")["w"]
+    assert bitplane_stream_bytes(bp8) < bitplane_stream_bytes(uniform)
+
+
+def test_weight_stream_bytes_bitplane_below_dense():
+    """Acceptance: any deploy-bits < 8 bit-plane assignment streams
+    strictly fewer bytes per step than the dense (QAT float) tree — and
+    int4 fewer than int8 (4 planes + sign vs 8 planes + sign)."""
+    _, api, _ = _setup("phi3-mini-3.8b", 8)
+    qat = api.init(jax.random.PRNGKey(0))
+    dense_bytes = weight_stream_bytes(qat)
+    bp8 = weight_stream_bytes(to_serving_params(qat, 8, layout="bitplane"))
+    bp4 = weight_stream_bytes(to_serving_params(qat, 4, layout="bitplane"))
+    assert bp4 < bp8 < dense_bytes
 
 
 # ---------------------------------------------------------------------------

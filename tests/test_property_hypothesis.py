@@ -23,7 +23,7 @@ from repro.core.blocking import block_elem_counts
 from repro.core.fakequant import fq_from_float, fq_maintenance, fq_compose
 from repro.kernels.ref import pack_bits, unpack_bits
 from repro.models.common import QuantConfig, make_weight, qmatmul
-from repro.serve.deploy import to_serving_params
+from repro.serve.deploy import bitplane_stream_bytes, to_serving_params
 
 # the whole module is randomized sweeps: full-tier / local-only
 pytestmark = pytest.mark.slow
@@ -179,3 +179,76 @@ def test_qmatmul_batched_inputs_match_flat(case, extra_dim):
     for b in range(extra_dim):
         yb = np.asarray(qmatmul(x[b], sw, backend="ref"))
         np.testing.assert_allclose(y[b], yb, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bit-plane serving layout: bitplane_matmul vs its jnp oracle vs the dense
+# compose, under random decode-shaped M, ragged N, odd block-padded K and
+# *mixed per-block bit-widths* (the paper's whole point: each block's live
+# bit count is what the kernel streams and what the bytes accounting bills)
+# ---------------------------------------------------------------------------
+
+def _mixed_fq(k, n, qc, seed):
+    """FakeQuantTensor with a random per-WB bit-width assignment (0..8),
+    snapped onto its grid by fq_maintenance."""
+    fq = make_weight(jax.random.PRNGKey(seed), (k, n), qc)
+    gr, gc = qc.spec.grid(k, n)
+    bws = jax.random.randint(jax.random.PRNGKey(seed + 1), (gr, gc), 0, 9)
+    fq = dataclasses.replace(fq, bitwidth=bws.astype(fq.bitwidth.dtype))
+    return fq_maintenance(fq)
+
+
+@st.composite
+def bitplane_case(draw):
+    m = draw(st.sampled_from([1, 2, 3, 5, 8, 13, 16, 33]))
+    # 9x8 is the paper OU geometry; 9-row WBs block-pad K to odd rows
+    wbr, wbc = draw(st.sampled_from([(9, 8), (3, 8), (8, 128)]))
+    k = draw(st.sampled_from([9, 17, 27, 63, 64, 72, 128]))
+    n = draw(st.sampled_from([8, 24, 56, 100, 128]))
+    bits = draw(st.sampled_from([8, 4]))
+    seed = draw(st.integers(0, 2 ** 16))
+    return m, k, n, bits, wbr, wbc, seed
+
+
+@given(bitplane_case())
+@settings(max_examples=10, deadline=None)
+def test_bitplane_backend_parity_mixed_bitwidths(case):
+    """Pallas bitplane kernel == jnp oracle == dense compose on the
+    plane-sliced serving weight, for mixed per-block bit-widths."""
+    m, k, n, bits, wbr, wbc, seed = case
+    qc = QuantConfig(mode="fake", n_bits=8, wb_rows=wbr, wb_cols=wbc)
+    fq = _mixed_fq(k, n, qc, seed)
+    bp = to_serving_params({"w": fq}, bits=bits, layout="bitplane")["w"]
+    x = jax.random.normal(jax.random.PRNGKey(seed + 2), (m, k))
+    y_dense = np.asarray(qmatmul(x, bp, backend="dense"))
+    y_ref = np.asarray(qmatmul(x, bp, backend="ref"))
+    y_bp = np.asarray(qmatmul(x, bp, backend="bitplane"))
+    assert y_dense.shape == y_ref.shape == y_bp.shape == (m, n)
+    scale = np.abs(y_ref).max() + 1e-9
+    np.testing.assert_allclose(y_bp / scale, y_ref / scale, atol=1e-5)
+    np.testing.assert_allclose(y_dense / scale, y_ref / scale, atol=1e-5)
+
+
+@given(bitplane_case())
+@settings(max_examples=10, deadline=None)
+def test_bitplane_composes_identical_to_packed(case):
+    """Cross-representation invariant: both serving layouts quantize
+    through the same integer grid, so their dense composes — and hence
+    dense-backend outputs — are BIT-IDENTICAL, and the bit-plane layout
+    never streams more plane-bytes than the packed container would
+    (min(bw, bits) + sign planes <= (bits+...) worth of payload for every
+    mixed assignment; fully-masked blocks stream nothing)."""
+    m, k, n, bits, wbr, wbc, seed = case
+    qc = QuantConfig(mode="fake", n_bits=8, wb_rows=wbr, wb_cols=wbc)
+    fq = _mixed_fq(k, n, qc, seed)
+    bp = to_serving_params({"w": fq}, bits=bits, layout="bitplane")["w"]
+    pk = to_serving_params({"w": fq}, bits=bits)["w"]
+    x = jax.random.normal(jax.random.PRNGKey(seed + 2), (m, k))
+    y_bp = np.asarray(qmatmul(x, bp, backend="dense"))
+    y_pk = np.asarray(qmatmul(x, pk, backend="dense"))
+    np.testing.assert_array_equal(y_bp, y_pk)
+    # occupancy accounting: mask rows mirror min(bw, bits) exactly
+    live = np.asarray(bp.mask).sum(axis=0)
+    want = np.minimum(np.asarray(fq.bitwidth), bits)
+    np.testing.assert_array_equal(live, want)
+    assert bitplane_stream_bytes(bp) > 0

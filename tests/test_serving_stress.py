@@ -33,19 +33,26 @@ from repro.configs import REGISTRY
 from repro.models.api import build
 from repro.models.common import QuantConfig
 from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve.deploy import to_serving_params
 from repro.serve.scheduler import Scheduler
 
 pytestmark = pytest.mark.slow
 
 
 @functools.lru_cache(maxsize=None)
-def _engine(arch: str, kv_bits: int) -> ServeEngine:
-    """One engine per (arch, kv) so jit caches amortize across examples."""
+def _engine(arch: str, kv_bits: int, backend: str = "dense",
+            deploy=None) -> ServeEngine:
+    """One engine per (arch, kv, backend, deploy) so jit caches amortize
+    across examples.  ``deploy`` is an optional (bits, layout) pair that
+    converts the QAT tree to serving weights first."""
     cfg = REGISTRY[arch].tiny(dtype="float32").with_quant(
         QuantConfig(mode="fake", n_bits=8, act_bits=8))
     api = build(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    return ServeEngine(api, params, kv_quant_bits=kv_bits)
+    if deploy is not None:
+        bits, layout = deploy
+        params = to_serving_params(params, bits, layout=layout)
+    return ServeEngine(api, params, kv_quant_bits=kv_bits, backend=backend)
 
 
 # prompt lengths drawn from a small pool so prefill compiles are reused
@@ -115,6 +122,61 @@ def _run_workload(arch, kv_bits, n_slots, page_size, prefill_chunk, specs):
 @settings(max_examples=4, deadline=None)
 def test_randomized_serving_matches_generate(case):
     _run_workload(*case)
+
+
+# ---------------------------------------------------------------------------
+# bitplane execution backend under the randomized harness: the plane-
+# sliced kernel must survive paged block tables + chunked prefill with
+# token parity against ONE-SHOT DENSE generate on the same deployed
+# weights, and drain the page pool leak-free
+# ---------------------------------------------------------------------------
+
+@st.composite
+def bitplane_workload(draw):
+    n_slots = draw(st.integers(1, 3))
+    page_size = draw(st.sampled_from([3, 4, 8]))       # always paged
+    prefill_chunk = draw(st.sampled_from([0, 4]))
+    n_req = draw(st.integers(3, 5))
+    reqs = [dict(prompt_len=draw(st.sampled_from((2, 5, 8, 11))),
+                 max_new=draw(st.integers(1, 6)),
+                 arrival=draw(st.integers(0, 8)),
+                 seed=draw(st.integers(0, 2 ** 16)))
+            for _ in range(n_req)]
+    return n_slots, page_size, prefill_chunk, reqs
+
+
+@given(bitplane_workload())
+@settings(max_examples=2, deadline=None)
+def test_bitplane_backend_randomized_serving(case):
+    n_slots, page_size, prefill_chunk, specs = case
+    deploy = (8, "bitplane")
+    dense = _engine("phi3-mini-3.8b", 8, "dense", deploy)
+    eng = _engine("phi3-mini-3.8b", 8, "bitplane", deploy)
+    cfg = eng.api.cfg
+    requests, expected = [], []
+    for uid, spec in enumerate(specs):
+        toks = jax.random.randint(jax.random.PRNGKey(spec["seed"]),
+                                  (1, spec["prompt_len"]), 0,
+                                  cfg.vocab).astype(jnp.int32)
+        expected.append(np.asarray(dense.generate(
+            {"tokens": toks}, max_new=spec["max_new"]))[0].tolist())
+        requests.append(Request(
+            uid=uid, inputs={"tokens": toks},
+            sampling=SamplingParams(max_new_tokens=spec["max_new"]),
+            arrival=spec["arrival"]))
+    sched = eng.make_scheduler(requests, n_slots=n_slots,
+                               page_size=page_size,
+                               prefill_chunk=prefill_chunk)
+    results = sched.run(requests)
+    for r, ref in zip(results, expected):
+        assert r.tokens == ref, (
+            f"uid {r.uid}: bitplane {r.tokens} != one-shot dense {ref} "
+            f"(slots={n_slots} page={page_size} chunk={prefill_chunk})")
+    rep = sched.cache_report()
+    assert rep["pages_in_use"] == 0, f"leaked pages: {rep}"
+    assert sched.allocator.free_count == sched.allocator.n_pages - 1
+    assert sched.allocator.reserved == 0, "leaked page reservations"
+    assert (sched.tables == 0).all(), "block table not returned to trash"
 
 
 def test_tight_pool_blocks_admission_then_drains():
