@@ -7,24 +7,19 @@ the paper's own framing of the baseline.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import time
-from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import REGISTRY
-from repro.core.policy import BWQSchedule
 from repro.data import SyntheticCIFAR, SyntheticLM, make_lm_pipeline
 from repro.models.api import build
 from repro.models.cnn import cnn_loss, resnet_init, resnet_apply, vgg_init, vgg_apply
 from repro.models.common import QuantConfig
 from repro.optim import adamw, cosine_schedule, sgd
 from repro.train import Trainer, TrainerConfig
-from repro.train.step import quant_stats
 
 PAPER_WB = dict(wb_rows=9, wb_cols=8)      # OU-sized blocks (paper)
 BSQ_WB = dict(wb_rows=0, wb_cols=0)        # whole-layer blocks (BSQ)

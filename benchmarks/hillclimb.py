@@ -10,7 +10,6 @@ import argparse
 import dataclasses
 import json
 
-import jax
 
 from repro.configs import REGISTRY
 from repro.configs.base import ShapeCell

@@ -15,8 +15,6 @@ import time
 from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import BlockingSpec, adjust_precision, from_float, requantize
 from repro.kernels import (bwq_dense_bitplane, bwq_dense_packed,

@@ -6,8 +6,6 @@ import json
 import os
 from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (BlockingSpec, adjust_precision, bitwidths, compose,

@@ -24,7 +24,6 @@ def roofline_rows(tag: str = "singlepod") -> List[Dict]:
     rows = []
     for r in load_records(tag):
         t = r["roofline"]
-        total = max(t["compute_s"], 1e-30)
         dom = r["dominant"]
         rows.append(dict(
             arch=r["arch"], cell=r["cell"],

@@ -75,7 +75,10 @@ def bench_point(api, params, batch_size: int, kv_bits: int,
     idx = jnp.full((batch_size,), prompt_len, jnp.int32)
 
     def decode_once():
-        lg, st = eng.decode(tok, state, idx)
+        # decode donates its state argument; rebind so the next iteration
+        # hands the engine a live buffer, not the donated-away one
+        nonlocal state
+        lg, state = eng.decode(tok, state, idx)
         return lg
     t_decode = _bench(decode_once, iters * decode_steps)
 
@@ -122,8 +125,10 @@ def bench_legacy_requant(api, params, batch_size: int,
     idx = jnp.full((batch_size,), prompt_len, jnp.int32)
 
     def decode_once():
-        lg, st = eng.decode(tok, state, idx)
-        return requant(st)
+        nonlocal state
+        lg, state = eng.decode(tok, state, idx)
+        state = requant(state)
+        return state
     t_decode = _bench(decode_once, iters * decode_steps)
     return {
         "batch": batch_size,

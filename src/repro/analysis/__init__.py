@@ -1,0 +1,141 @@
+"""Static analysis for the serving stack: contract, graph, sharding and
+compile-footprint lint (see README "Static analysis & lint").
+
+Three cooperating passes over a built :class:`~repro.serve.engine.
+ServeEngine`, rolled into one :class:`~repro.analysis.report.LintReport`:
+
+* :mod:`~repro.analysis.contracts` — declarative pytree schema checks on
+  deployed ``ServingWeight`` / ``BitplaneServingWeight`` leaves and paged
+  decode caches (rules SW*/BP*/PC*, documented in ``kernels/ops.py``).
+* :mod:`~repro.analysis.graph_lint` — jaxpr taint tracking over the
+  jitted prefill/decode/chunk programs: dequant materialization, payload
+  convert/transpose, decode-state donation.
+* :mod:`~repro.analysis.sharding_lint` — replayed spec derivation with
+  every ``fit_spec`` drop surfaced, deviceless production meshes
+  included.
+* :mod:`~repro.analysis.footprint` — static compile-signature census
+  mirroring the scheduler's shape decisions.
+
+:func:`lint_engine` is the one-call entry point (the CLI
+``python -m repro.launch.lint`` and the ``lint-serving`` CI job wrap
+it); individual passes are importable for targeted checks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .contracts import validate_decode_state, validate_serving_tree
+from .footprint import (CompileSig, chunk_widths, footprint_findings,
+                        generate_signatures, scheduler_footprint,
+                        serve_signatures)
+from .graph_lint import (check_decode_donation, deployed_leaves,
+                         fallback_leaf_paths, lint_traced_fn)
+from .report import Finding, LintReport
+from .sharding_lint import (ShapeOnlyMesh, lint_sharding,
+                            production_mesh_shape)
+
+__all__ = [
+    "CompileSig", "Finding", "LintReport", "ShapeOnlyMesh",
+    "check_decode_donation", "chunk_widths", "deployed_leaves",
+    "example_batch", "fallback_leaf_paths", "footprint_findings",
+    "generate_signatures", "lint_engine", "lint_sharding",
+    "lint_traced_fn", "production_mesh_shape", "scheduler_footprint",
+    "serve_signatures", "validate_decode_state", "validate_serving_tree",
+]
+
+
+def example_batch(cfg, batch_size: int, prompt_len: int) -> Dict[str, Any]:
+    """Abstract (ShapeDtypeStruct) prompt batch for ``cfg``'s family —
+    the lint-side mirror of ``launch.serve._prompts``."""
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((batch_size, prompt_len), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = sds(
+            (batch_size, cfg.vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        batch["frames"] = sds((batch_size, prompt_len, cfg.d_model),
+                              jnp.float32)
+    return batch
+
+
+def _roundup64(n: int) -> int:
+    return -(-n // 64) * 64
+
+
+def lint_engine(engine, prompt_len: int = 16, n_slots: int = 4,
+                max_new: int = 16, budget: int = 8,
+                mesh=None, prompt_widths: Optional[Sequence[int]] = None
+                ) -> LintReport:
+    """Run every analysis pass against ``engine``; nothing compiles or
+    executes (jaxpr traces + eval_shape only).
+
+    ``mesh`` (a real Mesh or :class:`ShapeOnlyMesh`) additionally runs
+    the sharding lint against that topology; ``prompt_widths`` widens the
+    compile-footprint census beyond the single ``prompt_len``."""
+    cfg = engine.api.cfg
+    report = LintReport(context={
+        "arch": cfg.name, "family": cfg.family, "backend": engine.backend,
+        "kv_quant_bits": engine.kv_quant_bits,
+        "page_size": engine.page_size,
+        "prefill_chunk": engine.prefill_chunk,
+    })
+
+    # -- contracts ---------------------------------------------------------
+    report.extend(validate_serving_tree(engine.params))
+
+    # -- graph lint --------------------------------------------------------
+    batch = example_batch(cfg, 1, prompt_len)
+    extra = _roundup64(max_new)
+    report.extend(lint_traced_fn(
+        lambda p, b: engine.api.prefill(p, b, extra_slots=extra),
+        (engine.params, batch), fn_name="prefill", backend=engine.backend))
+
+    page_size = 0 if cfg.family == "ssm" else engine.page_size
+    max_len = prompt_len + \
+        (cfg.vision_tokens if cfg.family == "vlm" else 0) + extra
+    try:
+        state = jax.eval_shape(
+            lambda p, b: engine.api.init_decode_state(
+                p, b, n_slots, max_len, page_size=page_size,
+                n_pages=engine.n_pages),
+            engine.params, batch)
+    except Exception as e:
+        report.add("error", "graph", "state-shape", "init_decode_state",
+                   f"could not derive the decode-state tree "
+                   f"({type(e).__name__}: {e})")
+        state = None
+    if state is not None:
+        report.extend(validate_decode_state(state, n_slots=n_slots))
+        tokens = jax.ShapeDtypeStruct((n_slots, 1), jnp.int32)
+        index = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+        report.extend(lint_traced_fn(
+            engine.api.decode_step, (engine.params, tokens, state, index),
+            fn_name="decode", backend=engine.backend))
+        if engine.prefill_chunk > 0 and cfg.family not in ("ssm", "hybrid"):
+            cb = {"tokens": jax.ShapeDtypeStruct(
+                (1, engine.prefill_chunk), jnp.int32)}
+            scalar = jax.ShapeDtypeStruct((), jnp.int32)
+            report.extend(lint_traced_fn(
+                engine.api.prefill_chunk_at,
+                (engine.params, cb, state, scalar, scalar),
+                fn_name="chunk", backend=engine.backend))
+        report.extend(check_decode_donation(engine, tokens, state, index))
+
+    # -- compile footprint -------------------------------------------------
+    sigs = serve_signatures(
+        list(prompt_widths or [prompt_len]), max_new, n_slots,
+        max_len=max_len, page_size=page_size,
+        prefill_chunk=engine.prefill_chunk,
+        vision_tokens=cfg.vision_tokens if cfg.family == "vlm" else 0,
+        family=cfg.family)
+    report.extend(footprint_findings(sigs, budget=budget))
+
+    # -- sharding ----------------------------------------------------------
+    mesh = mesh if mesh is not None else engine.mesh
+    if mesh is not None:
+        report.extend(lint_sharding(engine.params, mesh, batch=batch,
+                                    state=state, n_slots=n_slots))
+    return report

@@ -1,0 +1,342 @@
+"""Declarative contract validation for deployed serving pytrees.
+
+The serving wire formats (:class:`repro.serve.deploy.ServingWeight`,
+:class:`repro.serve.deploy.BitplaneServingWeight`) and the paged decode
+cache carry invariants the type system cannot express — block geometry
+derived from the per-WB scale grid, nibble/byte padding of odd
+block-padded K, plane-occupancy masks, block-table/page-pool agreement.
+This module checks them *statically* (shapes/dtypes always; cheap value
+invariants when leaves are concrete) and reports one path-qualified
+:class:`~repro.analysis.report.Finding` per violation instead of letting
+a corrupted tree crash a kernel mid-serve.
+
+Rules (cross-referenced by the contract appendix in ``kernels/ops.py``):
+
+* ``SW1``  geometry: ``scale`` is (..., GR, GC); Kp = GR*wbr, Np = GC*wbc.
+* ``SW2``  true shape: (K, N) = ``shape[-2:]`` with K <= Kp < K + wbr and
+  N <= Np < N + wbc (the block grid is the minimal cover).
+* ``SW3``  stack dims LEAD: ``w_int``/``scale`` share ``shape[:-2]``.
+* ``SW4``  payload: bits=8 -> int8 (..., Kp, Np); bits=4 -> uint8
+  (..., ceil(Kp/2), Np) nibble pairs; an odd Kp's high pad nibble is 0.
+* ``BP1``  plane tensors: ``planes`` (..., bits, Kp8//8, Np) uint8 and
+  ``sign`` (..., Kp8//8, Np) uint8 with Kp8 = ceil(Kp/8)*8; byte-pad rows
+  beyond Kp hold zeros.
+* ``BP2``  mask LUT: (..., bits, GR, GC) binary, prefix-monotone along
+  the bit axis (occupancy = min(bw, bits) live LOW planes), f32.
+* ``BP3``  scale LUT: (..., GR, GC) f32, finite.
+* ``PC1``  paged cache: pool leaves agree on (stack, n_pages, page_size)
+  leading dims; ``table`` is integer (stack, n_slots, nb).
+* ``PC2``  block tables: every entry in [0, n_pages); page 0 is the
+  reserved trash page; a non-zero page owned by two slots is flagged
+  (no refcounted sharing yet — see ROADMAP prefix caching).
+* ``PC3``  quantized pools carry their per-token scale leaves.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+from .report import Finding
+
+_FLOATS = ("float32",)
+
+
+def _concrete(x) -> Optional[np.ndarray]:
+    """Host array for value-level checks; None for abstract/traced leaves."""
+    if isinstance(x, np.ndarray):
+        return x
+    if isinstance(x, jax.Array):
+        try:
+            return np.asarray(x)
+        except Exception:
+            return None
+    return None
+
+
+def _shape(x) -> tuple:
+    return tuple(getattr(x, "shape", ()))
+
+
+def _dtype(x) -> str:
+    return str(getattr(x, "dtype", "?"))
+
+
+class _Ctx:
+    """Per-leaf finding accumulator with the leaf path pre-bound."""
+
+    def __init__(self, findings: List[Finding], path: str):
+        self.findings = findings
+        self.path = path
+
+    def err(self, rule: str, msg: str, sub: str = "") -> None:
+        self.findings.append(Finding(
+            severity="error", pass_name="contracts", rule=rule,
+            path=self.path + sub, message=msg))
+
+    def warn(self, rule: str, msg: str, sub: str = "") -> None:
+        self.findings.append(Finding(
+            severity="warning", pass_name="contracts", rule=rule,
+            path=self.path + sub, message=msg))
+
+
+def _grid_geometry(c: _Ctx, scale, spec, shape) -> Optional[tuple]:
+    """Shared SW1/SW2/BP3 geometry: returns (lead, K, N, Kp, Np) or None."""
+    sshape = _shape(scale)
+    if len(sshape) < 2:
+        c.err("SW1", f"per-WB scale must be (..., GR, GC), got {sshape}",
+              ".scale")
+        return None
+    wbr, wbc = spec.wb_rows, spec.wb_cols
+    gr, gc = sshape[-2], sshape[-1]
+    kp, np_ = gr * wbr, gc * wbc
+    if not (isinstance(shape, tuple) and len(shape) >= 2):
+        c.err("SW2", f"true shape must be a (..., K, N) tuple, got {shape!r}",
+              ".shape")
+        return None
+    k, n = shape[-2], shape[-1]
+    lead = tuple(shape[:-2])
+    if not (0 < k <= kp and kp - k < wbr):
+        c.err("SW2", f"scale grid GR={gr} (Kp={kp}) is not the minimal "
+                     f"{wbr}-row cover of K={k}", ".scale")
+    if not (0 < n <= np_ and np_ - n < wbc):
+        c.err("SW2", f"scale grid GC={gc} (Np={np_}) is not the minimal "
+                     f"{wbc}-col cover of N={n}", ".scale")
+    if sshape[:-2] != lead:
+        c.err("SW3", f"scale stack dims {sshape[:-2]} != leaf stack dims "
+                     f"{lead} (layer-stack dims must LEAD)", ".scale")
+    if _dtype(scale) not in _FLOATS:
+        c.err("BP3", f"scale LUT must be float32, got {_dtype(scale)}",
+              ".scale")
+    sval = _concrete(scale)
+    if sval is not None and not np.isfinite(sval).all():
+        c.err("BP3", "scale LUT has non-finite entries", ".scale")
+    return lead, k, n, kp, np_
+
+
+def _check_serving_weight(c: _Ctx, sw) -> None:
+    geo = _grid_geometry(c, sw.scale, sw.spec, sw.shape)
+    if geo is None:
+        return
+    lead, k, n, kp, np_ = geo
+    wshape = _shape(sw.w_int)
+    if sw.bits == 8:
+        want = lead + (kp, np_)
+        if wshape != want:
+            c.err("SW4", f"int8 payload shape {wshape} != {want}", ".w_int")
+        if _dtype(sw.w_int) != "int8":
+            c.err("SW4", f"bits=8 payload must be int8, got "
+                         f"{_dtype(sw.w_int)}", ".w_int")
+    elif sw.bits == 4:
+        want = lead + (-(-kp // 2), np_)
+        if wshape != want:
+            c.err("SW4", f"int4 nibble payload shape {wshape} != {want} "
+                         f"(pairs packed along K, odd Kp pads one zero row)",
+                  ".w_int")
+        if _dtype(sw.w_int) != "uint8":
+            c.err("SW4", f"bits=4 payload must be uint8 nibble pairs, got "
+                         f"{_dtype(sw.w_int)}", ".w_int")
+        wval = _concrete(sw.w_int)
+        if wval is not None and kp % 2 and wshape == want:
+            pad = wval[..., -1, :] >> 4
+            if np.any(pad):
+                c.err("SW4", f"odd block-padded K={kp}: high pad nibble of "
+                             f"the last byte row must be 0, found "
+                             f"{int((pad != 0).sum())} non-zero entries",
+                      ".w_int")
+    else:
+        c.err("SW4", f"bits must be 4 or 8, got {sw.bits}", ".bits")
+        return
+    if len(wshape) >= 2 and wshape[:-2] != lead:
+        c.err("SW3", f"payload stack dims {wshape[:-2]} != leaf stack dims "
+                     f"{lead} (layer-stack dims must LEAD)", ".w_int")
+
+
+def _check_bitplane_weight(c: _Ctx, sw) -> None:
+    geo = _grid_geometry(c, sw.scale, sw.spec, sw.shape)
+    if geo is None:
+        return
+    lead, k, n, kp, np_ = geo
+    kp8 = -(-kp // 8) * 8
+    bits = sw.bits
+    pshape, gshape, mshape = _shape(sw.planes), _shape(sw.sign), \
+        _shape(sw.mask)
+    want_p = lead + (bits, kp8 // 8, np_)
+    if pshape != want_p:
+        c.err("BP1", f"packed planes shape {pshape} != {want_p} "
+                     f"(bits, byte-padded K rows, Np; stack dims lead)",
+              ".planes")
+    want_s = lead + (kp8 // 8, np_)
+    if gshape != want_s:
+        c.err("BP1", f"packed sign plane shape {gshape} != {want_s} "
+                     f"(truncated/misaligned sign plane)", ".sign")
+    for name, leaf in (("planes", sw.planes), ("sign", sw.sign)):
+        if _dtype(leaf) != "uint8":
+            c.err("BP1", f"{name} must be uint8 bit-packed, got "
+                         f"{_dtype(leaf)}", f".{name}")
+    want_m = lead + (bits, gr_gc[0], gr_gc[1]) \
+        if (gr_gc := _shape(sw.scale)[-2:]) else None
+    if mshape != want_m:
+        c.err("BP2", f"mask LUT shape {mshape} != {want_m} "
+                     f"((bits, GR, GC) with stack dims leading)", ".mask")
+    if _dtype(sw.mask) not in _FLOATS:
+        c.err("BP2", f"mask LUT must be float32 in {{0, 1}}, got "
+                     f"{_dtype(sw.mask)}", ".mask")
+    mval = _concrete(sw.mask)
+    if mval is not None and mshape == want_m:
+        binary = np.isin(mval, (0.0, 1.0))
+        if not binary.all():
+            c.err("BP2", f"mask LUT must be binary; "
+                         f"{int((~binary).sum())} entries outside {{0, 1}} "
+                         f"(max {float(np.max(mval))})", ".mask")
+        else:
+            occ = mval.sum(axis=-3)
+            if occ.size and occ.max() > bits:
+                c.err("BP2", f"plane occupancy {int(occ.max())} exceeds the "
+                             f"container bits={bits}", ".mask")
+            # live planes must be the LOW planes: occupancy is a prefix
+            prefix = np.cumprod(mval, axis=-3)
+            if not np.array_equal(prefix, mval):
+                c.err("BP2", "mask is not prefix-monotone along the bit "
+                             "axis: a live plane b requires plane b-1 live "
+                             "(occupancy = min(bw, bits) LOW planes)",
+                      ".mask")
+    if kp8 > kp and kp % 8:
+        # byte-pad rows live in the last byte row: bit positions kp%8..7
+        padmask = np.uint8(0xFF & ~((1 << (kp % 8)) - 1))
+        for name, leaf, want in (("planes", sw.planes, want_p),
+                                 ("sign", sw.sign, want_s)):
+            val = _concrete(leaf)
+            if val is not None and _shape(leaf) == want \
+                    and np.any(val[..., kp // 8, :] & padmask):
+                c.err("BP1", f"byte-pad rows [{kp}, {kp8}) of {name} "
+                             f"must be zero", f".{name}")
+
+
+def _deployed_types():
+    from ..serve.deploy import BitplaneServingWeight, ServingWeight
+    return ServingWeight, BitplaneServingWeight
+
+
+def iter_deployed_leaves(params: Any):
+    """Yield (keystr path, leaf) for every deployed serving leaf."""
+    sw_t, bp_t = _deployed_types()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, (sw_t, bp_t)))
+    for path, leaf in flat:
+        if isinstance(leaf, (sw_t, bp_t)):
+            yield jax.tree_util.keystr(path), leaf
+
+
+def validate_serving_tree(params: Any) -> List[Finding]:
+    """Contract-check every deployed leaf of ``params``.
+
+    Never raises on a malformed tree: a leaf whose corruption breaks the
+    validator itself still yields one path-qualified error finding."""
+    sw_t, bp_t = _deployed_types()
+    findings: List[Finding] = []
+    n_checked = 0
+    for path, leaf in iter_deployed_leaves(params):
+        c = _Ctx(findings, path)
+        n_checked += 1
+        try:
+            if isinstance(leaf, bp_t):
+                _check_bitplane_weight(c, leaf)
+            else:
+                _check_serving_weight(c, leaf)
+        except Exception as e:                      # corrupted beyond checks
+            c.err("SW0", f"validator could not interpret this leaf "
+                         f"({type(e).__name__}: {e})")
+    if n_checked == 0:
+        findings.append(Finding(
+            severity="info", pass_name="contracts", rule="SW0",
+            path="<tree>", message="no deployed serving leaves to check"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# decode-state / paged-cache validation
+# ---------------------------------------------------------------------------
+
+def _walk_paged(cache, path, findings: List[Finding],
+                n_slots: Optional[int]) -> None:
+    if not isinstance(cache, dict):
+        return
+    if "table" in cache:
+        c = _Ctx(findings, path)
+        table, pages = cache["table"], cache.get("pages")
+        if not np.issubdtype(np.dtype(_dtype(table)), np.integer):
+            c.err("PC1", f"block table must be integer, got {_dtype(table)}",
+                  "['table']")
+        tshape = _shape(table)
+        if len(tshape) != 3:
+            c.err("PC1", f"block table must be (stack, n_slots, nb), got "
+                         f"{tshape}", "['table']")
+            return
+        if n_slots is not None and tshape[1] != n_slots:
+            c.err("PC1", f"block table holds {tshape[1]} slots, scheduler "
+                         f"has {n_slots}", "['table']")
+        if not isinstance(pages, dict) or not pages:
+            c.err("PC1", "paged KV node has a table but no page pool",
+                  "['pages']")
+            return
+        heads = {name: _shape(leaf)[:3] for name, leaf in pages.items()}
+        first = next(iter(heads.values()))
+        for name, h in heads.items():
+            if len(h) < 3:
+                c.err("PC1", f"pool leaf must be (stack, n_pages, "
+                             f"page_size, ...), got {_shape(pages[name])}",
+                      f"['pages']['{name}']")
+                return
+            if h != first:
+                c.err("PC1", f"pool leaves disagree on (stack, n_pages, "
+                             f"page_size): {heads}",
+                      f"['pages']['{name}']")
+        n_pages = first[1]
+        if tshape[0] != first[0]:
+            c.err("PC1", f"table stack dim {tshape[0]} != pool stack dim "
+                         f"{first[0]}", "['table']")
+        quantized = any(_dtype(v) in ("int8", "uint8")
+                        for k, v in pages.items() if k in ("k", "v"))
+        if quantized and not any(k.endswith("_scale") for k in pages):
+            c.err("PC3", "quantized page pool is missing its per-token "
+                         "scale leaves", "['pages']")
+        tval = _concrete(table)
+        if tval is not None:
+            bad = (tval < 0) | (tval >= n_pages)
+            if bad.any():
+                ids = sorted(set(int(v) for v in tval[bad]))[:8]
+                c.err("PC2", f"{int(bad.sum())} block-table entries "
+                             f"reference pages outside the pool "
+                             f"[0, {n_pages}): orphaned ids {ids}",
+                      "['table']")
+            live = tval[0][tval[0] != 0]          # stack dim 0 is broadcast
+            uniq, counts = np.unique(live, return_counts=True)
+            shared = uniq[counts > 1]
+            if shared.size:
+                c.warn("PC2", f"non-zero pages owned by multiple slots "
+                              f"(no refcounting yet): "
+                              f"{[int(p) for p in shared[:8]]}", "['table']")
+        return
+    for key, sub in cache.items():
+        _walk_paged(sub, f"{path}['{key}']", findings, n_slots)
+
+
+def validate_decode_state(state: Any,
+                          n_slots: Optional[int] = None) -> List[Finding]:
+    """Contract-check a decode state's paged KV sub-trees (PC1-PC3).
+
+    Contiguous states have nothing paged to check and validate trivially;
+    corrupted paged trees produce path-qualified findings, not crashes."""
+    findings: List[Finding] = []
+    cache = state.get("cache", state) if isinstance(state, dict) else state
+    try:
+        _walk_paged(cache, "state['cache']", findings, n_slots)
+    except Exception as e:
+        findings.append(Finding(
+            severity="error", pass_name="contracts", rule="PC0",
+            path="state['cache']",
+            message=f"validator could not walk this cache tree "
+                    f"({type(e).__name__}: {e})"))
+    return findings

@@ -1,0 +1,106 @@
+"""Lint findings and the report they roll up into.
+
+Every analysis pass (graph lint, contract validator, sharding lint)
+emits :class:`Finding` records into one :class:`LintReport`.  A finding
+is *path-qualified*: ``path`` names the exact pytree leaf (keystr), jaxpr
+site, or spec dim it refers to, so a failure is a worklist entry, not a
+scavenger hunt.  Severities:
+
+* ``error``   — a contract violation; the lint (and CI gate) fails.
+* ``warning`` — a documented degradation on the hot path (e.g. a
+  sanctioned ragged-MoE dequant, an indivisible sharding axis dropped);
+  the lint passes but the item lands on the follow-up worklist.
+* ``info``    — context the other passes recorded (sanctioned
+  materialization under ``dense``/``ref``, replicated-by-rule leaves).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Iterable, List, Optional
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    severity: str          # 'error' | 'warning' | 'info'
+    pass_name: str         # 'contracts' | 'graph' | 'sharding' | 'footprint'
+    rule: str              # stable rule id, e.g. 'dequant-materialization'
+    path: str              # pytree keystr / jaxpr site / spec dim
+    message: str
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity must be one of {SEVERITIES}, "
+                             f"got {self.severity!r}")
+
+    def format(self) -> str:
+        return (f"[{self.severity.upper():7s}] {self.pass_name}/{self.rule} "
+                f"{self.path}: {self.message}")
+
+
+@dataclasses.dataclass
+class LintReport:
+    """Accumulated findings across passes, plus run context."""
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    context: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def add(self, severity: str, pass_name: str, rule: str, path: str,
+            message: str) -> Finding:
+        f = Finding(severity=severity, pass_name=pass_name, rule=rule,
+                    path=path, message=message)
+        self.findings.append(f)
+        return f
+
+    def extend(self, findings: Iterable[Finding]) -> None:
+        self.findings.extend(findings)
+
+    def by_severity(self, severity: str) -> List[Finding]:
+        return [f for f in self.findings if f.severity == severity]
+
+    @property
+    def errors(self) -> List[Finding]:
+        return self.by_severity("error")
+
+    @property
+    def warnings(self) -> List[Finding]:
+        return self.by_severity("warning")
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def merge(self, other: "LintReport") -> "LintReport":
+        self.findings.extend(other.findings)
+        self.context.update(other.context)
+        return self
+
+    def format(self, max_info: Optional[int] = None) -> str:
+        lines = []
+        shown_info = 0
+        for f in sorted(self.findings,
+                        key=lambda f: SEVERITIES.index(f.severity)):
+            if f.severity == "info" and max_info is not None:
+                shown_info += 1
+                if shown_info > max_info:
+                    continue
+            lines.append(f.format())
+        n_info = len(self.by_severity("info"))
+        if max_info is not None and n_info > max_info:
+            lines.append(f"[... {n_info - max_info} more info findings]")
+        lines.append(self.summary())
+        return "\n".join(lines)
+
+    def summary(self) -> str:
+        return (f"lint: {len(self.errors)} error(s), "
+                f"{len(self.warnings)} warning(s), "
+                f"{len(self.by_severity('info'))} info "
+                f"-> {'FAIL' if self.errors else 'PASS'}")
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "ok": self.ok,
+            "context": self.context,
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+        }, indent=1, default=str)

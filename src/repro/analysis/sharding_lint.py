@@ -1,0 +1,112 @@
+"""Sharding lint: validate every param/batch/cache PartitionSpec against
+a mesh and report per-leaf what the rule layer silently weakened.
+
+The rule layer (``dist/sharding.py``) is written for the production mesh
+and *degrades* everywhere else: :func:`~repro.dist.sharding.fit_spec`
+drops axes that are absent, already used, or do not divide the dim.
+That is the right runtime behavior and the wrong silent behavior — a
+weight that was supposed to be 16-way model-parallel serving replicated
+is a 16x memory/bandwidth regression the parity tests cannot see.  This
+pass replays the full spec derivation under
+:func:`~repro.dist.sharding.collect_spec_events` and turns every drop
+into a path-qualified finding:
+
+* ``axis-indivisible`` (warning) — the mesh axis exists but does not
+  divide the dim; the padded-sharding follow-up's worklist (ROADMAP).
+* ``axis-absent`` / ``axis-used`` (info) — expected degradation when
+  linting a smaller mesh than the rules target.
+* ``mesh-axis-unused`` (warning) — a >1-sized mesh axis no parameter
+  leaf uses at all: devices along it hold fully replicated weights.
+
+Production meshes are linted *devicelessly*: the rule layer only ever
+consults ``mesh.shape``, so :class:`ShapeOnlyMesh` stands in for a real
+``jax.sharding.Mesh`` of any size on a 1-device dev box.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+
+from .report import Finding
+
+
+class ShapeOnlyMesh:
+    """Deviceless mesh stand-in: just the axis-name -> size mapping.
+
+    Sufficient for every pure rule-layer entry point (``fit_spec``,
+    ``param_pspecs``, ``batch_pspecs``, ``cache_pspecs``) — anything that
+    would ``device_put`` needs a real mesh."""
+
+    def __init__(self, shape: Dict[str, int]):
+        self.shape = dict(shape)
+
+    def __repr__(self):
+        return f"ShapeOnlyMesh({self.shape})"
+
+
+def production_mesh_shape(multi_pod: bool = False) -> Dict[str, int]:
+    """Axis sizes of ``launch.mesh.make_production_mesh`` without needing
+    its 256/512 devices."""
+    return {"pod": 2, "data": 16, "model": 16} if multi_pod \
+        else {"data": 16, "model": 16}
+
+
+_DROP_RULES = {"indivisible": ("warning", "axis-indivisible"),
+               "absent": ("info", "axis-absent"),
+               "used": ("info", "axis-used")}
+
+
+def _spec_axes(specs) -> set:
+    """Every mesh axis name used anywhere in a tree of PartitionSpecs."""
+    from jax.sharding import PartitionSpec as P
+    axes = set()
+    for s in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)):
+        if not isinstance(s, P):
+            continue
+        for entry in s:
+            if entry is None:
+                continue
+            axes.update(entry if isinstance(entry, tuple) else (entry,))
+    return axes
+
+
+def lint_sharding(params: Any, mesh, batch: Any = None, state: Any = None,
+                  n_slots: int = 8) -> List[Finding]:
+    """Replay spec derivation for ``params`` (+ optional ``batch`` /
+    decode ``state``) under ``mesh`` and lint the drops.
+
+    ``mesh`` may be a real ``jax.sharding.Mesh`` or a
+    :class:`ShapeOnlyMesh`."""
+    from ..dist.sharding import (batch_pspecs, cache_pspecs,
+                                 collect_spec_events, param_pspecs,
+                                 use_mesh)
+    findings: List[Finding] = []
+    with use_mesh(mesh), collect_spec_events() as events:
+        specs = param_pspecs(params)
+        if batch is not None:
+            batch_pspecs(batch)
+        if state is not None:
+            cache_pspecs(state, n_slots)
+    for d in events:
+        severity, rule = _DROP_RULES.get(d.reason, ("warning", "axis-drop"))
+        findings.append(Finding(severity=severity, pass_name="sharding",
+                                rule=rule, path=d.label,
+                                message=d.message()))
+    used = _spec_axes(specs)
+    for axis, size in mesh.shape.items():
+        if size > 1 and axis not in used:
+            findings.append(Finding(
+                severity="warning", pass_name="sharding",
+                rule="mesh-axis-unused", path=f"mesh.{axis}",
+                message=f"mesh axis {axis!r} (size {size}) is used by no "
+                        f"parameter spec: weights replicate {size}x along "
+                        f"it"))
+    if not findings:
+        findings.append(Finding(
+            severity="info", pass_name="sharding", rule="clean",
+            path="<tree>",
+            message=f"all requested specs fit mesh {dict(mesh.shape)} "
+                    f"with no drops"))
+    return findings

@@ -52,7 +52,6 @@ def conv_to_2d(w: jnp.ndarray) -> jnp.ndarray:
 
 def conv_from_2d(w2d: jnp.ndarray, conv_shape: Tuple[int, ...]) -> jnp.ndarray:
     """Inverse of :func:`conv_to_2d`."""
-    c_out = conv_shape[0]
     return jnp.transpose(w2d).reshape(conv_shape)
 
 

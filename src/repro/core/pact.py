@@ -7,7 +7,6 @@ estimator.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .quantize import ste_round

@@ -1,7 +1,7 @@
 """Pytree utilities for models whose params contain QuantizedTensor leaves."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ stream plants class templates + noise for the paper's CNN experiments.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

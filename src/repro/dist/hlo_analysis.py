@@ -89,6 +89,66 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
     return CollectiveStats(counts=counts, bytes_by_op=bytes_by_op)
 
 
+# "{0}: (2, {1}, may-alias)" entries inside the module header's
+# input_output_alias={...} block: output index -> donated parameter.
+_ALIAS_ENTRY = re.compile(
+    r"\{(?P<out>[\d,\s]*)\}:\s*\((?P<param>\d+),\s*\{(?P<path>[^}]*)\}")
+
+
+def input_output_aliases(hlo_text: str):
+    """Parse the module-level ``input_output_alias`` map from HLO text.
+
+    Returns ``[(output_index_tuple, param_number, param_index_tuple)]`` —
+    the compiled record of buffer donation.  Empty when the module
+    donates nothing (the deep-check signal behind the graph lint's
+    ``missing-donation`` rule; ``Lowered.args_info`` is the cheap
+    lowering-level view of the same fact)."""
+    key = "input_output_alias={"
+    i = hlo_text.find(key)
+    if i < 0:
+        return []
+    # the block nests braces ({out}: (p, {path}, ...)) — scan balanced
+    j = i + len(key)
+    depth, k = 1, j
+    while k < len(hlo_text) and depth:
+        if hlo_text[k] == "{":
+            depth += 1
+        elif hlo_text[k] == "}":
+            depth -= 1
+        k += 1
+    out = []
+    for e in _ALIAS_ENTRY.finditer(hlo_text[j:k - 1]):
+        oidx = tuple(int(t) for t in e.group("out").split(",") if t.strip())
+        pidx = tuple(int(t) for t in e.group("path").split(",")
+                     if t.strip().isdigit())
+        out.append((oidx, int(e.group("param")), pidx))
+    return out
+
+
+def shape_census(hlo_text: str, min_bytes: int = 0) -> Dict[str, int]:
+    """Instruction-result footprint by dtype: ``{dtype: total_bytes}``.
+
+    A compiled-HLO-level census of what the program holds: a packed
+    serving program should be s8/u8-dominated — an f32 total on the order
+    of the weight bytes is the compiled symptom of a dequant leak."""
+    census: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR.search(line)
+        if not m:
+            continue
+        for dtype, dims in _ARRAY.findall(m.group("shape")):
+            if dtype not in _DTYPE_BYTES:
+                continue
+            n = _DTYPE_BYTES[dtype]
+            for d in dims.split(","):
+                d = d.strip()
+                if d:
+                    n *= int(d)
+            if n >= min_bytes:
+                census[dtype] = census.get(dtype, 0) + n
+    return census
+
+
 def roofline_terms(flops: float, bytes_accessed: float,
                    collective_bytes: float) -> Dict[str, float]:
     """Per-device totals -> time lower bounds per roofline resource."""

@@ -23,9 +23,11 @@ written for the *production* mesh and degrade per-tensor everywhere else.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import math
 import re
 import threading
+import warnings
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -95,6 +97,71 @@ _LOGICAL = {
 }
 
 
+class ShardingDropWarning(UserWarning):
+    """A requested mesh axis did not divide its dim and was dropped."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecDrop:
+    """One mesh axis silently removed from a requested PartitionSpec.
+
+    ``reason`` is ``'absent'`` (axis not in the mesh), ``'used'`` (axis
+    already consumed by an earlier dim) or ``'indivisible'`` (the axis
+    group's combined size does not divide the dim — the case the padded-
+    sharding follow-up needs a worklist for; see ROADMAP)."""
+    label: str                 # leaf keystr, or '<unlabeled>'
+    dim: int                   # which dim of the shape
+    axis: str                  # the dropped mesh axis
+    reason: str                # 'absent' | 'used' | 'indivisible'
+    dim_size: int
+    axis_size: int             # 0 when the axis is absent from the mesh
+
+    def message(self) -> str:
+        if self.reason == "indivisible":
+            return (f"{self.label}: dim {self.dim} (size {self.dim_size}) "
+                    f"is not divisible by mesh axis {self.axis!r} "
+                    f"(size {self.axis_size}); axis dropped, dim serves "
+                    f"replicated")
+        if self.reason == "absent":
+            return (f"{self.label}: dim {self.dim} requested mesh axis "
+                    f"{self.axis!r}, which this mesh does not have")
+        return (f"{self.label}: dim {self.dim} requested mesh axis "
+                f"{self.axis!r}, already used by an earlier dim")
+
+
+@contextlib.contextmanager
+def collect_spec_events():
+    """Capture every :class:`SpecDrop` recorded by :func:`fit_spec` in
+    the dynamic extent (innermost collector wins; the sharding lint's
+    event source)."""
+    stack = getattr(_STATE, "spec_events", None)
+    if stack is None:
+        stack = _STATE.spec_events = []
+    events: List[SpecDrop] = []
+    stack.append(events)
+    try:
+        yield events
+    finally:
+        stack.pop()
+
+
+_WARNED_DROPS: set = set()
+
+
+def _record_drop(label: Optional[str], dim: int, axis: str, reason: str,
+                 dim_size: int, axis_size: int) -> None:
+    drop = SpecDrop(label=label or "<unlabeled>", dim=dim, axis=axis,
+                    reason=reason, dim_size=dim_size, axis_size=axis_size)
+    stack = getattr(_STATE, "spec_events", None)
+    if stack:
+        stack[-1].append(drop)
+    if reason == "indivisible":
+        key = (drop.label, dim, axis)
+        if key not in _WARNED_DROPS:
+            _WARNED_DROPS.add(key)
+            warnings.warn(ShardingDropWarning(drop.message()), stacklevel=3)
+
+
 def spec(*logical: Optional[str]) -> P:
     """Logical axis names -> PartitionSpec against the active mesh.
 
@@ -110,10 +177,18 @@ def spec(*logical: Optional[str]) -> P:
     return P(*entries)
 
 
-def fit_spec(ps: P, shape: Sequence[int], mesh=None) -> P:
+def fit_spec(ps: P, shape: Sequence[int], mesh=None,
+             label: Optional[str] = None) -> P:
     """Fit ``ps`` to ``shape`` under ``mesh``: drop axes that are not in the
     mesh, already used by an earlier dim, or whose combined size does not
-    divide the dim.  Always returns a spec of ``len(shape)`` entries."""
+    divide the dim.  Always returns a spec of ``len(shape)`` entries.
+
+    Every dropped axis is recorded as a :class:`SpecDrop` (to the active
+    :func:`collect_spec_events` collector, if any) and an *indivisible*
+    drop — the rules asked for sharding the mesh cannot honor — warns
+    once per (label, dim, axis) with :class:`ShardingDropWarning`.
+    ``label`` names the tensor in those diagnostics (callers with tree
+    paths pass the leaf keystr)."""
     mesh = mesh if mesh is not None else get_mesh()
     if mesh is None:
         return P(*([None] * len(shape)))
@@ -124,10 +199,18 @@ def fit_spec(ps: P, shape: Sequence[int], mesh=None) -> P:
         if entry is None:
             out.append(None)
             continue
-        axes = entry if isinstance(entry, tuple) else (entry,)
-        axes = [a for a in axes if a in mesh.shape and a not in used]
+        axes = []
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            if a not in mesh.shape:
+                _record_drop(label, i, a, "absent", dim, 0)
+            elif a in used:
+                _record_drop(label, i, a, "used", dim, mesh.shape[a])
+            else:
+                axes.append(a)
         size = math.prod(mesh.shape[a] for a in axes)
         if not axes or size == 0 or dim % size:
+            for a in axes:
+                _record_drop(label, i, a, "indivisible", dim, mesh.shape[a])
             out.append(None)
         else:
             used.update(axes)
@@ -213,7 +296,7 @@ def _leaf_spec(path: str, leaf) -> P:
         if FSDP["enabled"] and "data" in mesh.shape \
                 and _leaf_bytes(leaf) >= FSDP["min_bytes"]:
             dims[fsdp_dim] = "data"
-    return fit_spec(P(*dims), shape, mesh)
+    return fit_spec(P(*dims), shape, mesh, label=path)
 
 
 def param_pspecs(params) -> Any:
@@ -250,16 +333,19 @@ def shard_params_tree(params):
 def batch_pspecs(batch) -> Any:
     """Shard dim 0 (the global batch) of every leaf across the data axes."""
     mesh = get_mesh()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
 
-    def leaf(x):
+    def leaf(path, x):
         shape = tuple(getattr(x, "shape", ()))
         if mesh is None or not shape:
             return P()
         dims: List[Any] = [None] * len(shape)
         dims[0] = _batch_entry(mesh)
-        return fit_spec(P(*dims), shape, mesh)
+        return fit_spec(P(*dims), shape, mesh,
+                        label=jax.tree_util.keystr(path))
 
-    return jax.tree_util.tree_map(leaf, batch)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf(path, x) for path, x in flat])
 
 
 def cache_pspecs(state, batch_size: int) -> Any:
@@ -289,11 +375,12 @@ def cache_pspecs(state, batch_size: int) -> Any:
         keys = _keys(path)
         if keys and keys[-1] == "table":
             return P(*dims)
+        label = jax.tree_util.keystr(path)
         if "pages" in keys:
             dims[1] = _batch_entry(mesh)
             if len(shape) >= 5:
                 dims[-2] = "model"
-            return fit_spec(P(*dims), shape, mesh)
+            return fit_spec(P(*dims), shape, mesh, label=label)
         # rank>=4 leaves are stacked (L, B, ...): dim 0 is the layer axis,
         # so never batch-shard it even when n_layers == batch_size.
         start = 1 if len(shape) >= 4 else 0
@@ -303,7 +390,7 @@ def cache_pspecs(state, batch_size: int) -> Any:
                 break
         if len(shape) >= 5 and dims[-2] is None:
             dims[-2] = "model"
-        return fit_spec(P(*dims), shape, mesh)
+        return fit_spec(P(*dims), shape, mesh, label=label)
 
     specs = [leaf(path, x) for path, x in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)

@@ -33,17 +33,45 @@ routes model matmuls here.  The plane-sliced serving wire format
 ``serving_to_bitplane_layout``) obeys the same scale-grid geometry, with
 a per-WB *effective* scale LUT instead of the per-layer scalar and K
 byte-padded up to a multiple of 8 for the 1-bit packing.
+
+Contract appendix — the statically checkable rules
+--------------------------------------------------
+``repro.analysis.contracts.validate_serving_tree`` enforces the above
+declaratively at engine construction and deploy time; each rule id below
+is what its path-qualified findings cite (see README "Static analysis &
+lint"):
+
+* ``SW1`` — ``scale`` is (..., GR, GC): the per-WB grid IS the geometry.
+* ``SW2`` — the grid is the *minimal* block cover of the true shape:
+  K <= GR*wbr < K + wbr and N <= GC*wbc < N + wbc.
+* ``SW3`` — layer-stack dims LEAD every tensor (scan-sliceable; the QAT
+  ``QuantizedTensor`` whose bit axis leads is NOT a serving layout).
+* ``SW4`` — payload dtype/shape per precision: bits=8 -> int8
+  (..., Kp, Np); bits=4 -> uint8 (..., ceil(Kp/2), Np) nibble pairs,
+  and an odd Kp's high pad nibble is exact zeros.
+* ``BP1`` — ``planes`` (..., bits, Kp8//8, Np) and ``sign``
+  (..., Kp8//8, Np) uint8 with Kp8 = ceil(Kp/8)*8; byte-pad rows are
+  zeros (the byte-boundary mirror of SW4's nibble rule).
+* ``BP2`` — ``mask`` is (..., bits, GR, GC) f32, binary, and
+  prefix-monotone along the bit axis: block occupancy is its
+  min(bw, bits) LOW planes — exactly the OU occupancy
+  ``weight_stream_bytes`` bills.
+* ``BP3`` — ``scale`` LUT is f32 and finite (it pre-folds /(2^n - 1)
+  and each block's power-of-two container rescale, so a NaN/inf here
+  silently poisons every dequant).
+* ``PC1``-``PC3`` — paged decode caches: pool leaves agree on
+  (stack, n_pages, page_size), block tables are integer
+  (stack, n_slots, nb) with every id inside the pool (``PC2`` flags
+  orphaned ids and un-refcounted page sharing), and quantized pools
+  carry their per-token scale leaves.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.bitrep import QuantizedTensor, compose_int, _levels
-from ..core.blocking import BlockingSpec
 from .bitplane_matmul import bitplane_matmul
 from .packed_matmul import packed_matmul
 from .ref import pack_bits

@@ -19,19 +19,19 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from ..configs import REGISTRY
-from ..configs.base import LM_SHAPES, ModelConfig, ShapeCell, cells_for
+from ..configs.base import ModelConfig, ShapeCell, cells_for
 from ..dist.hlo_analysis import (collective_stats, dominant_term,
                                  roofline_terms)
 from ..dist.sharding import (batch_pspecs, cache_pspecs, param_pspecs,
                              use_mesh)
 from ..models import moe as moe_mod
-from ..models.api import ModelAPI, build
+from ..models.api import build
 from ..optim.optimizers import adamw
 from ..train.state import TrainState
 from ..train.step import (freeze_mask, microbatched_value_and_grad,

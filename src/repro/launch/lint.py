@@ -1,0 +1,99 @@
+"""Serving-graph lint CLI: ``python -m repro.launch.lint --arch <id>
+--backend <b>`` — the CI gate behind the ``lint-serving`` job.
+
+Builds the same engine ``launch.serve`` would (tiny config, fake-quant
+QAT, deployed serving weights in the backend's native layout), then runs
+every static pass from ``repro.analysis`` — contract validation, jaxpr
+graph lint, compile-footprint census, and (with ``--mesh`` /
+``--production-mesh``) the sharding lint against a deviceless mesh
+stand-in.  Nothing compiles or executes.  Exit code 1 iff the report
+carries errors.
+"""
+import argparse
+import sys
+
+import jax
+
+from ..analysis import ShapeOnlyMesh, lint_engine, production_mesh_shape
+from ..configs import REGISTRY
+from ..models.api import build
+from ..models.common import QuantConfig
+from ..serve import ServeEngine
+from ..serve.deploy import (default_deploy_bits, default_deploy_layout,
+                            to_serving_params)
+
+
+def build_engine(arch: str, backend: str, deploy_bits: int = 0,
+                 layout: str = "", kv_bits: int = 32, page_size: int = 0,
+                 prefill_chunk: int = 0, tiny: bool = True) -> ServeEngine:
+    """The serving stack exactly as ``launch.serve`` assembles it."""
+    cfg = REGISTRY[arch]
+    if tiny:
+        cfg = cfg.tiny(dtype="float32")
+    cfg = cfg.with_quant(QuantConfig(mode="fake", n_bits=8, act_bits=8))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    deploy_bits = default_deploy_bits(backend, deploy_bits)
+    if deploy_bits:
+        params = to_serving_params(
+            params, deploy_bits,
+            layout=layout or default_deploy_layout(backend))
+    return ServeEngine(api, params, kv_quant_bits=kv_bits, backend=backend,
+                       page_size=page_size, prefill_chunk=prefill_chunk)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(REGISTRY))
+    ap.add_argument("--backend", default="dense",
+                    choices=["dense", "pallas", "ref", "bitplane"])
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--no-tiny", dest="tiny", action="store_false")
+    ap.add_argument("--deploy-bits", type=int, default=0,
+                    choices=[0, 4, 8],
+                    help="0 = backend default (int8 for packed backends)")
+    ap.add_argument("--layout", default="",
+                    choices=["", "packed", "bitplane"],
+                    help="serving wire format (default: backend's native)")
+    ap.add_argument("--kv-bits", type=int, default=32, choices=[4, 8, 32])
+    ap.add_argument("--page-size", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=0)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--budget", type=int, default=8,
+                    help="compile-signature budget (footprint pass)")
+    ap.add_argument("--mesh", default="",
+                    help="lint sharding against 'AXISxAXIS' sizes, e.g. "
+                         "'data=2,model=4' (deviceless stand-in)")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="lint sharding against the 16x16 production mesh")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="with --production-mesh: the 2x16x16 pod mesh")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("--max-info", type=int, default=None,
+                    help="truncate info findings in text output")
+    args = ap.parse_args(argv)
+
+    engine = build_engine(args.arch, args.backend, args.deploy_bits,
+                          args.layout, args.kv_bits, args.page_size,
+                          args.prefill_chunk, args.tiny)
+    mesh = None
+    if args.production_mesh:
+        mesh = ShapeOnlyMesh(production_mesh_shape(args.multi_pod))
+    elif args.mesh:
+        mesh = ShapeOnlyMesh({
+            kv.split("=")[0].strip(): int(kv.split("=")[1])
+            for kv in args.mesh.split(",")})
+    report = lint_engine(engine, prompt_len=args.prompt_len,
+                         n_slots=args.n_slots, max_new=args.max_new,
+                         budget=args.budget, mesh=mesh)
+    if args.as_json:
+        print(report.to_json())
+    else:
+        print(report.format(max_info=args.max_info))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

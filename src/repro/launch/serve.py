@@ -72,6 +72,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="insert prompts in chunks this wide, interleaved "
                          "with decode (0 = monolithic prefill)")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the static serving-graph lint before serving "
+                         "and abort if it reports errors")
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch]
@@ -90,6 +93,16 @@ def main():
                       backend=args.backend, page_size=args.page_size,
                       n_pages=args.n_pages or None,
                       prefill_chunk=args.prefill_chunk)
+
+    if args.lint:
+        from ..analysis import lint_engine
+        report = lint_engine(eng, prompt_len=args.prompt_len,
+                             n_slots=args.n_slots or args.batch,
+                             max_new=args.max_new)
+        print(report.format(max_info=0))
+        if not report.ok:
+            raise SystemExit("serving-graph lint failed; aborting launch")
+
     batch = _prompts(cfg, args)
 
     if args.requests:

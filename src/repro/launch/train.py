@@ -5,7 +5,6 @@ TPU slice the same entrypoint drives the full config under the production
 mesh (jax.distributed initialization is environment-driven).
 """
 import argparse
-import dataclasses
 
 import jax
 
@@ -16,7 +15,7 @@ from ..models.api import build
 from ..models.common import QuantConfig
 from ..optim import adamw, cosine_schedule
 from ..train import Trainer, TrainerConfig
-from .mesh import make_mesh, make_production_mesh
+from .mesh import make_production_mesh
 
 
 def main():

@@ -9,13 +9,13 @@ benchmarks and the CIFAR example.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 
-from ..core.bitrep import QuantizedTensor, from_float
-from ..core.fakequant import FakeQuantTensor, fq_from_float
+from ..core.bitrep import from_float
+from ..core.fakequant import fq_from_float
 from ..core.pact import pact_quant
 from .common import QuantConfig, qdense, qmatmul
 

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -214,7 +214,21 @@ def qmatmul(x: jnp.ndarray, w: Any, *, backend: Optional[str] = None
     if isinstance(w, ServingWeight) and backend in ("pallas", "ref") \
             and w.w_int.ndim == 2:
         return _qmatmul_packed(x, w, backend)
+    if isinstance(w, ServingWeight) and backend == "bitplane" \
+            and "bitplane-packed-fallback" not in _WARNED_FALLBACKS:
+        # once per process (trace-time): the engine warns with leaf paths
+        # at construction and the graph lint reports every affected leaf
+        _WARNED_FALLBACKS.add("bitplane-packed-fallback")
+        import warnings
+        warnings.warn(
+            "qmatmul: packed ServingWeight under backend='bitplane' falls "
+            "back to the in-graph dense dequant dot (the bitplane kernel "
+            "streams only the plane-sliced layout; deploy with "
+            "layout='bitplane')", stacklevel=2)
     return x @ qdense(w, x.dtype)
+
+
+_WARNED_FALLBACKS: set = set()
 
 
 def prepare_params(params: Any, dtype=None) -> Any:

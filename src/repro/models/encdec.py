@@ -3,7 +3,7 @@
 with cross-attention.  Same stacked-scan layout as the decoder-only LM."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,7 @@ code never sees a dequantized full-precision weight.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -19,10 +18,10 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..dist.sharding import constraint, shard_params_tree
 from .attention import attn_forward, init_attn
-from .common import (act_quant, embed_init, make_beta, make_weight,
+from .common import (act_quant, embed_init, make_weight,
                      prepare_params, qmatmul, rms_norm, softcap)
 from .ffn import init_mlp, mlp_forward
-from .moe import init_moe, moe_forward
+from .moe import moe_forward
 from .rwkv import init_rwkv6, rwkv6_forward, rwkv6_init_state
 from .ssm import init_mamba2, mamba2_forward, mamba2_init_state
 
@@ -130,8 +129,7 @@ def _init_block(key, cfg: ModelConfig, stack: int) -> Dict:
 
 def init_lm(key, cfg: ModelConfig) -> Dict:
     ks = jax.random.split(key, 6)
-    dt = jnp.float32
-    d = cfg.d_model
+    d, dt = cfg.d_model, jnp.float32
     params: Dict[str, Any] = {
         "embed": embed_init(ks[0], cfg.vocab, d, dt),
         "final_norm": jnp.zeros((d,), dt),
@@ -333,7 +331,6 @@ def _walk_hybrid(mp, cfg, h, emb0, positions, cache, index):
 
 
 def _embed_inputs(mp, cfg: ModelConfig, tokens, vision_embeds, positions):
-    d = cfg.d_model
     h = jnp.take(mp["embed"], tokens, axis=0)
     if cfg.family == "vlm" and vision_embeds is not None:
         v = qmatmul(vision_embeds, mp["vision_proj"])

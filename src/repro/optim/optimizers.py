@@ -8,7 +8,7 @@ bitwidth, scale) before calling in, so no special-casing is needed here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.bitrep import QuantizedTensor, compose_int, _levels
+from ..core.bitrep import QuantizedTensor, _levels
 from ..core.blocking import BlockingSpec, expand_block_map, pad_to_blocks
 from ..core.fakequant import FakeQuantTensor
 from ..core.quantize import pack_int4, unpack_int4
@@ -154,9 +154,13 @@ def _quantize_leaf(w, scale, bitwidth, spec, n_bits, bits,
     return _pack_packed(wq, gscale, shape, spec, bits)
 
 
-def to_serving_params(params: Any, bits: int = 8,
-                      layout: str = "packed") -> Any:
-    """Convert all quantized leaves to the chosen serving wire format."""
+def to_serving_params(params: Any, bits: int = 8, layout: str = "packed",
+                      validate: bool = True) -> Any:
+    """Convert all quantized leaves to the chosen serving wire format.
+
+    ``validate`` contract-checks the result (``analysis.contracts``) so a
+    packing bug is caught at deploy time with a path-qualified diagnostic
+    rather than as a parity failure deep in a kernel."""
     if layout not in SERVING_LAYOUTS:
         raise ValueError(f"unknown serving layout {layout!r}; "
                          f"choose from {SERVING_LAYOUTS}")
@@ -171,9 +175,18 @@ def to_serving_params(params: Any, bits: int = 8,
             return _quantize_leaf(x.w, x.scale, x.bitwidth, x.spec,
                                   x.n_bits, bits, layout)
         return x
-    return jax.tree_util.tree_map(
+    out = jax.tree_util.tree_map(
         conv, params,
         is_leaf=lambda x: isinstance(x, (QuantizedTensor, FakeQuantTensor)))
+    if validate:
+        from ..analysis.contracts import validate_serving_tree
+        bad = [f for f in validate_serving_tree(out)
+               if f.severity == "error"]
+        if bad:
+            raise ValueError(
+                "deployment produced a contract-violating tree:\n"
+                + "\n".join(f.format() for f in bad[:8]))
+    return out
 
 
 def serving_to_packed_layout(sw: ServingWeight):

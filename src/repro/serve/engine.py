@@ -39,12 +39,19 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
+
+# Decode donates its state (double-buffering a multi-GB KV cache per tick
+# is the thing the graph lint forbids); platforms that cannot honor the
+# donation (CPU tests) fall back to copying and would warn every call.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 from ..dist.sharding import (batch_pspecs, cache_pspecs, get_mesh,
                              param_pspecs, use_mesh)
@@ -67,6 +74,8 @@ class ServeEngine:
     page_size: int = 0            # >0: paged KV cache (tokens per page)
     n_pages: Optional[int] = None  # page-pool capacity (None = worst case)
     prefill_chunk: int = 0        # >0: insert prompts in chunks this wide
+    donate_state: bool = True     # donate decode state (no double-buffer)
+    validate: bool = True         # contract-check deployed leaves on build
 
     def __post_init__(self):
         cfg = self.api.cfg
@@ -74,19 +83,35 @@ class ServeEngine:
             raise ValueError(f"backend must be one of {MATMUL_BACKENDS}, "
                              f"got {self.backend!r}")
         if self.backend != "dense" and not self._has_packed_weights():
-            import warnings
             hint = ", layout='bitplane'" if self.backend == "bitplane" else ""
             warnings.warn(
                 f"backend={self.backend!r} only accelerates deployed packed "
                 f"weights (serve.deploy.to_serving_params(...{hint})); this "
                 f"param tree has none, so execution is identical to 'dense'",
                 stacklevel=2)
+        if self.backend == "bitplane":
+            from ..analysis.graph_lint import fallback_leaf_paths
+            stale = fallback_leaf_paths(self.params, self.backend)
+            if stale:
+                warnings.warn(
+                    f"backend='bitplane' executes only the plane-sliced "
+                    f"layout; {len(stale)} packed ServingWeight leaves "
+                    f"fall back to the in-graph dense dequant dot "
+                    f"(deploy with layout='bitplane'): {stale[:4]}",
+                    stacklevel=2)
+        if self.validate:
+            from ..analysis.contracts import validate_serving_tree
+            bad = [f for f in validate_serving_tree(self.params)
+                   if f.severity == "error"]
+            if bad:
+                raise ValueError(
+                    "deployed param tree violates the serving contract:\n"
+                    + "\n".join(f.format() for f in bad[:8]))
         if self.kv_quant_bits < 32:
             if self.kv_quant_bits not in (4, 8):
                 raise ValueError(f"kv_quant_bits must be 4, 8 or >=32, "
                                  f"got {self.kv_quant_bits}")
             if cfg.family == "ssm":
-                import warnings
                 warnings.warn(
                     f"kv_quant_bits={self.kv_quant_bits} has no effect on "
                     f"family 'ssm': recurrent state has no KV cache and "
@@ -99,7 +124,12 @@ class ServeEngine:
                                     static_argnames=("extra_slots",))
         self._prefill_at_j = self._jit(self.api.prefill_at)
         self._prefill_chunk_j = self._jit(self.api.prefill_chunk_at)
-        self._decode_j = self._jit(self.api.decode_step)
+        # decode_step(params, tokens, state, index): the state (arg 2) is
+        # consumed and rebuilt every step — donate it so the cache updates
+        # in place instead of double-buffering (graph lint enforces this)
+        self._decode_j = self._jit(
+            self.api.decode_step,
+            **({"donate_argnums": (2,)} if self.donate_state else {}))
         if self.mesh is not None:
             self.params = self._place(self.params, param_pspecs)
 

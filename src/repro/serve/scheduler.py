@@ -453,6 +453,14 @@ class Scheduler:
         self.tick += 1
 
     # ---- reporting -------------------------------------------------------
+    def compile_footprint(self, prompt_widths=None) -> List[Any]:
+        """Static census of every jit signature this scheduler's workload
+        compiles (``analysis.footprint``) — run it *before* serving to
+        catch a recompile blowup as a lint failure, not a latency
+        mystery.  ``prompt_widths`` defaults to the submitted requests'."""
+        from ..analysis.footprint import scheduler_footprint
+        return scheduler_footprint(self, prompt_widths)
+
     def cache_report(self) -> Dict[str, Any]:
         """Resident-cache accounting (the paged-vs-fixed-width headline).
 

@@ -15,11 +15,8 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 
 from ..ckpt.checkpoint import CheckpointManager
-from ..core.policy import BWQSchedule
 from ..optim.optimizers import Optimizer
 from .state import TrainState
 from .step import build_maintenance_step, build_train_step

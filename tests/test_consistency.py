@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.configs import REGISTRY
-from repro.models import attention as attn_mod
 from repro.models.api import build
 from repro.models.attention import attention_core, blockwise_attention_core
 from repro.models.common import QuantConfig

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (BlockingSpec, QuantizedTensor, adjust_precision,
+from repro.core import (BlockingSpec, adjust_precision,
                         bitwidths, compose, extract_planes, from_float,
                         layer_bit_count, pact, pact_quant, pact_sym,
                         model_compression_ratio, pack, quant_summary,
@@ -117,7 +117,6 @@ class TestPrecisionAdjustment:
         assert bw == 8.0
 
     def test_low_magnitude_block_gets_fewer_bits(self):
-        spec = BlockingSpec(9, 8)
         w = jnp.zeros((18, 8))
         w = w.at[0, 0].set(1.0)          # block 0: scale setter (8 bits)
         w = w.at[9:, :].set(0.01)        # block 1: 0.01*255 = 2.55 -> 3 -> 2 bits

@@ -96,8 +96,6 @@ class TestSchemes:
 
     def test_ou_size_energy_grows(self):
         """Paper Fig. 13: ADC energy (and total) grows with OU size."""
-        wl = fc_workload("fc", 1152, 128, positions=64, act_bits=3,
-                         weight_bits=4)
         energies = []
         for rows, cols in [(9, 8), (32, 32), (128, 128)]:
             spec = PAPER_SPEC.with_ou(rows, cols)

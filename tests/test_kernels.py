@@ -10,8 +10,7 @@ import pytest
 from repro.core import (BlockingSpec, adjust_precision, compose, from_float,
                         requantize)
 from repro.kernels import (bitplane_matmul, bwq_dense_bitplane,
-                           bwq_dense_packed, packed_matmul,
-                           pact_quant_pallas, to_bitplane_layout,
+                           bwq_dense_packed, pact_quant_pallas, to_bitplane_layout,
                            to_packed_layout)
 from repro.kernels.ref import (bitplane_matmul_ref, packed_matmul_ref,
                                pact_quant_ref)

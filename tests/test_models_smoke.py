@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced same-family config, one forward +
 one train step on CPU, assert shapes + finiteness (assignment requirement)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,6 @@
 """Sharding-rule unit tests (1-device mesh: axes exist, sizes are 1)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import REGISTRY
-from repro.core import adjust_precision, bitwidths, requantize
+from repro.core import bitwidths
 from repro.core.state import quantized_leaves
 from repro.data import make_lm_pipeline
 from repro.hw import (bwq_scheme, isaac_scheme, speedup_and_energy_saving,

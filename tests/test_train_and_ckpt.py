@@ -6,7 +6,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt import CheckpointManager, restore_tree, save_tree
 from repro.configs import REGISTRY
@@ -15,7 +14,7 @@ from repro.models.api import build
 from repro.models.common import QuantConfig
 from repro.optim import (adamw, compress_decompress, cosine_schedule,
                          init_error_state, sgd)
-from repro.train import Trainer, TrainerConfig, TrainState
+from repro.train import Trainer, TrainerConfig
 from repro.train.loop import run_with_restarts
 
 
