@@ -27,7 +27,8 @@ from typing import Any, Dict, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .contracts import validate_decode_state, validate_serving_tree
+from .contracts import (validate_allocation, validate_decode_state,
+                        validate_draft_truncation, validate_serving_tree)
 from .footprint import (CompileSig, chunk_widths, footprint_findings,
                         generate_signatures, scheduler_footprint,
                         serve_signatures)
@@ -43,7 +44,8 @@ __all__ = [
     "example_batch", "fallback_leaf_paths", "footprint_findings",
     "generate_signatures", "lint_engine", "lint_sharding",
     "lint_traced_fn", "production_mesh_shape", "scheduler_footprint",
-    "serve_signatures", "validate_decode_state", "validate_serving_tree",
+    "serve_signatures", "validate_allocation", "validate_decode_state",
+    "validate_draft_truncation", "validate_serving_tree",
 ]
 
 
@@ -67,24 +69,46 @@ def _roundup64(n: int) -> int:
 
 def lint_engine(engine, prompt_len: int = 16, n_slots: int = 4,
                 max_new: int = 16, budget: int = 8,
-                mesh=None, prompt_widths: Optional[Sequence[int]] = None
-                ) -> LintReport:
+                mesh=None, prompt_widths: Optional[Sequence[int]] = None,
+                autotune_budget_bytes: Optional[int] = None) -> LintReport:
     """Run every analysis pass against ``engine``; nothing compiles or
     executes (jaxpr traces + eval_shape only).
 
     ``mesh`` (a real Mesh or :class:`ShapeOnlyMesh`) additionally runs
     the sharding lint against that topology; ``prompt_widths`` widens the
-    compile-footprint census beyond the single ``prompt_len``."""
+    compile-footprint census beyond the single ``prompt_len``;
+    ``autotune_budget_bytes`` asserts the AT1 budget contract against the
+    engine's (presumably autotuned) deployed tree."""
     cfg = engine.api.cfg
     report = LintReport(context={
         "arch": cfg.name, "family": cfg.family, "backend": engine.backend,
         "kv_quant_bits": engine.kv_quant_bits,
         "page_size": engine.page_size,
         "prefill_chunk": engine.prefill_chunk,
+        "speculate_planes": engine.speculate_planes,
     })
 
     # -- contracts ---------------------------------------------------------
     report.extend(validate_serving_tree(engine.params))
+
+    # A bitplane engine that would silently dense-fall-back is an ERROR
+    # under preflight (the engine itself only warns at construction):
+    # each offending leaf is named so the deploy call can be fixed.
+    if engine.backend == "bitplane":
+        for p in fallback_leaf_paths(engine.params, engine.backend):
+            report.add("error", "contracts", "bitplane-dense-fallback", p,
+                       "packed ServingWeight under backend='bitplane' "
+                       "executes as an in-graph dense dequant dot — "
+                       "deploy with to_serving_params(..., "
+                       "layout='bitplane')")
+
+    # -- autotune / speculative contracts (AT1-AT2) ------------------------
+    if autotune_budget_bytes is not None:
+        report.extend(validate_allocation(engine.params,
+                                          autotune_budget_bytes))
+    if engine.speculate_planes and engine.draft_params is not None:
+        report.extend(validate_draft_truncation(engine.draft_params,
+                                                engine.params))
 
     # -- graph lint --------------------------------------------------------
     batch = example_batch(cfg, 1, prompt_len)

@@ -30,6 +30,12 @@ Rules (cross-referenced by the contract appendix in ``kernels/ops.py``):
   reserved trash page; a non-zero page owned by two slots is flagged
   (no refcounted sharing yet — see ROADMAP prefix caching).
 * ``PC3``  quantized pools carry their per-token scale leaves.
+* ``AT1``  an autotuned assignment respects its byte budget exactly per
+  ``weight_stream_bytes`` (:func:`validate_allocation`).
+* ``AT2``  a speculative draft tree is a pure top-k mask-truncation view
+  of the deployed tree: shared payloads, each block keeping the
+  contiguous top run of its min(k, occupancy) highest live planes
+  (:func:`validate_draft_truncation`).
 """
 from __future__ import annotations
 
@@ -339,4 +345,83 @@ def validate_decode_state(state: Any,
             path="state['cache']",
             message=f"validator could not walk this cache tree "
                     f"({type(e).__name__}: {e})"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# autotune / speculative-draft validation (AT1-AT2)
+# ---------------------------------------------------------------------------
+
+def validate_allocation(params: Any, budget_bytes: int) -> List[Finding]:
+    """AT1: an autotuned tree respects its byte budget exactly.
+
+    The check re-derives the total through ``weight_stream_bytes`` — the
+    same per-block occupancy accounting the allocator optimized against —
+    so allocator and contract cannot drift apart silently."""
+    from ..serve.deploy import weight_stream_bytes
+    findings: List[Finding] = []
+    total = weight_stream_bytes(params)
+    if total > budget_bytes:
+        findings.append(Finding(
+            severity="error", pass_name="contracts", rule="AT1",
+            path="<tree>",
+            message=f"allocation streams {total} B per step, over the "
+                    f"{budget_bytes} B budget"))
+    return findings
+
+
+def validate_draft_truncation(draft: Any, deployed: Any) -> List[Finding]:
+    """AT2: a draft tree is a pure top-k mask-truncation view.
+
+    For every bitplane leaf pair: payload tensors (planes/sign/scale)
+    must be shared with the deployed tree, and each block's draft mask
+    must keep a contiguous run of the HIGHEST deployed live planes —
+    i.e. the draft reads a strict subset of the bytes the verify pass
+    streams, with a single truncation depth k across the tree."""
+    _, bp_t = _deployed_types()
+    findings: List[Finding] = []
+    dep = {p: leaf for p, leaf in iter_deployed_leaves(deployed)
+           if isinstance(leaf, bp_t)}
+    drf = {p: leaf for p, leaf in iter_deployed_leaves(draft)
+           if isinstance(leaf, bp_t)}
+    if set(dep) != set(drf):
+        findings.append(Finding(
+            severity="error", pass_name="contracts", rule="AT2",
+            path="<tree>",
+            message=f"draft/deployed bitplane leaves differ: "
+                    f"{sorted(set(dep) ^ set(drf))[:4]}"))
+        return findings
+    for p in sorted(dep):
+        c = _Ctx(findings, p)
+        d, f = dep[p], drf[p]
+        for name in ("planes", "sign", "scale"):
+            if getattr(d, name) is not getattr(f, name):
+                c.warn("AT2", f".{name} is not shared with the deployed "
+                              f"tree (draft should be a zero-copy view)")
+        dm, fm = _concrete(d.mask), _concrete(f.mask)
+        if dm is None or fm is None:
+            continue
+        if fm.shape != dm.shape:
+            c.err("AT2", f".mask shape {fm.shape} != deployed {dm.shape}")
+            continue
+        if np.any((fm > 0) & (dm == 0)):
+            c.err("AT2", ".mask lights planes dead in the deployed tree "
+                         "(draft must be a subset view)")
+            continue
+        occ = dm.sum(axis=-3)                          # (..., GR, GC)
+        k_blk = fm.sum(axis=-3)
+        bits = dm.shape[-3]
+        idx = np.arange(bits).reshape((bits, 1, 1))
+        want = ((idx >= occ[..., None, :, :] - k_blk[..., None, :, :])
+                & (idx < occ[..., None, :, :])).astype(fm.dtype)
+        if not np.array_equal(fm, want):
+            c.err("AT2", ".mask is not a contiguous top run of the "
+                         "deployed live planes")
+            continue
+        # one truncation depth k per leaf: every block keeps min(occ, k)
+        if k_blk.size and float(k_blk.max()) > 0:
+            k = float(k_blk.max())
+            if not np.array_equal(k_blk, np.minimum(occ, k)):
+                c.err("AT2", "inconsistent truncation depth across blocks "
+                             "(mask is not a single top-k view)")
     return findings

@@ -64,6 +64,14 @@ lint"):
   (stack, n_slots, nb) with every id inside the pool (``PC2`` flags
   orphaned ids and un-refcounted page sharing), and quantized pools
   carry their per-token scale leaves.
+* ``AT1`` — an autotuned assignment respects its byte budget exactly:
+  ``weight_stream_bytes(tree) <= budget`` under the same occupancy
+  accounting the allocator optimized against (no double bookkeeping).
+* ``AT2`` — a speculative draft tree is a pure mask-truncation view of
+  the deployed tree: payload tensors (planes/sign/scale) are shared,
+  and each block's draft mask keeps exactly its ``min(k, occ)`` HIGHEST
+  live planes — a contiguous top run of the deployed prefix, so the
+  draft reads a strict subset of the bytes the verify pass streams.
 """
 from __future__ import annotations
 
@@ -144,6 +152,28 @@ def to_packed_layout(qt: QuantizedTensor, bits: int = 8) -> PackedLayout:
         return PackedLayout(packed, block_scale * factor, 4,
                             spec.wb_rows, spec.wb_cols)
     raise ValueError(bits)
+
+
+def truncate_mask_topk(mask: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Draft-model view of a BP2 mask LUT: keep each block's top-k planes.
+
+    ``mask`` is (..., bits, GR, GC) binary f32, prefix-monotone along the
+    bit axis (a block with occupancy ``o`` keeps planes ``0..o-1``).  The
+    returned LUT keeps planes ``max(o-k, 0)..o-1`` — the k *highest* live
+    planes — so composing the same payload through it floors away the low
+    ``o-k`` magnitude bits: a coarser read of identical bytes, which is
+    what makes bitplane truncation a free draft model.  The result is NOT
+    prefix-monotone (it deliberately zeroes low planes), so draft trees
+    bypass BP2 validation and are checked by the AT2 contract instead.
+    Zero-cost at trace time: the kernel multiplies planes by the mask, so
+    ``bitplane_matmul`` consumes the truncated LUT unchanged.
+    """
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    bits = mask.shape[-3]
+    occ = jnp.sum(mask, axis=-3, keepdims=True)       # (..., 1, GR, GC)
+    idx = jnp.arange(bits, dtype=mask.dtype).reshape((bits, 1, 1))
+    return mask * (idx >= occ - float(k)).astype(mask.dtype)
 
 
 def bwq_dense_bitplane(x, layout: BitplaneLayout,

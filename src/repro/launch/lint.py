@@ -25,8 +25,14 @@ from ..serve.deploy import (default_deploy_bits, default_deploy_layout,
 
 def build_engine(arch: str, backend: str, deploy_bits: int = 0,
                  layout: str = "", kv_bits: int = 32, page_size: int = 0,
-                 prefill_chunk: int = 0, tiny: bool = True) -> ServeEngine:
-    """The serving stack exactly as ``launch.serve`` assembles it."""
+                 prefill_chunk: int = 0, tiny: bool = True,
+                 autotune_budget_bytes: int = 0,
+                 speculate_planes: int = 0) -> ServeEngine:
+    """The serving stack exactly as ``launch.serve`` assembles it.
+
+    ``autotune_budget_bytes`` runs the (weight-only) greedy budget search
+    over the deployed tree before building the engine, so the AT1
+    contract can be linted against a genuinely autotuned assignment."""
     cfg = REGISTRY[arch]
     if tiny:
         cfg = cfg.tiny(dtype="float32")
@@ -38,8 +44,13 @@ def build_engine(arch: str, backend: str, deploy_bits: int = 0,
         params = to_serving_params(
             params, deploy_bits,
             layout=layout or default_deploy_layout(backend))
+    if autotune_budget_bytes:
+        from ..serve.autotune import greedy_allocate, sensitivity_tree
+        params = greedy_allocate(params, sensitivity_tree(params),
+                                 autotune_budget_bytes).params
     return ServeEngine(api, params, kv_quant_bits=kv_bits, backend=backend,
-                       page_size=page_size, prefill_chunk=prefill_chunk)
+                       page_size=page_size, prefill_chunk=prefill_chunk,
+                       speculate_planes=speculate_planes)
 
 
 def main(argv=None) -> int:
@@ -73,11 +84,19 @@ def main(argv=None) -> int:
     ap.add_argument("--json", action="store_true", dest="as_json")
     ap.add_argument("--max-info", type=int, default=None,
                     help="truncate info findings in text output")
+    ap.add_argument("--autotune-budget-bytes", type=int, default=0,
+                    help="run the greedy budget search before linting and "
+                         "check the AT1 contract against that budget")
+    ap.add_argument("--speculate-planes", type=int, default=0,
+                    help="build the top-k draft tree and check the AT2 "
+                         "contract against the deployed tree")
     args = ap.parse_args(argv)
 
     engine = build_engine(args.arch, args.backend, args.deploy_bits,
                           args.layout, args.kv_bits, args.page_size,
-                          args.prefill_chunk, args.tiny)
+                          args.prefill_chunk, args.tiny,
+                          autotune_budget_bytes=args.autotune_budget_bytes,
+                          speculate_planes=args.speculate_planes)
     mesh = None
     if args.production_mesh:
         mesh = ShapeOnlyMesh(production_mesh_shape(args.multi_pod))
@@ -87,7 +106,9 @@ def main(argv=None) -> int:
             for kv in args.mesh.split(",")})
     report = lint_engine(engine, prompt_len=args.prompt_len,
                          n_slots=args.n_slots, max_new=args.max_new,
-                         budget=args.budget, mesh=mesh)
+                         budget=args.budget, mesh=mesh,
+                         autotune_budget_bytes=(args.autotune_budget_bytes
+                                                or None))
     if args.as_json:
         print(report.to_json())
     else:

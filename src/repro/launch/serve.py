@@ -75,6 +75,15 @@ def main():
     ap.add_argument("--lint", action="store_true",
                     help="run the static serving-graph lint before serving "
                          "and abort if it reports errors")
+    ap.add_argument("--autotune-budget-bytes", type=int, default=0,
+                    help="search per-block bit-widths under this "
+                         "weight-stream-bytes budget before serving "
+                         "(bitplane layout only; 0 = off)")
+    ap.add_argument("--speculate-planes", type=int, default=0,
+                    help="self-speculative decoding: draft with only the "
+                         "top-k live planes of each block (0 = off)")
+    ap.add_argument("--draft-gamma", type=int, default=4,
+                    help="draft tokens proposed per speculative round")
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch]
@@ -89,21 +98,36 @@ def main():
         params = to_serving_params(params, args.deploy_bits, layout=layout)
         print(f"deployed: {layout} int{args.deploy_bits} serving weights")
 
+    batch = _prompts(cfg, args)
+
+    if args.autotune_budget_bytes:
+        from ..serve.autotune import autotune_params
+        from ..serve.deploy import weight_stream_bytes
+        before = weight_stream_bytes(params)
+        alloc = autotune_params(api, params, args.autotune_budget_bytes,
+                                batch=batch)
+        params = alloc.params
+        print(f"autotuned: {before} -> {alloc.total_bytes} B/step under a "
+              f"{alloc.budget_bytes} B budget "
+              f"({alloc.steps_taken}/{alloc.steps_available} plane "
+              f"increments kept); gate {alloc.gate}")
+
     eng = ServeEngine(api, params, kv_quant_bits=args.kv_bits,
                       backend=args.backend, page_size=args.page_size,
                       n_pages=args.n_pages or None,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      speculate_planes=args.speculate_planes,
+                      draft_gamma=args.draft_gamma)
 
     if args.lint:
         from ..analysis import lint_engine
-        report = lint_engine(eng, prompt_len=args.prompt_len,
-                             n_slots=args.n_slots or args.batch,
-                             max_new=args.max_new)
+        report = lint_engine(
+            eng, prompt_len=args.prompt_len,
+            n_slots=args.n_slots or args.batch, max_new=args.max_new,
+            autotune_budget_bytes=args.autotune_budget_bytes or None)
         print(report.format(max_info=0))
         if not report.ok:
             raise SystemExit("serving-graph lint failed; aborting launch")
-
-    batch = _prompts(cfg, args)
 
     if args.requests:
         reqs = [Request(uid=i,
@@ -124,6 +148,8 @@ def main():
         if args.page_size:
             import json
             print(json.dumps(sched.cache_report()))
+        if args.speculate_planes:
+            print(f"speculative: {sched.spec_stats}")
         return
 
     key = jax.random.PRNGKey(args.seed) if args.temperature > 0 else None

@@ -128,6 +128,21 @@ class ModelAPI:
                                                 state["cache"], index)
         return logits, {**state, "cache": cache}
 
+    def verify_step(self, params, tokens, state, index) -> tuple:
+        """Batched multi-token decode forward (speculative verification).
+
+        ``tokens`` (B, W) are each slot's last accepted token followed by
+        its draft proposals, written at fill levels ``index .. index+W-1``
+        — the same cache-write machinery chunked prefill uses, so paged
+        and contiguous layouts both work.  Returns (B, W, V) logits."""
+        if self.cfg.is_encdec:
+            raise NotImplementedError(
+                "speculative verify is decoder-only (KV rollback is "
+                "positional; enc-dec cross attention is out of scope)")
+        logits, cache = transformer.verify_step(params, self.cfg, tokens,
+                                                state["cache"], index)
+        return logits, {**state, "cache": cache}
+
     def init_decode_state(self, params, batch, n_slots: int, max_len: int,
                           page_size: int = 0,
                           n_pages: Optional[int] = None) -> Any:

@@ -208,6 +208,15 @@ def qmatmul(x: jnp.ndarray, w: Any, *, backend: Optional[str] = None
     runs a plain dot."""
     from ..serve.deploy import BitplaneServingWeight, ServingWeight
     backend = backend or current_matmul_backend()
+    if _ACT_RECORDERS and isinstance(w, BitplaneServingWeight) and w.tag:
+        # Autotune calibration (serve.autotune.sensitivity): capture the
+        # per-input-feature second moment of the activations feeding each
+        # tagged bit-plane leaf.  Appends are in layer order because the
+        # calibration forward runs the layer loop eagerly (scan_layers
+        # off), so the recorder can restack per-layer slices.
+        x2 = jnp.mean(jnp.square(
+            x.reshape(-1, x.shape[-1]).astype(jnp.float32)), axis=0)
+        _ACT_RECORDERS[-1].setdefault(w.tag, []).append(x2)
     if isinstance(w, BitplaneServingWeight) and backend != "dense" \
             and w.sign.ndim == 2:
         return _qmatmul_bitplane(x, w, backend)
@@ -229,6 +238,29 @@ def qmatmul(x: jnp.ndarray, w: Any, *, backend: Optional[str] = None
 
 
 _WARNED_FALLBACKS: set = set()
+
+# Stack of active calibration stores (dicts tag -> [x2 per consuming
+# call, in call order]).  A list-as-stack so nested calibrations stay
+# isolated; empty in normal serving, so the hot path pays one falsy
+# check per qmatmul.
+_ACT_RECORDERS: list = []
+
+
+@contextlib.contextmanager
+def record_qmatmul_inputs(store: Optional[dict] = None):
+    """Capture activation second moments for tagged bit-plane leaves.
+
+    Inside the context every ``qmatmul`` against a ``tag``-labelled
+    BitplaneServingWeight appends the (K,)-shaped mean-square of its
+    input activations to ``store[tag]``.  Meant for eager (un-scanned)
+    calibration forwards — under a traced scan the captured values would
+    be tracers.  Yields the store."""
+    store = {} if store is None else store
+    _ACT_RECORDERS.append(store)
+    try:
+        yield store
+    finally:
+        _ACT_RECORDERS.pop()
 
 
 def prepare_params(params: Any, dtype=None) -> Any:

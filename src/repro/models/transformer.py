@@ -480,6 +480,23 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, index):
     return logits[:, -1], new_cache
 
 
+def verify_step(params, cfg: ModelConfig, tokens, cache, index):
+    """W-token decode forward for speculative verification.
+
+    ``tokens``: (B, W) — a slot's last accepted token followed by its
+    draft proposals; ``index``: scalar or per-slot (B,) fill levels.
+    Returns the full (B, W, V) logits (the verifier needs every
+    position's next-token distribution, not just the last) and the
+    cache with all W positions (re)written at full precision."""
+    b, w = tokens.shape
+    pos = decode_positions(index, b, w)
+    positions = jnp.stack([pos] * 3, axis=-1) if cfg.mrope else pos
+    logits, aux, new_cache = forward(params, cfg, tokens,
+                                     positions=positions, cache=cache,
+                                     index=index)
+    return logits, new_cache
+
+
 def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
     """Next-token cross entropy (+ MoE aux).  batch: tokens, labels, [mask]."""
     logits, aux, _ = forward(params, cfg, batch["tokens"],

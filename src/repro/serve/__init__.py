@@ -4,3 +4,6 @@ from .scheduler import Scheduler
 
 __all__ = ["ServeEngine", "Scheduler", "Request", "SamplingParams",
            "GenerationResult"]
+# precision autotuning + self-speculative decoding live in
+# repro.serve.autotune (imported lazily by the engine/CLIs to keep the
+# base serve import light)

@@ -1,0 +1,25 @@
+"""Serve-time precision autotuning + self-speculative decoding.
+
+Three layers over the PR 5 bit-plane serving stack:
+
+* :mod:`sensitivity` — per-WB-block plane sensitivity scores from
+  calibration activations, computed on the already-deployed bitplane
+  tree (no f32 retrain pass);
+* :mod:`allocate` — greedy marginal-utility search assigning per-block
+  bit-widths under a ``weight_stream_bytes`` budget, emitting a valid
+  re-packed tree (BP1-BP3 + AT1) gated by a prefill-logit check;
+* :mod:`speculative` — the truncated-plane read of the *same* deployed
+  leaves as a free draft model (``ServeEngine(..., speculate_planes=k)``),
+  with greedy verify token-identical to non-speculative decode (AT2).
+"""
+from .allocate import Allocation, autotune_params, greedy_allocate, \
+    quality_gate
+from .sensitivity import calibrate_activations, leaf_plane_sensitivity, \
+    sensitivity_tree, tag_bitplane_leaves
+from .speculative import greedy_verify, make_draft_params
+
+__all__ = [
+    "Allocation", "autotune_params", "greedy_allocate", "quality_gate",
+    "calibrate_activations", "leaf_plane_sensitivity", "sensitivity_tree",
+    "tag_bitplane_leaves", "greedy_verify", "make_draft_params",
+]

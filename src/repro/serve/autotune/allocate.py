@@ -1,0 +1,215 @@
+"""Budgeted per-block bit allocation over the deployed bitplane tree.
+
+Greedy marginal-utility search: every (leaf, block) starts at zero
+planes and candidate increments — "give this block one more plane,
+recovered top-down from its deployed occupancy" — are taken in order of
+predicted-error reduction per streamed byte.  The cost model is the
+PR 5 occupancy accounting itself (``bitplane_stream_bytes`` /
+``weight_stream_bytes``): one live plane streams one wbr x wbc 1-bit
+tile, a block's first plane also streams its sign tile, and the exact
+per-leaf ceil-to-byte totals are recomputed as the sequence is taken so
+the emitted tree respects the budget *exactly* under the same
+accounting the AT1 contract re-checks.
+
+Two properties the satellite property suite pins:
+
+* the greedy sequence is deterministic and budget-independent, and a
+  budget buys its longest affordable prefix — so a larger budget takes
+  a superset of increments and predicted error is monotone
+  non-increasing in the budget;
+* the emitted occupancies re-pack through
+  :func:`repro.serve.deploy.repack_bitplane_leaf`, whose output is
+  prefix-monotone (BP2) by construction and bit-identical to the
+  deployed tree wherever a block keeps its full occupancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..deploy import (bitplane_stream_bytes, repack_bitplane_leaf,
+                      weight_stream_bytes)
+from .sensitivity import (_is_bp, _leaf_path_map, calibrate_activations,
+                          sensitivity_tree)
+
+
+@dataclasses.dataclass
+class Allocation:
+    """Result of a greedy budget search (plus the optional quality gate)."""
+    params: Any                    # re-packed serving tree
+    budget_bytes: int
+    total_bytes: int               # weight_stream_bytes(params), <= budget
+    predicted_error: float         # sum of scores of planes left dropped
+    baseline_error: float          # error of the all-zero assignment
+    occupancies: Dict[str, np.ndarray]   # path -> (stack..., GR, GC) ints
+    steps_taken: int
+    steps_available: int
+    gate: Optional[dict] = None
+
+
+def _leaf_bytes(leaf, live_planes: int, live_blocks: int) -> int:
+    """bitplane_stream_bytes at a hypothetical occupancy (same math)."""
+    wbr, wbc = leaf.spec.wb_rows, leaf.spec.wb_cols
+    plane_bits = (live_planes + live_blocks) * wbr * wbc
+    return int(-(-plane_bits // 8) + -(-int(np.asarray(leaf.mask).size) // 8)
+               + int(leaf.scale.nbytes))
+
+
+def greedy_allocate(params: Any, scores: Dict[str, np.ndarray],
+                    budget_bytes: int) -> Allocation:
+    """Assign per-block plane occupancies under ``budget_bytes``.
+
+    ``scores`` comes from :func:`sensitivity_tree` (mask-aligned, one
+    entry per bitplane leaf).  Raises if even the zero-plane tree (mask
+    and scale LUTs plus all non-bitplane leaves) exceeds the budget."""
+    leaves = _leaf_path_map(params)
+    missing = sorted(set(leaves) - set(scores))
+    if missing:
+        raise ValueError(f"scores missing for leaves: {missing[:4]}")
+
+    paths = sorted(leaves)
+    # Exact byte bookkeeping: non-bitplane bytes are budget-invariant.
+    nonbp = weight_stream_bytes(params) - sum(
+        bitplane_stream_bytes(leaves[p]) for p in paths)
+    leaf_state = {}                       # path -> [live_planes, live_blocks]
+    total = nonbp
+    for p in paths:
+        leaf_state[p] = [0, 0]
+        total += _leaf_bytes(leaves[p], 0, 0)
+    if total > budget_bytes:
+        raise ValueError(
+            f"budget {budget_bytes} B infeasible: fixed overhead (mask + "
+            f"scale LUTs + non-bitplane leaves) is {total} B")
+
+    # Candidate increments, heap-ordered by error reduction per byte.
+    # Within a block planes must be recovered top-down (t ascending), so
+    # the heap holds each block's next increment only.
+    occ_full: Dict[str, np.ndarray] = {}
+    taken: Dict[str, np.ndarray] = {}
+    heap = []
+    steps_available = 0
+    baseline_error = 0.0
+    for li, p in enumerate(paths):
+        leaf = leaves[p]
+        s = np.asarray(scores[p], dtype=np.float64)
+        if s.shape != tuple(leaf.mask.shape):
+            raise ValueError(f"{p}: scores shape {s.shape} != mask "
+                             f"{tuple(leaf.mask.shape)}")
+        occ = np.asarray(leaf.mask).sum(axis=-3).astype(np.int64)
+        occ_full[p] = occ
+        taken[p] = np.zeros_like(occ)
+        baseline_error += float(s.sum())
+        wbr, wbc = leaf.spec.wb_rows, leaf.spec.wb_cols
+        tile = wbr * wbc / 8.0
+        s2 = s.reshape((-1,) + s.shape[-3:]) if occ.ndim > 2 else s[None]
+        o2 = occ.reshape((-1,) + occ.shape[-2:]) if occ.ndim > 2 else occ[None]
+        steps_available += int(o2.sum())
+        for st in range(o2.shape[0]):
+            for g in range(o2.shape[1]):
+                for h in range(o2.shape[2]):
+                    o = int(o2[st, g, h])
+                    if o:
+                        # s2 is (S, bits, GR, GC); increment t recovers
+                        # plane o - t, and the first one also streams
+                        # the block's sign tile.
+                        gain = float(s2[st, o - 1, g, h])
+                        heapq.heappush(heap, (-(gain / (2 * tile)),
+                                              li, st, g, h, 1))
+
+    err = baseline_error
+    steps = 0
+    while heap:
+        neg, li, st, g, h, t = heapq.heappop(heap)
+        p = paths[li]
+        leaf = leaves[p]
+        tk = taken[p].reshape((-1,) + taken[p].shape[-2:])
+        o = int(occ_full[p].reshape(tk.shape)[st, g, h])
+        lp, lb = leaf_state[p]
+        new_lb = lb + (1 if t == 1 else 0)
+        new_total = total - _leaf_bytes(leaf, lp, lb) \
+            + _leaf_bytes(leaf, lp + 1, new_lb)
+        if new_total > budget_bytes:
+            break                       # longest affordable prefix
+        total = new_total
+        leaf_state[p] = [lp + 1, new_lb]
+        tk[st, g, h] = t
+        s2 = np.asarray(scores[p], dtype=np.float64)
+        s2 = s2.reshape((-1,) + s2.shape[-3:])
+        err -= float(s2[st, o - t, g, h])
+        steps += 1
+        if t < o:
+            tile = leaf.spec.wb_rows * leaf.spec.wb_cols / 8.0
+            gain = float(s2[st, o - t - 1, g, h])
+            heapq.heappush(heap, (-(gain / tile), li, st, g, h, t + 1))
+
+    new_leaves = {p: repack_bitplane_leaf(leaves[p], taken[p])
+                  for p in paths}
+
+    def conv(path, x):
+        if _is_bp(x):
+            return new_leaves[jax.tree_util.keystr(path)]
+        return x
+    out = jax.tree_util.tree_map_with_path(conv, params, is_leaf=_is_bp)
+
+    from ...analysis.contracts import validate_allocation, \
+        validate_serving_tree
+    bad = [f for f in validate_serving_tree(out) if f.severity == "error"]
+    bad += [f for f in validate_allocation(out, budget_bytes)
+            if f.severity == "error"]
+    if bad:
+        raise ValueError("allocation produced a contract-violating tree:\n"
+                         + "\n".join(f.format() for f in bad[:8]))
+    return Allocation(params=out, budget_bytes=int(budget_bytes),
+                      total_bytes=weight_stream_bytes(out),
+                      predicted_error=err, baseline_error=baseline_error,
+                      occupancies=taken, steps_taken=steps,
+                      steps_available=steps_available)
+
+
+def quality_gate(api, deployed: Any, tuned: Any, batch: Dict[str, Any], *,
+                 backend: str = "dense",
+                 min_top1_agreement: float = 1.0) -> dict:
+    """Prefill-logit check of the tuned tree against the full deployment.
+
+    Both trees run the same jitted prefill; the gate compares last-token
+    logits (top-1 agreement across the calibration batch plus the max
+    absolute logit drift).  Returns the metrics dict with ``ok`` set."""
+    from ...models.common import matmul_backend
+
+    def last_logits(tree):
+        with matmul_backend(backend):
+            return jax.jit(lambda p: api.prefill(p, batch)[0])(tree)
+    full = np.asarray(last_logits(deployed), dtype=np.float64)
+    test = np.asarray(last_logits(tuned), dtype=np.float64)
+    agree = float(np.mean(np.argmax(full, -1) == np.argmax(test, -1)))
+    return {"top1_agreement": agree,
+            "max_abs_logit_diff": float(np.max(np.abs(full - test))),
+            "min_top1_agreement": float(min_top1_agreement),
+            "ok": agree >= min_top1_agreement}
+
+
+def autotune_params(api, params: Any, budget_bytes: int, *,
+                    batch: Optional[Dict[str, Any]] = None,
+                    backend: str = "dense",
+                    min_top1_agreement: float = 0.0,
+                    require_gate: bool = False) -> Allocation:
+    """One-call orchestration: calibrate -> score -> allocate -> gate.
+
+    ``batch`` (a prefill feed dict) drives both the activation
+    calibration and the quality gate; omit it for weight-only scores and
+    no gate.  ``require_gate`` raises if the gate fails rather than just
+    recording it."""
+    act2 = calibrate_activations(api, params, batch) if batch else None
+    scores = sensitivity_tree(params, act2)
+    alloc = greedy_allocate(params, scores, budget_bytes)
+    if batch is not None:
+        alloc.gate = quality_gate(api, params, alloc.params, batch,
+                                  backend=backend,
+                                  min_top1_agreement=min_top1_agreement)
+        if require_gate and not alloc.gate["ok"]:
+            raise ValueError(f"autotune quality gate failed: {alloc.gate}")
+    return alloc

@@ -1,0 +1,128 @@
+"""Plane-drop sensitivity calibration on the deployed bitplane tree.
+
+Dropping plane ``b`` of block (g, h) perturbs every covered weight
+element by ``2^b * scale[g, h] * plane_b[k, n]``; under a diagonal
+activation model (cross moments ``E[x_k x_k']`` neglected) the induced
+output MSE is ``sum_{k, n in block} E[x_k^2] * (2^b * scale *
+plane_b[k, n])^2``.  That is cheap to evaluate exactly from the packed
+planes themselves — the scores come from the *deployed* tree, never a
+f32 retrain pass — and only needs the per-input-feature second moments
+``E[x_k^2]`` of whatever activations feed each leaf.
+
+Those moments come from one eager calibration forward: the config is
+rebuilt with ``scan_layers=False`` so ``scan_or_loop`` unrolls into a
+concrete per-layer python loop, each sliced bit-plane leaf reaches
+``qmatmul`` as an eager value carrying its static ``tag``, and the
+:func:`repro.models.common.record_qmatmul_inputs` context captures the
+moments keyed by tag in layer order.  Leaves the eager pass cannot
+attribute (consumed through ragged/grouped expert paths or re-traced
+inner scans) fall back to weight-only scores (``E[x_k^2] = 1``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ...models import common as mcommon
+from ..deploy import BitplaneServingWeight
+
+
+def _is_bp(x) -> bool:
+    return isinstance(x, BitplaneServingWeight)
+
+
+def _leaf_path_map(params) -> Dict[str, BitplaneServingWeight]:
+    """Deployed bitplane leaves keyed by their keystr tree path."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params, is_leaf=_is_bp)
+    return {jax.tree_util.keystr(path): leaf
+            for path, leaf in flat if _is_bp(leaf)}
+
+
+def tag_bitplane_leaves(params: Any) -> Any:
+    """Copy of the tree with every bitplane leaf's ``tag`` set to its path.
+
+    The tag is a *static* dataclass field, so it survives the per-layer
+    ``tree_map`` slicing inside ``scan_or_loop`` — which is what lets the
+    qmatmul recorder attribute activations back to stacked leaves."""
+    def conv(path, x):
+        if _is_bp(x):
+            return dataclasses.replace(x, tag=jax.tree_util.keystr(path))
+        return x
+    return jax.tree_util.tree_map_with_path(conv, params, is_leaf=_is_bp)
+
+
+def calibrate_activations(api, params: Any, batch: Dict[str, Any]
+                          ) -> Dict[str, Optional[np.ndarray]]:
+    """One eager prefill over ``batch``; per-leaf activation moments.
+
+    Returns ``{path: (stack..., K) float64 array or None}`` for every
+    bitplane leaf — ``None`` marks the weight-only fallback (the leaf was
+    consumed a different number of times than its stack size, so the
+    layer-order restack would be wrong)."""
+    from ...models.api import build
+    cfg = dataclasses.replace(api.cfg, scan_layers=False)
+    eager_api = build(cfg)
+    tagged = tag_bitplane_leaves(params)
+    with mcommon.matmul_backend("dense"):
+        with mcommon.record_qmatmul_inputs() as store:
+            eager_api.prefill(tagged, batch)
+    out: Dict[str, Optional[np.ndarray]] = {}
+    for path, leaf in _leaf_path_map(tagged).items():
+        stack_dims = tuple(leaf.shape[:-2])
+        stack = int(np.prod(stack_dims, dtype=np.int64)) if stack_dims else 1
+        recs = store.get(path, [])
+        if len(recs) != stack:
+            out[path] = None
+            continue
+        arr = np.stack([np.asarray(r, dtype=np.float64) for r in recs])
+        out[path] = arr.reshape(stack_dims + (arr.shape[-1],))
+    return out
+
+
+def leaf_plane_sensitivity(leaf: BitplaneServingWeight,
+                           act2: Optional[np.ndarray] = None) -> np.ndarray:
+    """Scores shaped exactly like ``leaf.mask``: (stack..., bits, GR, GC).
+
+    ``scores[..., b, g, h]`` is the predicted output-MSE contribution of
+    dropping plane ``b`` from block (g, h); dead planes score zero.
+    ``act2`` is the (stack..., K) activation second-moment array from
+    :func:`calibrate_activations` (``None`` -> weight-only, all ones)."""
+    from ...kernels.ref import unpack_bits
+    wbr, wbc = leaf.spec.wb_rows, leaf.spec.wb_cols
+    mask = np.asarray(leaf.mask, dtype=np.float64)
+    gr, gc = mask.shape[-2], mask.shape[-1]
+    kp, np_ = gr * wbr, gc * wbc
+    planes = np.asarray(unpack_bits(leaf.planes),
+                        dtype=np.float64)[..., :kp, :np_]
+    k_true = leaf.shape[-2]
+    stack_dims = tuple(leaf.shape[:-2])
+    a = np.ones(stack_dims + (k_true,), dtype=np.float64) if act2 is None \
+        else np.broadcast_to(np.asarray(act2, dtype=np.float64),
+                             stack_dims + (k_true,))
+    a_pad = np.zeros(stack_dims + (kp,), dtype=np.float64)
+    a_pad[..., :k_true] = a
+    weighted = planes * a_pad[..., None, :, None]    # (..., bits, Kp, Np)
+    blocks = weighted.reshape(weighted.shape[:-2] + (gr, wbr, gc, wbc))
+    per_block = blocks.sum(axis=(-3, -1))            # (..., bits, GR, GC)
+    bits = leaf.bits
+    pw2 = (4.0 ** np.arange(bits)).reshape((bits, 1, 1))
+    scale2 = np.asarray(leaf.scale, dtype=np.float64) ** 2
+    return per_block * pw2 * scale2[..., None, :, :] * mask
+
+
+def sensitivity_tree(params: Any,
+                     act2_map: Optional[Dict[str, Optional[np.ndarray]]]
+                     = None) -> Dict[str, np.ndarray]:
+    """Sensitivity scores for every deployed bitplane leaf.
+
+    Keys are keystr tree paths (1:1 with the deployed tree's bitplane
+    leaves); each value is shaped like that leaf's mask LUT, so the
+    score pytree is exactly mask-aligned.  ``act2_map`` is the output of
+    :func:`calibrate_activations`; omitted entries use weight-only
+    scores."""
+    act2_map = act2_map or {}
+    return {path: leaf_plane_sensitivity(leaf, act2_map.get(path))
+            for path, leaf in _leaf_path_map(params).items()}

@@ -1,0 +1,101 @@
+"""Self-speculative decoding via bitplane truncation.
+
+The plane-sliced serving layout makes a draft model free: truncating
+every block's mask LUT to its top-k live planes
+(:func:`repro.kernels.ops.truncate_mask_topk`) yields a coarser read of
+the *same* deployed payload — no second weight copy, no retrain, and
+``bitplane_matmul`` consumes the truncated LUT unchanged.  The draft
+tree is a pure view (planes/sign/scale shared, AT2), so building it
+costs one small mask recompute per leaf.
+
+Protocol per round (greedy sampling):
+
+1. draft γ tokens with the truncated tree, one decode step each,
+   writing draft K/V at ``index .. index+γ-1``;
+2. one batched verify forward with the FULL tree over
+   ``[last_tok, d_1 .. d_γ]`` (width γ+1) at the same offsets — it
+   overwrites every draft K/V entry with full-precision values and
+   returns per-position logits;
+3. accept the longest matching prefix (``d_j == argmax(l_{j-1})``) plus
+   one correction/bonus token from the first mismatching (or final)
+   verify logits.
+
+Every cache position below the accepted fill level was therefore last
+written by a verify pass, which is what makes greedy speculative decode
+token-identical to non-speculative decode; rejected positions sit above
+the fill level, masked by ``kv_len``, and are rewritten by the next
+round's verify before ever being unmasked — no rollback bookkeeping and
+no page-pool residue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Tuple
+
+import jax
+import numpy as np
+
+from ...kernels.ops import truncate_mask_topk
+from ..deploy import BitplaneServingWeight
+
+
+def _is_bp(x) -> bool:
+    return isinstance(x, BitplaneServingWeight)
+
+
+def make_draft_params(params: Any, k: int) -> Any:
+    """Truncated-mask view of a deployed tree: the free draft model.
+
+    Payload tensors are shared with the deployed tree (zero-copy); only
+    the mask LUTs are recomputed.  The result intentionally violates BP2
+    (low planes are zeroed), so it must NOT go through deploy-time
+    validation — the AT2 contract (:func:`repro.analysis.contracts.
+    validate_draft_truncation`) is its check instead."""
+    if k < 1:
+        raise ValueError(f"speculate_planes must be >= 1, got {k}")
+    n_bp = 0
+
+    def conv(x):
+        nonlocal n_bp
+        if _is_bp(x):
+            n_bp += 1
+            return dataclasses.replace(x, mask=truncate_mask_topk(x.mask, k))
+        return x
+    out = jax.tree_util.tree_map(conv, params, is_leaf=_is_bp)
+    if n_bp == 0:
+        raise ValueError(
+            "speculative decoding needs a plane-sliced tree (no "
+            "BitplaneServingWeight leaves found); deploy with "
+            "layout='bitplane'")
+    return out
+
+
+def greedy_verify(draft_tokens: np.ndarray, verify_logits: np.ndarray
+                  ) -> Tuple[List[np.ndarray], np.ndarray]:
+    """Host-side greedy acceptance for one speculative round.
+
+    ``draft_tokens`` (B, γ) int, ``verify_logits`` (B, γ+1, V) from the
+    full-mask verify forward.  Per row: accept drafts while they match
+    the verify argmax, then append the correction (first mismatch) or
+    bonus (all matched) token.  Returns the per-row accepted token
+    arrays (each length 1..γ+1) and the per-row count of accepted
+    *draft* tokens (for acceptance-rate accounting)."""
+    draft = np.asarray(draft_tokens)
+    logits = np.asarray(verify_logits)
+    b, gamma = draft.shape
+    ref = np.argmax(logits, axis=-1)              # (B, γ+1)
+    accepted: List[np.ndarray] = []
+    n_draft = np.zeros((b,), dtype=np.int64)
+    for r in range(b):
+        toks = []
+        for j in range(gamma):
+            if int(draft[r, j]) == int(ref[r, j]):
+                toks.append(int(draft[r, j]))
+            else:
+                toks.append(int(ref[r, j]))       # correction
+                break
+        else:
+            toks.append(int(ref[r, gamma]))       # bonus
+        n_draft[r] = len(toks) - 1       # last token is correction/bonus
+        accepted.append(np.asarray(toks, dtype=np.int64))
+    return accepted, n_draft

@@ -72,6 +72,11 @@ class BitplaneServingWeight:
     shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
     spec: BlockingSpec = dataclasses.field(metadata=dict(static=True))
     bits: int = dataclasses.field(default=8, metadata=dict(static=True))
+    # Static identity label (tree path), set by the autotune calibration
+    # pass: it survives the per-layer tree_map slicing of scan_or_loop, so
+    # the qmatmul activation recorder can key captured statistics back to
+    # the stacked deployed leaf.  Empty outside calibration.
+    tag: str = dataclasses.field(default="", metadata=dict(static=True))
 
 
 def _integer_grid(w, scale, bitwidth, spec, n_bits, bits):
@@ -282,6 +287,62 @@ def serving_compose(sw: ServingWeight, dtype=jnp.bfloat16) -> jnp.ndarray:
     w = wq * s_full
     k, n = sw.shape[-2], sw.shape[-1]
     return w[..., :k, :n].astype(dtype)
+
+
+def repack_bitplane_leaf(sw: BitplaneServingWeight,
+                         new_occ) -> BitplaneServingWeight:
+    """Re-pack a bit-plane leaf to reduced per-block plane occupancies.
+
+    ``new_occ`` is an (..., GR, GC) integer-valued array with
+    ``0 <= new_occ <= current occupancy``.  A block dropping ``d`` planes
+    re-rounds its magnitudes onto the coarser grid — ``q' = clip(round(
+    q / 2^d), 0, 2^new_occ - 1)`` — and folds ``2^d`` into its effective
+    scale entry, so the emitted leaf is a *valid* deployment: the mask is
+    prefix-monotone over the new occupancies (BP2) and byte-pad rows stay
+    zero (BP1).  Blocks with ``d == 0`` are reproduced bit-identically,
+    so a full-budget allocation round-trips the deployed tree exactly.
+    Host-side numpy: this runs in the offline autotune search, never on
+    the serving hot path.
+    """
+    from ..kernels.ref import pack_bits, unpack_bits
+    wbr, wbc = sw.spec.wb_rows, sw.spec.wb_cols
+    mask = np.asarray(sw.mask, dtype=np.float64)    # (..., bits, GR, GC)
+    occ = mask.sum(axis=-3)                         # (..., GR, GC)
+    new_occ = np.asarray(new_occ, dtype=np.float64)
+    if new_occ.shape != occ.shape:
+        raise ValueError(f"new_occ shape {new_occ.shape} != grid {occ.shape}")
+    if np.any(new_occ < 0) or np.any(new_occ > occ):
+        raise ValueError("new occupancy must lie in [0, deployed occupancy]")
+    bits = sw.bits
+    gr, gc = mask.shape[-2], mask.shape[-1]
+    kp, np_ = gr * wbr, gc * wbc
+    planes = np.asarray(unpack_bits(sw.planes), dtype=np.float64)
+    kp8 = planes.shape[-2]
+
+    def _expand(block_map):                         # (..., GR, GC) -> (Kp, Np)
+        return np.repeat(np.repeat(block_map, wbr, axis=-2), wbc, axis=-1)
+
+    weights = (2.0 ** np.arange(bits)).reshape((bits, 1, 1))
+    m_full = _expand(mask)                          # (..., bits, Kp, Np)
+    mag = (planes[..., :kp, :] * m_full * weights).sum(axis=-3)
+    drop = occ - new_occ
+    q = np.round(mag / 2.0 ** _expand(drop))
+    # round() can carry into plane new_occ (q near the old ceiling); clip
+    # back onto the coarser grid so the prefix mask stays exact.
+    q = np.minimum(q, 2.0 ** _expand(new_occ) - 1.0).astype(np.int64)
+    new_planes = np.stack([((q >> b) & 1).astype(np.uint8)
+                           for b in range(bits)], axis=-3)
+    if kp8 != kp:                                   # restore byte-pad rows
+        pad = [(0, 0)] * new_planes.ndim
+        pad[-2] = (0, kp8 - kp)
+        new_planes = np.pad(new_planes, pad)
+    plane_idx = np.arange(bits, dtype=np.float64).reshape((bits, 1, 1))
+    new_mask = (plane_idx < new_occ[..., None, :, :]).astype(np.float32)
+    new_scale = (np.asarray(sw.scale, dtype=np.float64)
+                 * 2.0 ** drop).astype(np.float32)
+    return dataclasses.replace(
+        sw, planes=pack_bits(jnp.asarray(new_planes)),
+        mask=jnp.asarray(new_mask), scale=jnp.asarray(new_scale))
 
 
 def bitplane_serving_compose(sw: BitplaneServingWeight,

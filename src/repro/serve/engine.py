@@ -76,6 +76,8 @@ class ServeEngine:
     prefill_chunk: int = 0        # >0: insert prompts in chunks this wide
     donate_state: bool = True     # donate decode state (no double-buffer)
     validate: bool = True         # contract-check deployed leaves on build
+    speculate_planes: int = 0     # >0: self-speculative decode, top-k draft
+    draft_gamma: int = 4          # draft tokens proposed per round
 
     def __post_init__(self):
         cfg = self.api.cfg
@@ -130,8 +132,31 @@ class ServeEngine:
         self._decode_j = self._jit(
             self.api.decode_step,
             **({"donate_argnums": (2,)} if self.donate_state else {}))
+        self.draft_params = None
+        self._verify_j = None
+        if self.speculate_planes:
+            if self.api.cfg.is_encdec or self.api.cfg.family in (
+                    "ssm", "hybrid", "rwkv"):
+                raise ValueError(
+                    f"speculate_planes needs a purely positional KV cache "
+                    f"(rejected drafts roll back by fill level); family "
+                    f"{self.api.cfg.family!r} carries recurrent state")
+            if self.draft_gamma < 1:
+                raise ValueError(f"draft_gamma must be >= 1, "
+                                 f"got {self.draft_gamma}")
+            from .autotune.speculative import make_draft_params
+            # Zero-copy top-k mask view; deliberately NOT BP2-validated
+            # (it zeroes low planes) — AT2 is its contract instead.
+            self.draft_params = make_draft_params(self.params,
+                                                  self.speculate_planes)
+            self._verify_j = self._jit(
+                self.api.verify_step,
+                **({"donate_argnums": (2,)} if self.donate_state else {}))
         if self.mesh is not None:
             self.params = self._place(self.params, param_pspecs)
+            if self.draft_params is not None:
+                self.draft_params = self._place(self.draft_params,
+                                                param_pspecs)
 
     def _has_packed_weights(self) -> bool:
         """True if the tree holds leaves this backend can accelerate:
@@ -248,6 +273,37 @@ class ServeEngine:
         with use_mesh(self.mesh):
             return self._decode_j(self.params, tokens, state, index)
 
+    def draft_decode(self, tokens: jnp.ndarray, state: Any, index) -> tuple:
+        """One decode step with the truncated-mask draft tree.
+
+        Identical shapes/treedef to :meth:`decode` (the draft tree shares
+        every payload tensor with the deployed one), so it reuses the same
+        compiled decode executable — no second trace, no second weight
+        copy.  Draft K/V writes are transient: the verify pass rewrites
+        every drafted position at full precision before it can be read
+        below the accepted fill level."""
+        if self.draft_params is None:
+            raise ValueError("engine built without speculate_planes")
+        if self.mesh is not None:
+            put = self._shard_inputs({"tokens": tokens, "index": index})
+            tokens, index = put["tokens"], put["index"]
+        with use_mesh(self.mesh):
+            return self._decode_j(self.draft_params, tokens, state, index)
+
+    def verify(self, tokens: jnp.ndarray, state: Any, index) -> tuple:
+        """Batched W-token verify forward with the full deployed tree.
+
+        ``tokens`` (B, W): each slot's last accepted token followed by its
+        draft proposals; returns ((B, W, V) logits, state) with all W
+        positions (re)written at full precision."""
+        if self._verify_j is None:
+            raise ValueError("engine built without speculate_planes")
+        if self.mesh is not None:
+            put = self._shard_inputs({"tokens": tokens, "index": index})
+            tokens, index = put["tokens"], put["index"]
+        with use_mesh(self.mesh):
+            return self._verify_j(self.params, tokens, state, index)
+
     def prompt_width(self, batch: Dict[str, jnp.ndarray]) -> int:
         """Cache positions a prompt occupies (tokens + VLM vision prefix)."""
         p = batch["tokens"].shape[1]
@@ -262,7 +318,12 @@ class ServeEngine:
         """batch: prompt inputs per the model family. Returns (B, max_new).
 
         ``greedy`` (or no ``key``) takes per-step argmax; otherwise tokens
-        are drawn at ``temperature`` over the ``top_k`` best logits."""
+        are drawn at ``temperature`` over the ``top_k`` best logits.
+        With ``speculate_planes`` set and greedy sampling, decoding runs
+        the draft/verify protocol — token-identical output, fewer
+        full-precision passes."""
+        if self.speculate_planes and (greedy or key is None):
+            return self._generate_speculative(batch, max_new)
         logits, state = self.prefill(batch, extra_slots=_roundup64(max_new))
         prompt_len = self.prompt_width(batch)
         sp = SamplingParams(temperature=temperature, top_k=top_k)
@@ -287,6 +348,53 @@ class ServeEngine:
             outs.append(tok[:, 0])
             index = index + 1
         return jnp.stack(outs, axis=1)
+
+    def _generate_speculative(self, batch: Dict[str, jnp.ndarray],
+                              max_new: int) -> jnp.ndarray:
+        """Greedy static-batch decoding via draft/verify rounds.
+
+        Rows accept different draft counts per round, so fill levels are
+        per-row (B,) vectors; a row that reaches ``max_new`` simply stops
+        taking tokens (its index freezes, later writes overwrite masked
+        headroom).  The extra ``draft_gamma + 1`` headroom keeps every
+        write inside the cache."""
+        from .autotune.speculative import greedy_verify
+        gamma = self.draft_gamma
+        logits, state = self.prefill(
+            batch, extra_slots=_roundup64(max_new + gamma + 1))
+        prompt_len = self.prompt_width(batch)
+        b = batch["tokens"].shape[0]
+        outs: List[List[int]] = [[int(t)] for t in
+                                 np.asarray(jnp.argmax(logits, -1))]
+        counts = np.ones((b,), dtype=np.int64)
+        index = np.full((b,), prompt_len, dtype=np.int64)
+        tok = jnp.asarray([[o[-1]] for o in outs], jnp.int32)
+        while int(counts.min()) < max_new:
+            g = min(gamma, max_new - int(counts.min()) - 1)
+            if g < 1:                      # last token: plain decode step
+                logits, state = self.decode(
+                    tok, state, jnp.asarray(index, jnp.int32))
+                nxt = np.asarray(jnp.argmax(logits, -1))
+                accepted = [np.asarray([t]) for t in nxt]
+            else:
+                cur, drafts = tok, []
+                for j in range(g):
+                    lg, state = self.draft_decode(
+                        cur, state, jnp.asarray(index + j, jnp.int32))
+                    cur = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+                    drafts.append(cur)
+                vtoks = jnp.concatenate([tok] + drafts, axis=1)  # (B, g+1)
+                vlogits, state = self.verify(
+                    vtoks, state, jnp.asarray(index, jnp.int32))
+                accepted, _ = greedy_verify(np.asarray(vtoks[:, 1:]),
+                                            np.asarray(vlogits))
+            for r in range(b):
+                take = min(len(accepted[r]), max_new - int(counts[r]))
+                outs[r].extend(int(t) for t in accepted[r][:take])
+                counts[r] += take
+                index[r] += take
+            tok = jnp.asarray([[o[-1]] for o in outs], jnp.int32)
+        return jnp.asarray([o[:max_new] for o in outs], jnp.int32)
 
     # ---- request-level API ----------------------------------------------
     def make_scheduler(self, requests, n_slots: int = 8,

@@ -201,6 +201,9 @@ class Scheduler:
         self.waiting: List[Request] = []
         self.tick = 0
         self.results: Dict[int, GenerationResult] = {}
+        # speculative-decode accounting (acceptance rate, bench rows)
+        self.spec_stats: Dict[str, int] = {
+            "rounds": 0, "drafted": 0, "accepted_drafts": 0, "emitted": 0}
 
     # ---- submission ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -376,16 +379,19 @@ class Scheduler:
                 self._maybe_retire(i)
 
     # ---- paged growth ----------------------------------------------------
-    def _grow_pages(self, live: List[int]) -> None:
-        """Allocate the next page for any slot whose upcoming decode write
-        crosses a block boundary (decode advances one token per tick, so
-        at most one page per slot per tick)."""
+    def _grow_pages(self, live: List[int], lookahead: int = 0) -> None:
+        """Allocate pages for every slot whose upcoming writes cross block
+        boundaries.  Plain decode advances one token per tick (at most one
+        page per slot); a speculative round writes up to ``lookahead``
+        positions past the fill level in one tick, so growth may claim
+        several pages — all from the slot's admission-time reservation,
+        because the round's draft depth is clamped to the slot's remaining
+        token budget (the free list can never come up short here)."""
         for i in live:
             s = self.slots[i]
-            blk = s.index // self.page_size
-            if blk >= len(s.pages):
-                # drawn from this slot's admission-time reservation, so
-                # the free list can never come up short here
+            blk_hi = (s.index + lookahead) // self.page_size
+            while len(s.pages) <= blk_hi:
+                blk = len(s.pages)
                 page = self.allocator.alloc(1, from_reserve=1)
                 assert page is not None and s.reserve_left > 0, \
                     f"reservation accounting broke for slot {i}"
@@ -414,6 +420,64 @@ class Scheduler:
                 self._tables_dirty = True
             self.slots[i] = None
 
+    # ---- speculative tick ------------------------------------------------
+    def _spec_tick(self, live: List[int]) -> bool:
+        """One draft/verify round over the live greedy slots.
+
+        Draft depth is clamped round-wide to the tightest slot's remaining
+        token budget minus one (each slot emits at least one verify-chosen
+        token), so every cache write — γ draft steps at ``index..index+γ-1``
+        plus the (γ+1)-wide verify at ``index`` — stays inside each slot's
+        admission-time page reservation.  Rejected draft K/V needs no
+        rollback: it sits above the accepted fill level, masked by
+        ``kv_len``, and the next round's verify rewrites it at full
+        precision before it can ever be unmasked — so the page pool drains
+        leak-free.  Returns False (caller runs the plain tick) when no
+        draft depth fits."""
+        from .autotune.speculative import greedy_verify
+        eng = self.engine
+        g = min(eng.draft_gamma,
+                min(self.slots[i].req.sampling.max_new_tokens
+                    - len(self.slots[i].generated) for i in live) - 1)
+        if g < 1:
+            return False
+        if self.paged:
+            self._grow_pages(live, lookahead=g)
+        self._flush_tables()
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        # parked rows write masked scratch at the last position (paged:
+        # the trash page), exactly like the plain tick
+        idx = np.full((self.n_slots,), self.total_len - 1, np.int32)
+        for i in live:
+            toks[i, 0] = self.slots[i].last_tok
+            idx[i] = self.slots[i].index
+        idx_j = jnp.asarray(idx)
+        cur, drafts, state = jnp.asarray(toks), [], self.state
+        for j in range(g):
+            lg, state = eng.draft_decode(cur, state, idx_j + j)
+            cur = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+            drafts.append(cur)
+        vtoks = jnp.concatenate([jnp.asarray(toks)] + drafts, axis=1)
+        vlogits, self.state = eng.verify(vtoks, state, idx_j)
+        accepted, n_draft = greedy_verify(np.asarray(vtoks[:, 1:]),
+                                          np.asarray(vlogits))
+        self.spec_stats["rounds"] += 1
+        for i in live:
+            slot = self.slots[i]
+            sp = slot.req.sampling
+            self.spec_stats["drafted"] += g
+            self.spec_stats["accepted_drafts"] += int(n_draft[i])
+            for t in accepted[i]:
+                slot.generated.append(int(t))
+                slot.last_tok = int(t)
+                slot.index += 1
+                self.spec_stats["emitted"] += 1
+                if (sp.eos_id is not None and int(t) == sp.eos_id) or \
+                        len(slot.generated) >= sp.max_new_tokens:
+                    break                 # discard the rest of the round
+            self._maybe_retire(i)
+        return True
+
     # ---- one tick --------------------------------------------------------
     def step(self) -> None:
         """Admit what has arrived, advance mid-prefill slots one chunk,
@@ -423,6 +487,12 @@ class Scheduler:
             self._advance_prefills()
         live = [i for i, s in enumerate(self.slots)
                 if s is not None and not s.chunks]
+        if live and self.engine.speculate_planes and \
+                all(self.slots[i].req.sampling.temperature == 0
+                    for i in live):
+            if self._spec_tick(live):
+                self.tick += 1
+                return
         if live:
             if self.paged:
                 self._grow_pages(live)

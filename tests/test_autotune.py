@@ -1,0 +1,291 @@
+"""Precision autotuner + self-speculative decoding (serve.autotune).
+
+Covers the PR's acceptance criteria:
+
+* greedy budget search: allocations respect ``weight_stream_bytes``
+  budgets exactly (AT1), stay BP1-BP3-valid, and round-trip
+  bit-identically when the budget admits every plane;
+* budget monotonicity as a randomized property: a larger budget never
+  yields a higher predicted error;
+* emitted LUTs pass the serving contracts for random 9x8-geometry
+  shapes (the paper's OU tile), not just the model fixtures;
+* draft trees: ``truncate_mask_topk`` keeps exactly the top-k live
+  planes and ``validate_draft_truncation`` (AT2) accepts them;
+* speculative decode: greedy output is token-identical to the
+  non-speculative engine across families x deploy bits x cache layouts,
+  and a paged run drains leak-free;
+* the bitplane dense-fallback lint is an ERROR under preflight while
+  engine construction still only warns.
+
+Property sweeps run under `hypothesis` when installed, else the seeded
+fallback driver (`repro.testing.proptest`).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # optional dep: seeded fallback
+    from repro.testing import proptest as _pt
+    given, settings, st = _pt.given, _pt.settings, _pt
+
+from repro.analysis import lint_engine
+from repro.analysis.contracts import (validate_allocation,
+                                      validate_draft_truncation,
+                                      validate_serving_tree)
+from repro.configs import REGISTRY
+from repro.core import BlockingSpec, from_float
+from repro.kernels.ops import truncate_mask_topk
+from repro.models.api import build
+from repro.models.common import QuantConfig
+from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve.autotune import (autotune_params, calibrate_activations,
+                                  greedy_allocate, make_draft_params,
+                                  sensitivity_tree)
+from repro.serve.deploy import (BitplaneServingWeight, to_serving_params,
+                                weight_stream_bytes)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@functools.lru_cache(maxsize=None)
+def _deployed(arch: str, bits: int = 8):
+    cfg = REGISTRY[arch].tiny(dtype="float32").with_quant(
+        QuantConfig(mode="fake", n_bits=8, act_bits=8))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return api, to_serving_params(params, bits, layout="bitplane")
+
+
+def _batch(cfg, b=2, t=8, seed=1):
+    return {"tokens": jax.random.randint(
+        jax.random.PRNGKey(seed), (b, t), 0, cfg.vocab).astype(jnp.int32)}
+
+
+def _bp_leaves(tree):
+    return [l for l in jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, BitplaneServingWeight))
+        if isinstance(l, BitplaneServingWeight)]
+
+
+@functools.lru_cache(maxsize=None)
+def _toy_tree(k: int, n: int, n_bits: int, seed: int):
+    """A single random bitplane serving leaf on the paper's 9x8 tile."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n))
+    qt = from_float(w, n_bits, BlockingSpec(9, 8))
+    return to_serving_params({"w": qt}, n_bits, layout="bitplane")
+
+
+# ---------------------------------------------------------------- mask topk
+
+def test_truncate_mask_topk_keeps_highest_live_planes():
+    # occupancies 3 and 1 out of 4 planes
+    mask = jnp.array([[[1.0, 1.0]], [[1.0, 0.0]], [[1.0, 0.0]],
+                      [[0.0, 0.0]]])
+    out = np.asarray(truncate_mask_topk(mask, 2))
+    # occ=3 column keeps planes {1,2}; occ=1 column keeps plane {0}
+    want = np.array([[[0.0, 1.0]], [[1.0, 0.0]], [[1.0, 0.0]],
+                     [[0.0, 0.0]]])
+    np.testing.assert_array_equal(out, want)
+
+
+def test_truncate_mask_topk_k_at_least_occ_is_identity():
+    mask = jnp.array([[[1.0]], [[1.0]], [[0.0]]])
+    np.testing.assert_array_equal(np.asarray(truncate_mask_topk(mask, 5)),
+                                  np.asarray(mask))
+    with pytest.raises(ValueError):
+        truncate_mask_topk(mask, -1)
+
+
+def test_draft_tree_passes_at2():
+    api, sp = _deployed("phi3-mini-3.8b")
+    for k in (1, 2, 7, 12):
+        draft = make_draft_params(sp, k)
+        findings = validate_draft_truncation(draft, sp)
+        assert not [f for f in findings if f.severity == "error"], \
+            [f.format() for f in findings]
+    # payloads are shared views, only the mask differs
+    d, f = _bp_leaves(make_draft_params(sp, 2)), _bp_leaves(sp)
+    assert all(a.planes is b.planes and a.scale is b.scale
+               for a, b in zip(d, f))
+
+
+# ------------------------------------------------------------- budget search
+
+def test_full_budget_allocation_is_bit_identical():
+    api, sp = _deployed("phi3-mini-3.8b")
+    full = weight_stream_bytes(sp)
+    alloc = greedy_allocate(sp, sensitivity_tree(sp), full)
+    assert alloc.total_bytes == full
+    assert alloc.steps_taken == alloc.steps_available
+    for a, b in zip(_bp_leaves(sp), _bp_leaves(alloc.params)):
+        np.testing.assert_array_equal(np.asarray(a.planes),
+                                      np.asarray(b.planes))
+        np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+        np.testing.assert_allclose(np.asarray(a.scale), np.asarray(b.scale))
+
+
+def test_allocation_respects_budget_exactly():
+    api, sp = _deployed("phi3-mini-3.8b")
+    full = weight_stream_bytes(sp)
+    for frac in (0.6, 0.8, 0.95):
+        budget = int(full * frac)
+        alloc = greedy_allocate(sp, sensitivity_tree(sp), budget)
+        assert alloc.total_bytes <= budget
+        assert alloc.total_bytes == weight_stream_bytes(alloc.params)
+        assert not validate_allocation(alloc.params, budget)      # AT1
+        assert not [f for f in validate_serving_tree(alloc.params)
+                    if f.severity == "error"]                     # BP1-BP3
+
+
+def test_infeasible_budget_raises():
+    api, sp = _deployed("phi3-mini-3.8b")
+    with pytest.raises(ValueError):
+        greedy_allocate(sp, sensitivity_tree(sp), 16)
+
+
+def test_calibrated_autotune_with_quality_gate():
+    api, sp = _deployed("phi3-mini-3.8b")
+    batch = _batch(api.cfg)
+    act2 = calibrate_activations(api, sp, batch)
+    assert act2 and all(v is not None for v in act2.values())
+    full = weight_stream_bytes(sp)
+    alloc = autotune_params(api, sp, full, batch=batch,
+                            min_top1_agreement=1.0, require_gate=True)
+    # full budget keeps every plane: the gate must report exact agreement
+    assert alloc.gate["ok"] and alloc.gate["top1_agreement"] == 1.0
+    assert alloc.gate["max_abs_logit_diff"] == 0.0
+
+
+@given(st.integers(10, 60), st.integers(8, 48), st.sampled_from([4, 8]),
+       st.integers(0, 2 ** 16), st.floats(0.55, 1.0))
+@settings(**SETTINGS)
+def test_random_geometry_allocations_pass_bp2(k, n, n_bits, seed, frac):
+    """Emitted LUTs satisfy the serving contracts (incl. BP2 prefix
+    monotonicity) for random shapes on the 9x8 weight-block tile."""
+    sp = _toy_tree(k, n, n_bits, seed)
+    full = weight_stream_bytes(sp)
+    alloc = greedy_allocate(sp, sensitivity_tree(sp), int(full * frac))
+    assert alloc.total_bytes <= int(full * frac)
+    assert not [f for f in validate_serving_tree(alloc.params)
+                if f.severity == "error"]
+    assert not validate_allocation(alloc.params, int(full * frac))
+
+
+@given(st.integers(10, 60), st.integers(8, 48), st.integers(0, 2 ** 16),
+       st.floats(0.5, 0.9), st.floats(0.02, 0.3))
+@settings(**SETTINGS)
+def test_larger_budget_never_predicts_higher_error(k, n, seed, frac, bump):
+    sp = _toy_tree(k, n, 8, seed)
+    scores = sensitivity_tree(sp)
+    full = weight_stream_bytes(sp)
+    lo = greedy_allocate(sp, scores, int(full * frac))
+    hi = greedy_allocate(sp, scores, int(full * min(frac + bump, 1.0)))
+    assert hi.predicted_error <= lo.predicted_error + 1e-9
+    assert hi.total_bytes >= lo.total_bytes
+
+
+# ------------------------------------------------------- speculative decode
+
+def test_speculative_generate_token_identical():
+    api, sp = _deployed("phi3-mini-3.8b")
+    batch = _batch(api.cfg)
+    ref = np.asarray(ServeEngine(api, sp, backend="bitplane")
+                     .generate(batch, max_new=10))
+    for k, gamma in ((2, 3), (6, 4)):
+        eng = ServeEngine(api, sp, backend="bitplane",
+                          speculate_planes=k, draft_gamma=gamma)
+        out = np.asarray(eng.generate(batch, max_new=10))
+        np.testing.assert_array_equal(out, ref)
+
+
+def _sched_tokens(engine, cfg, page_size=0):
+    reqs = [Request(uid=i,
+                    inputs={"tokens": jax.random.randint(
+                        jax.random.PRNGKey(10 + i), (1, 5 + i), 0,
+                        cfg.vocab).astype(jnp.int32)},
+                    sampling=SamplingParams(max_new_tokens=9,
+                                            temperature=0.0),
+                    arrival=i * 2)
+            for i in range(3)]
+    sched = engine.make_scheduler(reqs, n_slots=2, page_size=page_size)
+    return {r.uid: r.tokens for r in sched.run(reqs)}, sched
+
+
+def test_speculative_scheduler_paged_parity_and_leak_free():
+    api, sp = _deployed("phi3-mini-3.8b")
+    ref, _ = _sched_tokens(ServeEngine(api, sp, backend="bitplane"),
+                           api.cfg, page_size=8)
+    eng = ServeEngine(api, sp, backend="bitplane", speculate_planes=6,
+                      draft_gamma=3)
+    out, sched = _sched_tokens(eng, api.cfg, page_size=8)
+    assert out == ref
+    assert sched.spec_stats["rounds"] > 0
+    assert sched.spec_stats["drafted"] >= sched.spec_stats["accepted_drafts"]
+    rep = sched.cache_report()
+    assert rep["pages_in_use"] == 0                       # leak-free drain
+    assert sched.allocator.reserved == 0
+    assert np.all(sched.tables == 0)       # every table back on trash page
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "granite-moe-3b-a800m"])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_speculative_parity_matrix(arch, bits):
+    api, sp = _deployed(arch, bits)
+    batch = _batch(api.cfg)
+    ref = np.asarray(ServeEngine(api, sp, backend="bitplane")
+                     .generate(batch, max_new=10))
+    eng = ServeEngine(api, sp, backend="bitplane",
+                      speculate_planes=bits - 1, draft_gamma=4)
+    np.testing.assert_array_equal(
+        np.asarray(eng.generate(batch, max_new=10)), ref)
+    sref, _ = _sched_tokens(ServeEngine(api, sp, backend="bitplane"),
+                            api.cfg)
+    sout, _ = _sched_tokens(eng, api.cfg)
+    assert sout == sref
+
+
+def test_speculative_engine_guards():
+    api, sp = _deployed("phi3-mini-3.8b")
+    with pytest.raises(ValueError):
+        ServeEngine(api, sp, backend="bitplane", speculate_planes=2,
+                    draft_gamma=0)
+    cfg = REGISTRY["zamba2-1.2b"].tiny(dtype="float32").with_quant(
+        QuantConfig(mode="fake", n_bits=8, act_bits=8))
+    hapi = build(cfg)
+    hp = to_serving_params(hapi.init(jax.random.PRNGKey(0)), 8,
+                           layout="bitplane")
+    with pytest.raises(ValueError):
+        ServeEngine(hapi, hp, backend="bitplane", speculate_planes=2)
+    with pytest.raises(ValueError):
+        make_draft_params({"w": jnp.ones((4, 4))}, 2)  # no bitplane leaves
+
+
+# ------------------------------------------------------------ lint severity
+
+def test_lint_engine_errors_on_bitplane_dense_fallback():
+    """Preflight (satellite of this PR): a bitplane engine that would
+    silently dense-fall-back is an ERROR naming each offending leaf,
+    while engine construction itself still only warns."""
+    api, _ = _deployed("phi3-mini-3.8b")
+    packed = to_serving_params(api.init(jax.random.PRNGKey(0)), 8,
+                               layout="packed")
+    with pytest.warns(UserWarning, match="fall back"):
+        eng = ServeEngine(api, packed, backend="bitplane")
+    report = lint_engine(eng, prompt_len=8, n_slots=2, max_new=8)
+    hits = [f for f in report.findings
+            if f.rule == "bitplane-dense-fallback" and f.severity == "error"]
+    assert hits and not report.ok
+    assert any("wq" in f.path for f in hits)
+
+    api2, sp = _deployed("phi3-mini-3.8b")
+    clean = lint_engine(ServeEngine(api2, sp, backend="bitplane"),
+                        prompt_len=8, n_slots=2, max_new=8)
+    assert not [f for f in clean.findings
+                if f.rule == "bitplane-dense-fallback"
+                and f.severity == "error"]
