@@ -27,6 +27,58 @@ CELLS = {
                                              "train")),
 }
 
+# kernels/paged_attention.py tile candidates (KV heads per grid cell) —
+# the genuine autotuning knob the fused decode kernel exposes.  On CPU
+# the sweep times interpret mode (relative only); rerun on a real TPU
+# to pick the deployed default.
+PAGED_ATTN_TILES = [dict(block_kv=1), dict(block_kv=2), dict(block_kv=4)]
+
+
+def run_paged_attn_variant(tag: str, block_kv: int, b: int = 8,
+                           kv: int = 8, g: int = 4, dh: int = 128,
+                           page: int = 64, nb: int = 8):
+    """Time the fused decode kernel at one ``block_kv`` tile setting."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import paged_attention
+
+    n_pages = 1 + b * nb
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    q = jax.random.normal(ks[0], (b, kv, g, dh), jnp.float32)
+    kp = jax.random.randint(ks[1], (n_pages, page, kv, dh),
+                            -127, 128).astype(jnp.int8)
+    vp = jax.random.randint(ks[2], (n_pages, page, kv, dh),
+                            -127, 128).astype(jnp.int8)
+    ksc = jax.random.uniform(ks[3], (n_pages, page, kv), jnp.float32,
+                             0.005, 0.02)
+    vsc = jax.random.uniform(ks[4], (n_pages, page, kv), jnp.float32,
+                             0.005, 0.02)
+    table = jnp.arange(1, 1 + b * nb, dtype=jnp.int32).reshape(b, nb)
+    kv_len = jnp.full((b,), nb * page, jnp.int32)
+
+    def step():
+        return paged_attention(q, kp, vp, ksc, vsc, table, kv_len,
+                               block_kv=block_kv)
+
+    jax.block_until_ready(step())            # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        r = step()
+    jax.block_until_ready(r)
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    rec = dict(variant=tag, block_kv=block_kv, us=round(us, 1),
+               shape=dict(b=b, kv=kv, g=g, dh=dh, page=page, nb=nb),
+               backend=jax.default_backend())
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"paged_attn__{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[paged_attn/{tag}] block_kv={block_kv} {us:.1f} us "
+          f"({jax.default_backend()})", flush=True)
+    return rec
+
 
 def run_variant(cell_key: str, tag: str, cfg_over=None, fsdp=True, **kw):
     from repro.dist import sharding as sh
@@ -55,9 +107,18 @@ def run_variant(cell_key: str, tag: str, cfg_over=None, fsdp=True, **kw):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True, choices=list(CELLS) + ["all"])
+    ap.add_argument("--cell", required=True,
+                    choices=list(CELLS) + ["paged_attn", "all"])
     ap.add_argument("--variant", default="all")
     args = ap.parse_args()
+
+    if args.cell == "paged_attn":
+        for cand in PAGED_ATTN_TILES:
+            tag = f"block_kv{cand['block_kv']}"
+            if args.variant not in ("all", tag):
+                continue
+            run_paged_attn_variant(tag, **cand)
+        return
 
     plans = {
         # (tag, cfg overrides, fsdp, lower_cell kwargs)

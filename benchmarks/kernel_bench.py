@@ -67,6 +67,15 @@ def layout_bytes(k: int = 1024, n: int = 1024, pruned_frac: float = 0.5
     return rows
 
 
+def _t(f, *a):
+    f(*a)  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        r = f(*a)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / 3 * 1e6
+
+
 def kernel_timings(m: int = 64, k: int = 512, n: int = 512) -> List[Dict]:
     from repro.models.common import qmatmul
     w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.05
@@ -78,14 +87,7 @@ def kernel_timings(m: int = 64, k: int = 512, n: int = 512) -> List[Dict]:
     bp8 = to_serving_params({"w": _mixed_qt(k, n)}, 8,
                             layout="bitplane")["w"]
 
-    def t(f, *a):
-        f(*a)  # compile
-        t0 = time.perf_counter()
-        for _ in range(3):
-            r = f(*a)
-        jax.block_until_ready(r)
-        return (time.perf_counter() - t0) / 3 * 1e6
-
+    t = _t
     return [
         dict(kernel="bitplane_matmul(interp)", us=round(t(
             lambda: bwq_dense_bitplane(x, bl)), 1)),
@@ -100,6 +102,59 @@ def kernel_timings(m: int = 64, k: int = 512, n: int = 512) -> List[Dict]:
     ]
 
 
+def paged_attention_timings(b: int = 4, kv: int = 4, g: int = 2,
+                            dh: int = 64, page: int = 16,
+                            nb: int = 8) -> List[Dict]:
+    """Decode attention over an int8 page pool: fused kernel (interpret)
+    vs the gather composite it replaces vs the jnp oracle."""
+    import jax.numpy as jnp
+
+    from repro.kernels import paged_attention
+    from repro.kernels.ref import paged_attention_ref
+    from repro.models.attention import (attention_core, dequantize_kv,
+                                        paged_gather)
+
+    n_pages = 1 + b * nb
+    t_len = nb * page
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, kv, g, dh), jnp.float32)
+    kp = jax.random.randint(ks[1], (n_pages, page, kv, dh),
+                            -127, 128).astype(jnp.int8)
+    vp = jax.random.randint(ks[2], (n_pages, page, kv, dh),
+                            -127, 128).astype(jnp.int8)
+    ksc = jax.random.uniform(ks[3], (n_pages, page, kv), jnp.float32,
+                             0.005, 0.02)
+    vsc = jax.random.uniform(ks[4], (n_pages, page, kv), jnp.float32,
+                             0.005, 0.02)
+    table = jax.numpy.arange(1, 1 + b * nb,
+                             dtype=jnp.int32).reshape(b, nb)
+    kv_len = jnp.full((b,), t_len, jnp.int32)
+
+    @jax.jit
+    def gather_composite():
+        k = dequantize_kv(paged_gather(kp, table),
+                          paged_gather(ksc, table), jnp.float32)
+        v = dequantize_kv(paged_gather(vp, table),
+                          paged_gather(vsc, table), jnp.float32)
+        q_core = q.reshape(b, 1, kv * g, dh)
+        q_pos = jnp.full((b, 1), t_len - 1, jnp.int32)
+        kv_pos = jnp.broadcast_to(jnp.arange(t_len)[None, :], (b, t_len))
+        return attention_core(q_core, k, v, q_pos, kv_pos,
+                              kv_len=kv_len)
+
+    return [
+        dict(kernel="paged_attention_fused(interp)", us=round(_t(
+            lambda: paged_attention(q, kp, vp, ksc, vsc, table,
+                                    kv_len)), 1)),
+        dict(kernel="paged_attention_gather", us=round(_t(
+            gather_composite), 1)),
+        dict(kernel="paged_attention_ref", us=round(_t(
+            jax.jit(lambda: paged_attention_ref(q, kp, vp, ksc, vsc,
+                                                table, kv_len))), 1)),
+    ]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -109,9 +164,12 @@ def main() -> None:
     if args.quick:
         layouts = layout_bytes(k=256, n=256)
         timings = kernel_timings(m=16, k=256, n=256)
+        timings += paged_attention_timings(b=2, kv=2, g=2, dh=32,
+                                           page=8, nb=4)
     else:
         layouts = layout_bytes()
         timings = kernel_timings()
+        timings += paged_attention_timings()
     result = {"layout_bytes": layouts, "kernel_timings": timings,
               "note": "interpret-mode wall-clock is not TPU time; "
                       "bytes_per_weight is the roofline column"}

@@ -82,6 +82,7 @@ def lint_engine(engine, prompt_len: int = 16, n_slots: int = 4,
     cfg = engine.api.cfg
     report = LintReport(context={
         "arch": cfg.name, "family": cfg.family, "backend": engine.backend,
+        "attn_backend": engine.attn_backend,
         "kv_quant_bits": engine.kv_quant_bits,
         "page_size": engine.page_size,
         "prefill_chunk": engine.prefill_chunk,
@@ -115,7 +116,8 @@ def lint_engine(engine, prompt_len: int = 16, n_slots: int = 4,
     extra = _roundup64(max_new)
     report.extend(lint_traced_fn(
         lambda p, b: engine.api.prefill(p, b, extra_slots=extra),
-        (engine.params, batch), fn_name="prefill", backend=engine.backend))
+        (engine.params, batch), fn_name="prefill", backend=engine.backend,
+        attn_backend=engine.attn_backend))
 
     page_size = 0 if cfg.family == "ssm" else engine.page_size
     max_len = prompt_len + \
@@ -137,7 +139,8 @@ def lint_engine(engine, prompt_len: int = 16, n_slots: int = 4,
         index = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
         report.extend(lint_traced_fn(
             engine.api.decode_step, (engine.params, tokens, state, index),
-            fn_name="decode", backend=engine.backend))
+            fn_name="decode", backend=engine.backend,
+            attn_backend=engine.attn_backend))
         if engine.prefill_chunk > 0 and cfg.family not in ("ssm", "hybrid"):
             cb = {"tokens": jax.ShapeDtypeStruct(
                 (1, engine.prefill_chunk), jnp.int32)}
@@ -145,7 +148,8 @@ def lint_engine(engine, prompt_len: int = 16, n_slots: int = 4,
             report.extend(lint_traced_fn(
                 engine.api.prefill_chunk_at,
                 (engine.params, cb, state, scalar, scalar),
-                fn_name="chunk", backend=engine.backend))
+                fn_name="chunk", backend=engine.backend,
+                attn_backend=engine.attn_backend))
         report.extend(check_decode_donation(engine, tokens, state, index))
 
     # -- compile footprint -------------------------------------------------

@@ -30,6 +30,15 @@ Rules (cross-referenced by the contract appendix in ``kernels/ops.py``):
   reserved trash page; a non-zero page owned by two slots is flagged
   (no refcounted sharing yet — see ROADMAP prefix caching).
 * ``PC3``  quantized pools carry their per-token scale leaves.
+* ``PA1``  fused-kernel pool layout: ``k``/``v`` agree on dtype and full
+  shape; scale leaves match the payload's (stack, n_pages, page, KV)
+  prefix; an int4 (uint8) pool's packed head dim unpacks to an even
+  head dim (nibble pairs along dh).
+* ``PA2``  pool capacity: >= 2 pages (the reserved trash page 0 plus at
+  least one allocatable page) and >= 1 table block per slot.
+* ``PA3``  concrete block tables: each slot's live (non-zero) pages form
+  a contiguous prefix of its row — the kernel walks blocks 0..nb-1 and
+  relies on the fill level masking only the trash-page *tail*.
 * ``AT1``  an autotuned assignment respects its byte budget exactly per
   ``weight_stream_bytes`` (:func:`validate_allocation`).
 * ``AT2``  a speculative draft tree is a pure top-k mask-truncation view
@@ -308,6 +317,41 @@ def _walk_paged(cache, path, findings: List[Finding],
         if quantized and not any(k.endswith("_scale") for k in pages):
             c.err("PC3", "quantized page pool is missing its per-token "
                          "scale leaves", "['pages']")
+        # -- PA*: fused-kernel page-table invariants ------------------
+        if "k" in pages and "v" in pages:
+            kl, vl = pages["k"], pages["v"]
+            if _dtype(kl) != _dtype(vl) or _shape(kl) != _shape(vl):
+                c.err("PA1", f"k/v pool leaves disagree: "
+                             f"{_dtype(kl)}{_shape(kl)} vs "
+                             f"{_dtype(vl)}{_shape(vl)} (the fused kernel "
+                             f"dequantizes both with one code path)",
+                      "['pages']")
+            if _dtype(kl) not in ("int8", "uint8", "float32"):
+                c.err("PA1", f"pool payload dtype {_dtype(kl)} is not a "
+                             f"storage format the fused kernel dequantizes "
+                             f"(int8, uint8 nibble pairs, or float32)",
+                      "['pages']['k']")
+            for name in ("k_scale", "v_scale"):
+                if name not in pages:
+                    continue
+                want = _shape(pages[name[0]])[:4]
+                if _shape(pages[name]) != want:
+                    c.err("PA1", f"scale leaf shape {_shape(pages[name])} "
+                                 f"!= payload (stack, n_pages, page, KV) "
+                                 f"prefix {want}",
+                          f"['pages']['{name}']")
+                if _dtype(pages[name]) not in _FLOATS:
+                    c.err("PA1", f"per-token scale must be float32, got "
+                                 f"{_dtype(pages[name])}",
+                          f"['pages']['{name}']")
+        if n_pages < 2:
+            c.err("PA2", f"page pool holds {n_pages} page(s); needs the "
+                         f"reserved trash page 0 plus at least one "
+                         f"allocatable page", "['pages']")
+        if tshape[2] < 1:
+            c.err("PA2", f"block table has {tshape[2]} blocks per slot; "
+                         f"the fused kernel's grid needs nb >= 1",
+                  "['table']")
         tval = _concrete(table)
         if tval is not None:
             bad = (tval < 0) | (tval >= n_pages)
@@ -324,6 +368,16 @@ def _walk_paged(cache, path, findings: List[Finding],
                 c.warn("PC2", f"non-zero pages owned by multiple slots "
                               f"(no refcounting yet): "
                               f"{[int(p) for p in shared[:8]]}", "['table']")
+            # PA3: live pages must be a contiguous per-row prefix — the
+            # fused kernel walks blocks 0..nb-1 and only the *tail* may
+            # point at the trash page (masked by the fill level)
+            occ = tval[0] != 0                    # (n_slots, nb)
+            holes = (~occ[:, :-1]) & occ[:, 1:]
+            if holes.any():
+                rows = sorted(set(int(r) for r in np.where(holes)[0]))[:8]
+                c.err("PA3", f"slot rows {rows} have live pages after a "
+                             f"trash-page hole; live blocks must be a "
+                             f"contiguous prefix of the row", "['table']")
         return
     for key, sub in cache.items():
         _walk_paged(sub, f"{path}['{key}']", findings, n_slots)

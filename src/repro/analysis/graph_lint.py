@@ -24,6 +24,27 @@ input (``w_int`` / ``planes`` / ``sign``):
   decode step (``lower(...).args_info``): without donation every decode
   tick double-buffers the whole KV cache.
 
+The same taint machinery audits the *KV cache* read side against the
+decode-attention backend (``models.attention.paged_attn_backend``):
+
+* ``kv-dequant-materialization`` — a float tensor with a cache leaf's
+  full (T, KV, dh) footprint derives from a quantized (int8/int4) KV
+  payload outside any kernel.  Error when the fused kernel was requested
+  for decode (``attn_backend='fused'`` + ``fn_name='decode'`` — the
+  gather fallback silently ran instead); info (sanctioned) under
+  ``gather``/``ref`` and for prefill, where the gather read side is the
+  design.
+* ``kv-full-width-gather`` — a ``gather`` materializes the contiguous
+  (B, nb, page, ...) view of a paged pool leaf (quantized or float):
+  the O(max_len) ``paged_gather`` the fused kernel exists to delete.
+  Same severity policy.
+* ``kv-clean`` — fused decode saw KV payloads and materialized neither
+  (the footprint census ``benchmarks/decode_bench.py`` asserts on).
+
+Contiguous *float* caches are excluded as taint sources — their in-place
+cache write is unavoidably a full-width float op — so only reads that
+the fused kernel actually eliminates can fire.
+
 Taint dies at ``pallas_call`` (the sanctioned kernel boundary — in-kernel
 dequant is the design) and at ``dot_general``/convs (a matmul output is
 an activation, not a weight), so residual-stream activations can never
@@ -277,16 +298,170 @@ class _Walk:
                             f"{self.backend!r}")
 
 
-def lint_traced_fn(fn, args: tuple, *, fn_name: str, backend: str
-                   ) -> List[Finding]:
-    """Trace ``fn(*args)`` under ``backend`` and lint the jaxpr.
+# ---------------------------------------------------------------------------
+# KV-cache read-side lint (decode-attention backend)
+# ---------------------------------------------------------------------------
+
+_KV_FIELDS = ("k", "v")
+# the decode-step scatter/slice writes preserve a cache leaf's identity
+# (operand 0 in, same-shape buffer out) — the read side must still see
+# the written pool as *the* payload for the full-width-gather rule
+_KV_PASSTHROUGH = _PASSTHROUGH | {"scatter", "dynamic_update_slice"}
+
+
+@dataclasses.dataclass(frozen=True)
+class KVLeaf:
+    """One KV cache leaf's identity + the footprints that betray a
+    full-width read outside the fused kernel."""
+    path: str
+    bits: int                 # 8 / 4 (quantized-at-rest) or 32 (float)
+    paged: bool
+    kv: int                   # KV heads
+    dh: int                   # dequantized head dim (2x stored for int4)
+    tail3: tuple              # stored trailing dims (page|T, KV, dh_s)
+
+
+def _path_keys(path) -> List[Optional[str]]:
+    return [getattr(e, "key", getattr(e, "name", None)) for e in path]
+
+
+def _kv_payload_invars(jaxpr, args: tuple) -> Dict:
+    """Map jaxpr invars to the KVLeaf they carry (cache ``k``/``v``).
+
+    Contiguous float caches are skipped: their in-place write is an
+    unavoidable full-width float op, so they cannot be lint sources."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(args)
+    invars = jaxpr.jaxpr.invars
+    if len(flat) != len(invars):
+        return {}
+    payload = {}
+    for (path, leaf), var in zip(flat, invars):
+        keys = _path_keys(path)
+        if not keys or keys[-1] not in _KV_FIELDS or "cache" not in keys:
+            continue
+        shape = tuple(getattr(leaf, "shape", ()))
+        if len(shape) < 3:
+            continue                             # recurrent state rows
+        dt = jnp.dtype(leaf.dtype)
+        bits = {jnp.dtype(jnp.int8): 8, jnp.dtype(jnp.uint8): 4}.get(dt, 32)
+        paged = "pages" in keys
+        if bits == 32 and (not paged
+                           or not jnp.issubdtype(dt, jnp.floating)):
+            continue
+        dh = shape[-1] * 2 if bits == 4 else shape[-1]
+        payload[var] = KVLeaf(path=jax.tree_util.keystr(path), bits=bits,
+                              paged=paged, kv=shape[-2], dh=dh,
+                              tail3=shape[-3:])
+    return payload
+
+
+class _KVWalk:
+    """Taint walk over the KV-cache read side (severity keyed on the
+    decode-attention backend, not the matmul backend)."""
+
+    def __init__(self, fn_name: str, attn_backend: str):
+        self.fn = fn_name
+        self.attn = attn_backend
+        self.findings: List[Finding] = []
+        self._seen: Set[tuple] = set()
+
+    def _emit(self, leaf: KVLeaf, rule: str, sanctioned: str,
+              message: str) -> None:
+        if self.attn == "fused" and self.fn == "decode":
+            severity = "error"          # fused requested, fallback ran
+        else:
+            severity, rule = "info", sanctioned
+        key = (rule, leaf.path)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.append(Finding(
+            severity=severity, pass_name="graph", rule=rule,
+            path=f"{self.fn}:{leaf.path}", message=message))
+
+    def walk(self, jaxpr, payload: Dict, taint: Dict) -> None:
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            in_payload = [payload[v] for v in eqn.invars
+                          if _is_var(v) and v in payload]
+            in_taint: Set[KVLeaf] = set()
+            for v in eqn.invars:
+                if _is_var(v):
+                    in_taint |= taint.get(v, set())
+            subs = _sub_jaxprs(eqn)
+            if subs:
+                for jx, inmap, outmap in subs:
+                    sub_p = {sv: payload[ov] for sv, ov in inmap
+                             if _is_var(ov) and ov in payload}
+                    sub_t = {sv: set(taint.get(ov, set()))
+                             for sv, ov in inmap if _is_var(ov)}
+                    self.walk(jx, sub_p, sub_t)
+                    for sv, ov in outmap:
+                        if _is_var(sv) and _is_var(ov):
+                            got = set(sub_t.get(sv, set()))
+                            if got:
+                                taint.setdefault(ov, set()).update(got)
+                continue
+            if name == "gather":
+                for v in eqn.invars:
+                    if not (_is_var(v) and v in payload
+                            and payload[v].paged):
+                        continue
+                    leaf = payload[v]
+                    for ov in eqn.outvars:
+                        osh = tuple(ov.aval.shape)
+                        if (len(osh) == len(v.aval.shape) + 1
+                                and osh[-3:] == tuple(leaf.tail3)):
+                            self._emit(
+                                leaf, "kv-full-width-gather",
+                                "sanctioned-kv-gather",
+                                f"gather materializes the contiguous "
+                                f"{osh} view of the paged KV pool "
+                                f"(O(max_len) per decode step) under "
+                                f"attn_backend={self.attn!r}")
+            if name in _SINKS:
+                continue                 # pallas_call: in-kernel dequant
+            if in_payload and name in _KV_PASSTHROUGH:
+                src = eqn.invars[0]      # operand 0 carries the identity
+                if _is_var(src) and src in payload:
+                    for ov in eqn.outvars:
+                        payload[ov] = payload[src]
+            quant_in = {l for l in in_payload if l.bits < 32}
+            if not (in_taint or quant_in):
+                continue
+            out_taint = in_taint | quant_in
+            for ov in eqn.outvars:
+                taint.setdefault(ov, set()).update(out_taint)
+                if not _float_out(ov):
+                    continue
+                osh = tuple(getattr(ov.aval, "shape", ()))
+                if len(osh) < 3:
+                    continue
+                for leaf in out_taint:
+                    if osh[-2:] == (leaf.kv, leaf.dh) \
+                            and osh[-3] >= leaf.tail3[0]:
+                        self._emit(
+                            leaf, "kv-dequant-materialization",
+                            "sanctioned-kv-dequant",
+                            f"float {ov.aval.dtype} tensor {osh} "
+                            f"materializes the int{leaf.bits} KV cache "
+                            f"leaf's full (T, KV, dh) tree outside any "
+                            f"kernel (eqn {name!r}) under attn_backend="
+                            f"{self.attn!r}")
+
+
+def lint_traced_fn(fn, args: tuple, *, fn_name: str, backend: str,
+                   attn_backend: str = "gather") -> List[Finding]:
+    """Trace ``fn(*args)`` under ``backend``/``attn_backend`` and lint
+    the jaxpr (weight materialization + KV-cache read side).
 
     ``args`` may mix concrete arrays, ShapeDtypeStructs and deployed
     dataclasses; the trace is abstract (no compile, no execute)."""
+    from ..models.attention import paged_attn_backend
     from ..models.common import matmul_backend
 
     def wrapped(*a):
-        with matmul_backend(backend):
+        with matmul_backend(backend), paged_attn_backend(attn_backend):
             return fn(*a)
 
     findings: List[Finding] = []
@@ -310,16 +485,32 @@ def lint_traced_fn(fn, args: tuple, *, fn_name: str, backend: str
             path=fn_name,
             message="no deployed packed leaves reach this function; "
                     "materialization lint is vacuous"))
-        return findings
-    w = _Walk(fn_name, backend)
-    w.walk(jaxpr.jaxpr, dict(payload), {v: set() for v in payload})
-    if not w.findings:
-        findings.append(Finding(
-            severity="info", pass_name="graph", rule="clean",
-            path=fn_name,
-            message=f"{len(payload)} packed payload inputs; no in-graph "
-                    f"materialization under backend={backend!r}"))
-    return findings + w.findings
+    else:
+        w = _Walk(fn_name, backend)
+        w.walk(jaxpr.jaxpr, dict(payload), {v: set() for v in payload})
+        if not w.findings:
+            findings.append(Finding(
+                severity="info", pass_name="graph", rule="clean",
+                path=fn_name,
+                message=f"{len(payload)} packed payload inputs; no "
+                        f"in-graph materialization under backend="
+                        f"{backend!r}"))
+        findings += w.findings
+    kv_payload = _kv_payload_invars(jaxpr, args)
+    if kv_payload:
+        kw = _KVWalk(fn_name, attn_backend)
+        kw.walk(jaxpr.jaxpr, dict(kv_payload),
+                {v: set() for v in kv_payload})
+        if not kw.findings and attn_backend == "fused" \
+                and fn_name == "decode":
+            findings.append(Finding(
+                severity="info", pass_name="graph", rule="kv-clean",
+                path=fn_name,
+                message=f"{len(kv_payload)} KV cache payload inputs; "
+                        f"fused decode materializes neither the "
+                        f"contiguous KV view nor the f32 KV tree"))
+        findings += kw.findings
+    return findings
 
 
 # ---------------------------------------------------------------------------

@@ -64,6 +64,13 @@ lint"):
   (stack, n_slots, nb) with every id inside the pool (``PC2`` flags
   orphaned ids and un-refcounted page sharing), and quantized pools
   carry their per-token scale leaves.
+* ``PA1``-``PA3`` — fused paged-attention invariants: k/v pools agree
+  on dtype/shape and carry float32 scales matching the payload's
+  (stack, n_pages, page, KV) prefix (``PA1``); the pool holds the
+  reserved trash page 0 plus >= 1 allocatable page and >= 1 block per
+  slot row (``PA2``); a slot's live pages are a contiguous prefix of
+  its table row — the kernel walks blocks in order and the fill level
+  masks only the trash tail (``PA3``).
 * ``AT1`` — an autotuned assignment respects its byte budget exactly:
   ``weight_stream_bytes(tree) <= budget`` under the same occupancy
   accounting the allocator optimized against (no double bookkeeping).

@@ -1,0 +1,186 @@
+"""Pallas TPU kernel: fused paged decode attention over a quantized page
+pool (the serving hot path).
+
+The gather fallback in ``models.attention`` pays O(max_len) per decode
+step twice: ``paged_gather`` materializes a contiguous (B, T, ...) int
+view of every slot's pages, then ``dequantize_kv`` materializes the f32
+K/V tree — before a single score is computed.  This kernel walks each
+slot's block table *inside the grid* instead: scalar-prefetched table
+entries drive the page index maps, so exactly one pool page per grid
+step lands in VMEM, is dequantized there (int8 / nibble-packed int4 with
+per-token scales), and feeds the flash-attention running (max, denom,
+acc) accumulation.  Neither the contiguous KV view nor the f32 KV tree
+ever exists; HBM traffic per step is the *quantized* bytes of the pages
+a slot actually fills.
+
+Grid: (B, KV // block_kv, nb).  The last axis iterates a slot's blocks
+in order, revisiting the output block with running rescaling; positions
+at or past the slot's fill level are masked, which is also what keeps
+the reserved trash page (page 0 — where unallocated table entries point)
+inert.  GQA queries arrive pre-grouped as (B, KV, G, dh).  ``block_kv``
+(KV heads per grid cell) is the kernel's tile parameter — see
+``benchmarks/hillclimb.py`` for the real-TPU sweep.
+
+``interpret=None`` auto-selects interpret mode off-TPU (pallas_utils),
+so CPU tests and CI exercise the same program.  Compiled TPU use wants a
+lane-aligned head dim; the wrapper never pads the pool leaves (a pad
+would be the per-step O(pool) copy this kernel exists to delete).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .pallas_utils import fit_block, resolve_interpret
+
+NEG_INF = -2.0e38
+
+
+def _dequant(raw, scale_ref, bits: int):
+    """(page, bkv, dh_s) stored page -> (page, bkv, dh) f32, in VMEM."""
+    if bits == 4:
+        lo = (raw & 0xF).astype(jnp.int32)
+        hi = ((raw >> 4) & 0xF).astype(jnp.int32)
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        # pack_int4 puts even head positions in the low nibble: interleave
+        x = jnp.stack([lo, hi], axis=-1).reshape(*raw.shape[:-1],
+                                                 raw.shape[-1] * 2)
+        x = x.astype(jnp.float32)
+    else:
+        x = raw.astype(jnp.float32)
+    if scale_ref is not None:
+        x = x * scale_ref[0].astype(jnp.float32)[..., None]
+    return x
+
+
+def _decode_kernel(table_ref, len_ref, win_ref,      # scalar prefetch
+                   q_ref, *rest, bits: int, page: int, softcap: float):
+    quantized = bits < 32
+    if quantized:
+        k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        k_ref, v_ref, o_ref, m_ref, l_ref = rest
+        ks_ref = vs_ref = None
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bkv, g, dh)
+    k = _dequant(k_ref[0], ks_ref, bits)             # (page, bkv, dh)
+    dh = q.shape[-1]
+    # batched over the kv-head tile: (bkv, g, dh) x (page, bkv, dh)
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)          # (bkv, g, page)
+    s = s * (1.0 / math.sqrt(dh))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    ln = len_ref[b]
+    valid = pos < ln                                 # per-slot fill level
+    w = win_ref[0]
+    valid &= jnp.where(w > 0, pos >= ln - w, True)   # sliding window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]          # (bkv, g)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])                # (bkv, g, page)
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    v = _dequant(v_ref[0], vs_ref, bits)             # (page, bkv, dh)
+    pv = jax.lax.dot_general(
+        p, v, dimension_numbers=(((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)          # (bkv, g, dh)
+    o_ref[0] = o_ref[0] * corr[..., None] + pv
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_kv",
+                                             "interpret"))
+def paged_attention(q, k_pages, v_pages, k_scale, v_scale, table, kv_len,
+                    *, window=None, softcap: float = 0.0,
+                    block_kv: int = 1, interpret: bool | None = None):
+    """Decode attention straight over a (quantized) page pool.
+
+    q:        (B, KV, G, dh) grouped queries (one decode token per slot).
+    k/v:      (P, page, KV, dh) int8 or f32, or (P, page, KV, dh//2)
+              uint8 nibble pairs (``core.quantize.pack_int4`` layout).
+    k/v_scale: (P, page, KV) f32 per-token/head scales (None when f32).
+    table:    (B, nb) int32 block table; page 0 is the reserved trash
+              page, live blocks are a contiguous per-row prefix (PA2).
+    kv_len:   (B,) int32 fill levels; position ``kv_len - 1`` is the
+              decode token itself, so causality == the fill mask.
+    window:   optional ()-shaped int (or Python int): > 0 restricts
+              attention to the last ``window`` positions.
+
+    Returns (B, KV, G, dh) f32.  ``block_kv`` tiles KV heads per grid
+    cell (largest divisor of KV <= block_kv is used).
+    """
+    interpret = resolve_interpret(interpret)
+    b, kv, g, dh = q.shape
+    p_pages, page = k_pages.shape[0], k_pages.shape[1]
+    nb = table.shape[1]
+    bits = {jnp.dtype(jnp.int8): 8, jnp.dtype(jnp.uint8): 4}.get(
+        jnp.dtype(k_pages.dtype), 32)
+    dh_s = k_pages.shape[-1]
+    if bits == 4 and dh_s * 2 != dh:
+        raise ValueError(f"int4 pool head dim {dh_s}*2 != query dh {dh}")
+    if bits != 4 and dh_s != dh:
+        raise ValueError(f"pool head dim {dh_s} != query dh {dh}")
+    quantized = bits < 32
+
+    q = q.astype(jnp.float32)
+    table = jnp.asarray(table, jnp.int32)
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(b)
+    win = jnp.asarray(0 if window is None else window,
+                      jnp.int32).reshape(1)
+    block_kv = fit_block(min(block_kv, kv), kv, 1)
+    grid = (b, kv // block_kv, nb)
+
+    def at_qo(bi, hi, ji, tab, ln, wn):
+        return (bi, hi, 0, 0)
+
+    def at_page(bi, hi, ji, tab, ln, wn):
+        return (tab[bi, ji], 0, hi, 0)
+
+    def at_scale(bi, hi, ji, tab, ln, wn):
+        return (tab[bi, ji], 0, hi)
+
+    q_spec = pl.BlockSpec((1, block_kv, g, dh), at_qo)
+    kv_spec = pl.BlockSpec((1, page, block_kv, dh_s), at_page)
+    sc_spec = pl.BlockSpec((1, page, block_kv), at_scale)
+    in_specs = [q_spec, kv_spec] + ([sc_spec] if quantized else []) \
+        + [kv_spec] + ([sc_spec] if quantized else [])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, block_kv, g, dh), at_qo),
+        scratch_shapes=[pltpu.VMEM((block_kv, g), jnp.float32),
+                        pltpu.VMEM((block_kv, g), jnp.float32)])
+    kern = functools.partial(_decode_kernel, bits=bits, page=page,
+                             softcap=float(softcap))
+    operands = (table, kv_len, win, q, k_pages) \
+        + ((k_scale,) if quantized else ()) + (v_pages,) \
+        + ((v_scale,) if quantized else ())
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), jnp.float32),
+        interpret=interpret)(*operands)

@@ -97,6 +97,59 @@ def packed_matmul_ref(x, w_int, scale, bits: int = 8,
     return (x.astype(jnp.float32) @ (w * s)).astype(out_dtype)
 
 
+def _unpack_nibbles(u: jnp.ndarray) -> jnp.ndarray:
+    """(..., dh//2) uint8 nibble pairs -> (..., dh) int32 in [-8, 7]
+    (``core.quantize.pack_int4`` layout: even positions in the low
+    nibble)."""
+    lo = (u & 0xF).astype(jnp.int32)
+    hi = ((u >> 4) & 0xF).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    return jnp.stack([lo, hi], axis=-1).reshape(*u.shape[:-1],
+                                                u.shape[-1] * 2)
+
+
+def paged_attention_ref(q, k_pages, v_pages, k_scale, v_scale, table,
+                        kv_len, *, window=None,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """Gather-then-softmax oracle for ``kernels.paged_attention``.
+
+    Same contract as the kernel (q (B, KV, G, dh); pool leaves
+    (P, page, KV, dh|dh//2); per-token scales or None; (B, nb) table;
+    (B,) fill levels) — but it materializes the contiguous (B, T, ...)
+    view and the f32 KV tree the kernel exists to avoid, so it is the
+    allclose target, never the hot path."""
+    b, kv, g, dh = q.shape
+    neg_inf = -2.0e38
+
+    def gather(leaf):
+        x = jnp.take(leaf, table, axis=0)
+        return x.reshape(b, -1, *leaf.shape[2:])     # (B, nb*page, ...)
+
+    k, v = gather(k_pages), gather(v_pages)
+    if k.dtype == jnp.uint8:                         # nibble-packed int4
+        k, v = _unpack_nibbles(k), _unpack_nibbles(v)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * gather(k_scale)[..., None]
+        v = v.astype(jnp.float32) * gather(v_scale)[..., None]
+    else:
+        k, v = k.astype(jnp.float32), v.astype(jnp.float32)
+    t = k.shape[1]
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32), k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(float(dh))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(t, dtype=jnp.int32)[None, :]
+    ln = jnp.asarray(kv_len, jnp.int32)[:, None]
+    valid = pos < ln
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        valid &= jnp.where(w > 0, pos >= ln - w, True)
+    s = jnp.where(valid[:, None, None, :], s, neg_inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", p, v)
+
+
 def pact_quant_ref(x, beta, act_bits: int) -> jnp.ndarray:
     """Symmetric PACT clip + uniform quantization (forward only)."""
     levels = float(2 ** (act_bits - 1) - 1)

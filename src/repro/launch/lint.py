@@ -27,7 +27,8 @@ def build_engine(arch: str, backend: str, deploy_bits: int = 0,
                  layout: str = "", kv_bits: int = 32, page_size: int = 0,
                  prefill_chunk: int = 0, tiny: bool = True,
                  autotune_budget_bytes: int = 0,
-                 speculate_planes: int = 0) -> ServeEngine:
+                 speculate_planes: int = 0,
+                 attn_backend: str = "gather") -> ServeEngine:
     """The serving stack exactly as ``launch.serve`` assembles it.
 
     ``autotune_budget_bytes`` runs the (weight-only) greedy budget search
@@ -49,7 +50,8 @@ def build_engine(arch: str, backend: str, deploy_bits: int = 0,
         params = greedy_allocate(params, sensitivity_tree(params),
                                  autotune_budget_bytes).params
     return ServeEngine(api, params, kv_quant_bits=kv_bits, backend=backend,
-                       page_size=page_size, prefill_chunk=prefill_chunk,
+                       attn_backend=attn_backend, page_size=page_size,
+                       prefill_chunk=prefill_chunk,
                        speculate_planes=speculate_planes)
 
 
@@ -67,6 +69,10 @@ def main(argv=None) -> int:
                     choices=["", "packed", "bitplane"],
                     help="serving wire format (default: backend's native)")
     ap.add_argument("--kv-bits", type=int, default=32, choices=[4, 8, 32])
+    ap.add_argument("--attn-backend", default="gather",
+                    choices=["gather", "fused", "ref"],
+                    help="decode-attention read side (fused = Pallas "
+                         "paged-attention kernel)")
     ap.add_argument("--page-size", type=int, default=0)
     ap.add_argument("--prefill-chunk", type=int, default=0)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -96,7 +102,8 @@ def main(argv=None) -> int:
                           args.layout, args.kv_bits, args.page_size,
                           args.prefill_chunk, args.tiny,
                           autotune_budget_bytes=args.autotune_budget_bytes,
-                          speculate_planes=args.speculate_planes)
+                          speculate_planes=args.speculate_planes,
+                          attn_backend=args.attn_backend)
     mesh = None
     if args.production_mesh:
         mesh = ShapeOnlyMesh(production_mesh_shape(args.multi_pod))

@@ -48,6 +48,12 @@ def main():
                     help="matmul execution backend for deployed weights "
                          "(non-dense implies --deploy-bits 8 unless set; "
                          "bitplane deploys the plane-sliced layout)")
+    ap.add_argument("--attn-backend", default="gather",
+                    choices=["gather", "fused", "ref"],
+                    help="decode-attention read side: gather materializes "
+                         "the contiguous KV view per step; fused runs the "
+                         "Pallas paged-attention kernel over the stored "
+                         "(quantized) cache; ref is its jnp oracle")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -113,7 +119,8 @@ def main():
               f"increments kept); gate {alloc.gate}")
 
     eng = ServeEngine(api, params, kv_quant_bits=args.kv_bits,
-                      backend=args.backend, page_size=args.page_size,
+                      backend=args.backend, attn_backend=args.attn_backend,
+                      page_size=args.page_size,
                       n_pages=args.n_pages or None,
                       prefill_chunk=args.prefill_chunk,
                       speculate_planes=args.speculate_planes,

@@ -3,6 +3,7 @@ and a KV-cache decode path.  Pure functions over plain arrays; sharding is
 annotated with logical axes (heads on the 'model' mesh axis)."""
 from __future__ import annotations
 
+import contextlib
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -10,6 +11,9 @@ import jax.numpy as jnp
 
 from ..core.quantize import pack_int4, unpack_int4
 from ..dist.sharding import constraint
+from ..kernels.paged_attention import paged_attention
+from ..kernels.pallas_utils import fit_block
+from ..kernels.ref import paged_attention_ref
 from .common import qmatmul
 from .common import softcap as _softcap
 from .rope import apply_rope, mrope_angles, rope_angles
@@ -136,6 +140,76 @@ def paged_gather(pool_leaf, table):
     per-slot view (T = nb * page), token order preserved."""
     g = jnp.take(pool_leaf, table, axis=0)
     return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+# ---------------------------------------------------------------------------
+# decode-attention dispatch (mirrors models.common.matmul_backend)
+# ---------------------------------------------------------------------------
+#
+# ``gather`` is the legacy read side above (paged_gather / _cache_write +
+# in-graph dequant + attention_core); ``fused`` walks the block table
+# inside the Pallas kernel so neither the contiguous (B, T, ...) KV view
+# nor the f32 KV tree is ever materialized; ``ref`` is the kernel's
+# pure-jnp oracle.  Both non-gather backends are decode-only (one query
+# token, causal self-attention) — every other shape falls back to gather
+# in-trace, which the graph lint flags under a fused engine.
+
+PAGED_ATTN_BACKENDS = ("gather", "fused", "ref")
+_PA_BACKEND_STACK = ["gather"]
+
+
+@contextlib.contextmanager
+def paged_attn_backend(name: str):
+    """Ambient decode-attention backend for :func:`paged_attn`
+    (trace-time, like :func:`repro.models.common.matmul_backend`)."""
+    if name not in PAGED_ATTN_BACKENDS:
+        raise ValueError(f"unknown paged-attention backend {name!r}; "
+                         f"choose from {PAGED_ATTN_BACKENDS}")
+    _PA_BACKEND_STACK.append(name)
+    try:
+        yield
+    finally:
+        _PA_BACKEND_STACK.pop()
+
+
+def current_paged_attn_backend() -> str:
+    return _PA_BACKEND_STACK[-1]
+
+
+def paged_attn(q, store: Dict, table, kv_len, *, window=0,
+               attn_softcap: float = 0.0,
+               backend: Optional[str] = None) -> jnp.ndarray:
+    """One decode step of attention straight over a (quantized) page pool.
+
+    q: (B, 1, H, dh) roped queries; ``store``: pool leaves
+    ``{"k", "v"[, "k_scale", "v_scale"]}`` (P, page, KV, ...);
+    ``table``: (B, nb); ``kv_len``: (B,) fill levels *including* the
+    token just written.  Returns (B, 1, H, dh) in q's dtype.  The
+    contiguous cache is served through the same entry by viewing each
+    slot's (T, ...) row as pages (see ``attn_forward``)."""
+    backend = backend or current_paged_attn_backend()
+    b, s, h, dh = q.shape
+    kv = store["k"].shape[2]
+    qg = q.reshape(b, kv, h // kv, dh)
+    win = None if isinstance(window, int) and window == 0 else \
+        jnp.asarray(window, jnp.int32)
+    args = (qg, store["k"], store["v"], store.get("k_scale"),
+            store.get("v_scale"), table, kv_len)
+    if backend == "fused":
+        out = paged_attention(*args, window=win, softcap=attn_softcap)
+    elif backend == "ref":
+        out = paged_attention_ref(*args, window=win, softcap=attn_softcap)
+    else:
+        raise ValueError(f"paged_attn executes 'fused' or 'ref', "
+                         f"got {backend!r}")
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def _as_pool(leaf, page: int):
+    """(B, T, ...) contiguous cache leaf -> (B*(T//page), page, ...) pool
+    view (a free row-major reshape — paging as a *view*, not a copy)."""
+    b, t = leaf.shape[0], leaf.shape[1]
+    return leaf.reshape(b * (t // page), page, *leaf.shape[2:])
 
 
 def _mask_for(q_pos, kv_pos, causal, window, kv_len):
@@ -299,10 +373,17 @@ def attn_forward(p: Dict, x: jnp.ndarray, positions: jnp.ndarray, *,
 
     new_cache = None
     kv_len = None
+    out = None
     if cache is not None:
         idx = cache_index  # (): shared fill level, or (B,): per-slot levels
         kq, vq = k, v
         bits = cache_bits(cache)
+        # fused / ref decode attention reads the cache *in its stored
+        # representation* (one query token, causal self-attention only);
+        # every other shape keeps the gather read side below.
+        pa = current_paged_attn_backend()
+        decode_only = (pa != "gather" and x.shape[1] == 1
+                       and x_kv is None and causal)
         if bits < 32:
             # quantized-at-rest cache (int8 / packed int4 with per-token/
             # head dynamic scales): each written position is rounded exactly
@@ -327,15 +408,22 @@ def attn_forward(p: Dict, x: jnp.ndarray, positions: jnp.ndarray, *,
                     k_scale=store["k_scale"].at[pids, offs].set(ks_sc),
                     v_scale=store["v_scale"].at[pids, offs].set(vs_sc))
             new_cache = dict(cache, pages=new_store)
-            ck = paged_gather(new_store["k"], table)
-            cv = paged_gather(new_store["v"], table)
-            if bits < 32:
-                k = dequantize_kv(ck, paged_gather(new_store["k_scale"],
-                                                   table), q.dtype)
-                v = dequantize_kv(cv, paged_gather(new_store["v_scale"],
-                                                   table), q.dtype)
+            if decode_only:
+                kv_len = jnp.broadcast_to(
+                    jnp.asarray(idx, jnp.int32) + 1, (x.shape[0],))
+                out = paged_attn(q, new_store, table, kv_len,
+                                 window=window, attn_softcap=attn_softcap,
+                                 backend=pa)
             else:
-                k, v = ck, cv
+                ck = paged_gather(new_store["k"], table)
+                cv = paged_gather(new_store["v"], table)
+                if bits < 32:
+                    k = dequantize_kv(ck, paged_gather(new_store["k_scale"],
+                                                       table), q.dtype)
+                    v = dequantize_kv(cv, paged_gather(new_store["v_scale"],
+                                                       table), q.dtype)
+                else:
+                    k, v = ck, cv
         else:
             if bits < 32:
                 cks = _cache_write(cache["k_scale"], ks_sc, idx)
@@ -345,17 +433,39 @@ def attn_forward(p: Dict, x: jnp.ndarray, positions: jnp.ndarray, *,
             new_cache = dict(cache, k=ck, v=cv)
             if bits < 32:
                 new_cache.update(k_scale=cks, v_scale=cvs)
+            if decode_only:
+                # serve the contiguous cache through the same kernel by
+                # viewing each slot's (T, ...) row as T//page pages with
+                # an identity block table (free reshape, no trash page)
+                t = ck.shape[1]
+                page = fit_block(min(128, t), t, 1)
+                pool = {"k": _as_pool(ck, page), "v": _as_pool(cv, page)}
+                if bits < 32:
+                    pool.update(k_scale=_as_pool(cks, page),
+                                v_scale=_as_pool(cvs, page))
+                ident = jnp.arange(
+                    x.shape[0] * (t // page),
+                    dtype=jnp.int32).reshape(x.shape[0], t // page)
+                kv_len = jnp.broadcast_to(
+                    jnp.asarray(idx, jnp.int32) + 1, (x.shape[0],))
+                out = paged_attn(q, pool, ident, kv_len, window=window,
+                                 attn_softcap=attn_softcap, backend=pa)
+            elif bits < 32:
                 k = dequantize_kv(ck, cks, q.dtype)
                 v = dequantize_kv(cv, cvs, q.dtype)
             else:
                 k, v = ck, cv
-        t = ck.shape[1]
-        kv_pos = jnp.broadcast_to(jnp.arange(t)[None, :], (x.shape[0], t))
-        kv_len = jnp.broadcast_to(jnp.asarray(idx) + x.shape[1],
-                                  (x.shape[0],))
+        if out is None:
+            t = ck.shape[1]
+            kv_pos = jnp.broadcast_to(jnp.arange(t)[None, :],
+                                      (x.shape[0], t))
+            kv_len = jnp.broadcast_to(jnp.asarray(idx) + x.shape[1],
+                                      (x.shape[0],))
 
-    out = attention_core(q, k, v, q_pos, kv_pos, causal=causal and x_kv is None,
-                         window=window, attn_softcap=attn_softcap,
-                         kv_len=kv_len)
+    if out is None:
+        out = attention_core(q, k, v, q_pos, kv_pos,
+                             causal=causal and x_kv is None,
+                             window=window, attn_softcap=attn_softcap,
+                             kv_len=kv_len)
     out = out.reshape(*x.shape[:-1], n_heads * d_head)
     return qmatmul(out, p["wo"]), new_cache

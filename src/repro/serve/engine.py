@@ -27,6 +27,16 @@ trace-time ``models.common.matmul_backend`` context around every jitted
 entry point, so the whole serving program is built for one backend and
 A/B comparisons (benchmarks/serve_bench.py --backend) are apples-to-apples.
 
+``attn_backend`` does the same for the decode-attention read side:
+``gather`` re-materializes each slot's contiguous KV view and
+dequantizes in-graph (legacy); ``fused`` runs the Pallas paged-attention
+kernel over the stored (quantized) cache — block-table walk and KV
+dequant happen inside the kernel, so the decode program never holds a
+full-width or f32 KV tensor (graph_lint's kv-* census pins this);
+``ref`` is that kernel's jnp oracle.  Applied as a trace-time
+``models.attention.paged_attn_backend`` context alongside the matmul
+backend.
+
 Two call surfaces:
   * ``generate(batch, max_new)`` — one-shot static-batch decoding (legacy).
   * ``serve(requests)`` — request-level continuous batching through
@@ -56,6 +66,7 @@ warnings.filterwarnings(
 from ..dist.sharding import (batch_pspecs, cache_pspecs, get_mesh,
                              param_pspecs, use_mesh)
 from ..models.api import ModelAPI
+from ..models.attention import PAGED_ATTN_BACKENDS, paged_attn_backend
 from ..models.common import MATMUL_BACKENDS, matmul_backend
 from .sampling import SamplingParams, sample_token
 
@@ -71,6 +82,7 @@ class ServeEngine:
     params: Any
     kv_quant_bits: int = 32       # 8 / 4 select the quantized-at-rest cache
     backend: str = "dense"        # 'dense' | 'pallas' | 'ref' matmul exec
+    attn_backend: str = "gather"  # 'gather' | 'fused' | 'ref' decode attn
     page_size: int = 0            # >0: paged KV cache (tokens per page)
     n_pages: Optional[int] = None  # page-pool capacity (None = worst case)
     prefill_chunk: int = 0        # >0: insert prompts in chunks this wide
@@ -84,6 +96,10 @@ class ServeEngine:
         if self.backend not in MATMUL_BACKENDS:
             raise ValueError(f"backend must be one of {MATMUL_BACKENDS}, "
                              f"got {self.backend!r}")
+        if self.attn_backend not in PAGED_ATTN_BACKENDS:
+            raise ValueError(
+                f"attn_backend must be one of {PAGED_ATTN_BACKENDS}, "
+                f"got {self.attn_backend!r}")
         if self.backend != "dense" and not self._has_packed_weights():
             hint = ", layout='bitplane'" if self.backend == "bitplane" else ""
             warnings.warn(
@@ -172,14 +188,15 @@ class ServeEngine:
                        is_leaf=lambda x: isinstance(x, deployed)))
 
     def _jit(self, fn, **jit_kwargs):
-        """jit ``fn`` with the engine's matmul backend active at trace
-        time — the backend is part of the traced program, and each engine
-        owns its jit cache, so traces never leak across backends."""
-        backend = self.backend
+        """jit ``fn`` with the engine's matmul + decode-attention backends
+        active at trace time — both are part of the traced program, and
+        each engine owns its jit cache, so traces never leak across
+        backends."""
+        backend, attn = self.backend, self.attn_backend
 
         @functools.wraps(fn)
         def run(*args, **kwargs):
-            with matmul_backend(backend):
+            with matmul_backend(backend), paged_attn_backend(attn):
                 return fn(*args, **kwargs)
         return jax.jit(run, **jit_kwargs)
 

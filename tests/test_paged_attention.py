@@ -1,0 +1,266 @@
+"""Fused paged-attention decode kernel: unit, oracle, lint, and parity.
+
+* ``page_coords`` / ``paged_gather`` edge cases — clamp-into-last-block
+  past the table end, trash-page (page 0) routing, (B,) vs scalar fill
+  levels — previously covered only indirectly through serving parity;
+* kernel vs ``paged_attention_ref`` allclose across kv-bits, GQA ratios,
+  ragged fill levels, sliding windows, softcap, and ``block_kv`` tiles;
+* graph-lint footprint census: the fused decode jaxpr holds neither a
+  full-width KV gather nor an f32 KV materialization (``kv-clean``), and
+  a forced gather fallback under a fused engine is an ERROR;
+* decode token parity: greedy decodes are bit-identical across
+  ``attn_backend`` in {gather, fused, ref}, contiguous and paged, at
+  kv_bits in {8, 4} (phi3 fast tier; granite-moe in the slow tier).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ref import paged_attention_ref
+from repro.models.api import build
+from repro.models.attention import (PAGED_ATTN_BACKENDS, page_coords,
+                                    paged_attn_backend, paged_gather,
+                                    quantize_kv)
+from repro.models.common import QuantConfig
+from repro.serve import Request, SamplingParams, ServeEngine
+
+
+# ---------------------------------------------------------------------------
+# page_coords / paged_gather edge cases
+# ---------------------------------------------------------------------------
+
+def test_page_coords_basic_mapping():
+    table = jnp.asarray([[3, 1], [2, 5]], jnp.int32)     # (B=2, nb=2)
+    pids, offs = page_coords(table, jnp.asarray([0, 5]), seq=2, page=4)
+    # slot 0 writes positions 0,1 -> block 0 (page 3), offsets 0,1
+    assert pids[0].tolist() == [3, 3] and offs[0].tolist() == [0, 1]
+    # slot 1 writes positions 5,6 -> block 1 (page 5), offsets 1,2
+    assert pids[1].tolist() == [5, 5] and offs[1].tolist() == [1, 2]
+
+
+def test_page_coords_past_table_end_is_inert():
+    table = jnp.asarray([[7, 9]], jnp.int32)             # nb=2, page=4: T=8
+    pids, offs = page_coords(table, 7, seq=2, page=4)
+    # position 7 is the last real slot and lands in the last block;
+    # position 8 is past the table end — callers only ever send masked
+    # scratch writes there, so its page id must never alias a live page
+    # other than the clamp target (scatter drops out-of-range ids)
+    assert int(pids[0, 0]) == 9 and offs[0].tolist() == [3, 0]
+    tail = int(pids[0, 1])
+    assert tail == 9 or not (0 <= tail <= 8)
+    # the write path stays inert: scattering through these coords must not
+    # touch any page other than the last block (out-of-range ids drop)
+    pool = jnp.zeros((10, 4), jnp.float32)
+    wrote = pool.at[pids[0], offs[0]].set(1.0)
+    assert float(wrote[:9].sum()) == 0.0
+
+
+def test_page_coords_scalar_vs_vector_fill_levels():
+    table = jnp.asarray([[4, 2], [6, 8]], jnp.int32)
+    ps, os_ = page_coords(table, 3, seq=2, page=4)
+    pv, ov = page_coords(table, jnp.asarray([3, 3]), seq=2, page=4)
+    np.testing.assert_array_equal(np.asarray(ps), np.asarray(pv))
+    np.testing.assert_array_equal(np.asarray(os_), np.asarray(ov))
+
+
+def test_page_coords_trash_page_for_unallocated_blocks():
+    # a parked slot's table is all zeros: every write routes to page 0
+    table = jnp.zeros((1, 3), jnp.int32)
+    pids, _ = page_coords(table, 5, seq=3, page=4)
+    assert pids.tolist() == [[0, 0, 0]]
+
+
+def test_paged_gather_layout_and_trash_masking():
+    pool = jnp.arange(5 * 2 * 3, dtype=jnp.float32).reshape(5, 2, 3)
+    table = jnp.asarray([[2, 0], [4, 1]], jnp.int32)
+    out = paged_gather(pool, table)                      # (B, nb*page, 3)
+    assert out.shape == (2, 4, 3)
+    np.testing.assert_array_equal(np.asarray(out[0, :2]),
+                                  np.asarray(pool[2]))
+    np.testing.assert_array_equal(np.asarray(out[0, 2:]),
+                                  np.asarray(pool[0]))  # trash page content
+    np.testing.assert_array_equal(np.asarray(out[1, 2:]),
+                                  np.asarray(pool[1]))
+
+
+# ---------------------------------------------------------------------------
+# kernel vs reference oracle
+# ---------------------------------------------------------------------------
+
+def _pool_case(key, b, kv, g, dh, page, nb, bits):
+    """Random page pool + table + ragged fill levels for one case."""
+    n_pages = 1 + b * nb
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, kv, g, dh), jnp.float32)
+    kf = jax.random.normal(ks[1], (n_pages, page, kv, dh), jnp.float32)
+    vf = jax.random.normal(ks[2], (n_pages, page, kv, dh), jnp.float32)
+    if bits < 32:
+        kq, ksc = quantize_kv(kf, bits)
+        vq, vsc = quantize_kv(vf, bits)
+    else:
+        kq, vq, ksc, vsc = kf, vf, None, None
+    table = jnp.arange(1, 1 + b * nb, dtype=jnp.int32).reshape(b, nb)
+    kv_len = (jax.random.randint(jax.random.fold_in(key, 9), (b,), 1,
+                                 nb * page + 1).astype(jnp.int32))
+    return q, kq, vq, ksc, vsc, table, kv_len
+
+
+@pytest.mark.parametrize("bits,g,window,softcap,block_kv", [
+    (8, 1, None, 0.0, 1),
+    (8, 4, None, 0.0, 2),          # GQA grouping + kv-head tiling
+    (4, 2, None, 0.0, 1),          # nibble-packed int4 in-kernel unpack
+    (32, 2, None, 0.0, 1),         # float pool (paged, unquantized)
+    (8, 2, 5, 30.0, 1),            # sliding window + softcap
+])
+def test_kernel_matches_ref(bits, g, window, softcap, block_kv):
+    b, kv, dh, page, nb = 2, 4, 16, 4, 3
+    case = _pool_case(jax.random.PRNGKey(bits * 7 + g), b, kv, g, dh,
+                      page, nb, bits)
+    got = paged_attention(*case, window=window, softcap=softcap,
+                          block_kv=block_kv)
+    want = paged_attention_ref(*case, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_kernel_trash_page_stays_inert():
+    """Blocks past a slot's fill level point at real-but-stale pages or
+    the trash page; both must be masked identically."""
+    b, kv, g, dh, page, nb = 1, 2, 2, 8, 4, 3
+    case = _pool_case(jax.random.PRNGKey(0), b, kv, g, dh, page, nb, 8)
+    q, kq, vq, ksc, vsc, table, _ = case
+    kv_len = jnp.asarray([page], jnp.int32)      # only block 0 is live
+    trash_table = table.at[0, 1:].set(0)         # blocks 1.. -> trash page
+    a = paged_attention(q, kq, vq, ksc, vsc, table, kv_len)
+    t = paged_attention(q, kq, vq, ksc, vsc, trash_table, kv_len)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(t), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# footprint census (graph lint)
+# ---------------------------------------------------------------------------
+
+def _census_engine(kv_bits=8):
+    cfg = REGISTRY["phi3-mini-3.8b"].tiny(dtype="float32").with_quant(
+        QuantConfig(mode="fake", n_bits=8, act_bits=8))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return ServeEngine(api, params, kv_quant_bits=kv_bits,
+                       attn_backend="fused", page_size=4)
+
+
+def _decode_args(eng, n_slots=2, max_len=24, page_size=4):
+    batch = {"tokens": jax.ShapeDtypeStruct((1, 8), jnp.int32)}
+    state = jax.eval_shape(
+        lambda p, b: eng.api.init_decode_state(p, b, n_slots, max_len,
+                                               page_size=page_size),
+        eng.params, batch)
+    tokens = jax.ShapeDtypeStruct((n_slots, 1), jnp.int32)
+    index = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    return eng.params, tokens, state, index
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_fused_decode_jaxpr_is_kv_clean(kv_bits):
+    from repro.analysis.graph_lint import lint_traced_fn
+    eng = _census_engine(kv_bits)
+    findings = lint_traced_fn(eng.api.decode_step, _decode_args(eng),
+                              fn_name="decode", backend="dense",
+                              attn_backend="fused")
+    assert not [f for f in findings if f.severity == "error"], \
+        [f.format() for f in findings]
+    assert any(f.rule == "kv-clean" for f in findings)
+
+
+def test_gather_fallback_under_fused_is_error():
+    from repro.analysis.graph_lint import lint_traced_fn
+    eng = _census_engine(8)
+
+    def gather_decode(p, t, s, i):
+        with paged_attn_backend("gather"):       # the silent fallback
+            return eng.api.decode_step(p, t, s, i)
+
+    findings = lint_traced_fn(gather_decode, _decode_args(eng),
+                              fn_name="decode", backend="dense",
+                              attn_backend="fused")
+    errs = {f.rule for f in findings if f.severity == "error"}
+    assert {"kv-full-width-gather", "kv-dequant-materialization"} <= errs
+
+
+def test_gather_backend_is_sanctioned():
+    from repro.analysis.graph_lint import lint_traced_fn
+    eng = _census_engine(8)
+    findings = lint_traced_fn(eng.api.decode_step, _decode_args(eng),
+                              fn_name="decode", backend="dense",
+                              attn_backend="gather")
+    assert not [f for f in findings if f.severity == "error"]
+    assert any(f.rule.startswith("sanctioned-kv") for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# PA* contracts
+# ---------------------------------------------------------------------------
+
+def test_pa_contracts_flag_bad_pools():
+    from repro.analysis.contracts import validate_decode_state
+    pool = {"k": jnp.zeros((1, 4, 2, 2, 8), jnp.int8),
+            "v": jnp.zeros((1, 4, 2, 2, 8), jnp.int8),
+            "k_scale": jnp.zeros((1, 4, 2, 2), jnp.float32),
+            "v_scale": jnp.zeros((1, 4, 2, 2), jnp.float32)}
+    table = jnp.zeros((1, 3, 2), jnp.int32)
+    good = {"cache": {"layer": {"pages": pool, "table": table}}}
+    assert not [f for f in validate_decode_state(good, n_slots=3)
+                if f.severity == "error"]
+    # PA1: k/v dtype disagreement
+    bad = {"cache": {"layer": {
+        "pages": dict(pool, v=pool["v"].astype(jnp.uint8)),
+        "table": table}}}
+    assert any(f.rule == "PA1" for f in validate_decode_state(bad)
+               if f.severity == "error")
+    # PA2: pool with only the trash page
+    bad = {"cache": {"layer": {
+        "pages": {k: v[:, :1] for k, v in pool.items()}, "table": table}}}
+    assert any(f.rule == "PA2" for f in validate_decode_state(bad)
+               if f.severity == "error")
+    # PA3: live page after a trash-page hole
+    holey = table.at[0, 0, 1].set(2)          # row [0, 2]: hole at block 0
+    bad = {"cache": {"layer": {"pages": pool, "table": holey}}}
+    assert any(f.rule == "PA3" for f in validate_decode_state(bad)
+               if f.severity == "error")
+
+
+# ---------------------------------------------------------------------------
+# decode token parity across attn backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,kv_bits", [
+    ("phi3-mini-3.8b", 8),
+    ("phi3-mini-3.8b", 4),
+    pytest.param("granite-moe-3b-a800m", 8, marks=pytest.mark.slow),
+    pytest.param("granite-moe-3b-a800m", 4, marks=pytest.mark.slow),
+])
+def test_decode_token_parity_across_attn_backends(arch, kv_bits):
+    cfg = REGISTRY[arch].tiny(dtype="float32").with_quant(
+        QuantConfig(mode="fake", n_bits=8, act_bits=8))
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(3), (2, 8), 0, cfg.vocab).astype(jnp.int32)}
+    outs = {}
+    for ab in PAGED_ATTN_BACKENDS:
+        eng = ServeEngine(api, params, kv_quant_bits=kv_bits,
+                          attn_backend=ab)
+        outs[ab] = np.asarray(eng.generate(batch, max_new=6))
+        reqs = [Request(uid=i,
+                        inputs={"tokens": batch["tokens"][i:i + 1]},
+                        sampling=SamplingParams(max_new_tokens=5),
+                        arrival=i)
+                for i in range(2)]
+        res = eng.serve(reqs, n_slots=2, page_size=4)
+        outs[ab + "_paged"] = [r.tokens for r in res]
+    for ab in ("fused", "ref"):
+        np.testing.assert_array_equal(outs[ab], outs["gather"])
+        assert outs[ab + "_paged"] == outs["gather_paged"]

@@ -252,3 +252,56 @@ def test_bitplane_composes_identical_to_packed(case):
     want = np.minimum(np.asarray(fq.bitwidth), bits)
     np.testing.assert_array_equal(live, want)
     assert bitplane_stream_bytes(bp) > 0
+
+
+# ---------------------------------------------------------------------------
+# fused paged-attention kernel vs jnp oracle (randomized shapes)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def paged_attn_case(draw):
+    b = draw(st.integers(1, 3))
+    kv = draw(st.sampled_from([1, 2, 4]))
+    g = draw(st.sampled_from([1, 2, 4]))
+    dh = draw(st.sampled_from([8, 16, 32]))
+    page = draw(st.sampled_from([2, 4, 8]))
+    nb = draw(st.integers(1, 4))
+    bits = draw(st.sampled_from([8, 4, 32]))
+    window = draw(st.sampled_from([None, 3, 7]))
+    block_kv = draw(st.sampled_from([1, 2]))
+    seed = draw(st.integers(0, 2 ** 16))
+    return b, kv, g, dh, page, nb, bits, window, block_kv, seed
+
+
+@given(paged_attn_case())
+@settings(max_examples=10, deadline=None)
+def test_paged_attention_kernel_matches_ref(case):
+    """Fused Pallas decode kernel (in-kernel dequant, block-table walk)
+    == jnp gather+softmax oracle for random pools, ragged per-slot fill
+    levels, GQA ratios, kv-bits, windows, and block_kv tiles."""
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.ref import paged_attention_ref
+    from repro.models.attention import quantize_kv
+
+    b, kv, g, dh, page, nb, bits, window, block_kv, seed = case
+    if block_kv > kv or kv % block_kv:
+        block_kv = 1
+    n_pages = 1 + b * nb
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, kv, g, dh), jnp.float32)
+    kf = jax.random.normal(ks[1], (n_pages, page, kv, dh), jnp.float32)
+    vf = jax.random.normal(ks[2], (n_pages, page, kv, dh), jnp.float32)
+    if bits < 32:
+        kq, ksc = quantize_kv(kf, bits)
+        vq, vsc = quantize_kv(vf, bits)
+    else:
+        kq, vq, ksc, vsc = kf, vf, None, None
+    table = jnp.arange(1, 1 + b * nb, dtype=jnp.int32).reshape(b, nb)
+    kv_len = jax.random.randint(ks[3], (b,), 1,
+                                nb * page + 1).astype(jnp.int32)
+    got = paged_attention(q, kq, vq, ksc, vsc, table, kv_len,
+                          window=window, block_kv=block_kv)
+    want = paged_attention_ref(q, kq, vq, ksc, vsc, table, kv_len,
+                               window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
