@@ -24,6 +24,12 @@ fixed-width slots — and reports resident cache bytes (peak pages in use x
 per-page footprint vs the ``n_slots * max_len`` rows a fixed layout keeps
 alive) plus a parity check that both produced identical tokens.
 
+The ``prefix_sharing`` row serves a hot shared system prompt to 16
+concurrent requests twice — refcounted content-addressed prefix caching
+vs the plain per-slot paged pool — reporting the prefix-hit rate,
+preemption count, and the peak-resident-bytes drop from holding the
+shared prompt pages exactly once (tokens must match the baseline run).
+
     PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--out f.json]
         [--backend pallas] [--deploy-bits 8] [--page-size 8]
 """
@@ -181,6 +187,78 @@ def bench_paged_utilization(api, params, n_requests: int, kv_bits: int = 8,
     }
 
 
+def bench_prefix_sharing(api, params, n_requests: int = 16,
+                         page_size: int = 4, kv_bits: int = 8,
+                         shared_tokens: int = 16, unique_tokens: int = 2,
+                         max_new: int = 24, backend: str = "dense") -> dict:
+    """A hot shared system prompt across ``n_requests`` concurrent
+    requests: refcounted prefix caching vs the per-slot paged baseline.
+
+    Every request carries the same ``shared_tokens``-token prefix plus a
+    short unique tail; arrivals are staggered one tick apart so the first
+    request's registered prompt pages are visible to every later
+    admission.  With ``prefix_cache`` the pool holds the shared prefix
+    pages exactly ONCE (refcounted); the baseline re-prefills and stores
+    them per slot — the peak-resident-bytes gap is the headline, and both
+    runs must emit identical tokens."""
+    cfg = api.cfg
+    shared = jax.random.randint(jax.random.PRNGKey(7), (1, shared_tokens),
+                                0, cfg.vocab).astype(jnp.int32)
+
+    def reqs():
+        out = []
+        for i in range(n_requests):
+            tail = jax.random.randint(jax.random.PRNGKey(300 + i),
+                                      (1, unique_tokens), 0,
+                                      cfg.vocab).astype(jnp.int32)
+            out.append(Request(
+                uid=i, inputs={"tokens": jnp.concatenate([shared, tail], 1)},
+                sampling=SamplingParams(max_new_tokens=max_new),
+                arrival=i))
+        return out
+
+    eng = ServeEngine(api, params, kv_quant_bits=kv_bits, backend=backend)
+    base = eng.make_scheduler(reqs(), n_slots=n_requests,
+                              page_size=page_size, prefix_cache=False)
+    res_b = base.run(reqs())
+    rep_b = base.cache_report()
+    cached = eng.make_scheduler(reqs(), n_slots=n_requests,
+                                page_size=page_size,
+                                n_pages=base.allocator.n_pages,
+                                prefix_cache=True)
+    res_c = cached.run(reqs())
+    rep_c = cached.cache_report()
+    prefix_blocks = shared_tokens // page_size
+    return {
+        "benchmark": "prefix_sharing",
+        "batch": n_requests,
+        "kv_bits": kv_bits,
+        "page_size": page_size,
+        "shared_prefix_tokens": shared_tokens,
+        "prefix_hit_rate": round(
+            rep_c["prefix_hits"] / max(rep_c["prefix_lookups"], 1), 4),
+        "prefix_hits": rep_c["prefix_hits"],
+        "prefix_pages_registered": rep_c["prefix_pages_registered"],
+        "preemptions": rep_c["preemptions"],
+        "page_bytes": rep_c["page_bytes"],
+        "peak_pages_cached": rep_c["peak_pages_in_use"],
+        "peak_pages_baseline": rep_b["peak_pages_in_use"],
+        "cached_bytes_in_use_peak": rep_c["bytes_in_use_peak"],
+        "baseline_bytes_in_use_peak": rep_b["bytes_in_use_peak"],
+        "resident_bytes_vs_baseline": round(
+            rep_c["bytes_in_use_peak"] / max(rep_b["bytes_in_use_peak"], 1),
+            4),
+        # the shared prefix is resident exactly once: the cached run's
+        # peak drops by (n_requests - 1) aliased copies of its pages
+        "prefix_pages_held_once": bool(
+            rep_c["prefix_pages_registered"] == prefix_blocks
+            and rep_b["peak_pages_in_use"] - rep_c["peak_pages_in_use"]
+            >= (n_requests - 1) * prefix_blocks),
+        "tokens_match_baseline": all(a.tokens == b.tokens
+                                     for a, b in zip(res_c, res_b)),
+    }
+
+
 def bench_speculative(api, params, ks, gamma: int = 4, n_requests: int = 4,
                       max_new: int = 16, backend: str = "bitplane") -> list:
     """Self-speculative decoding: acceptance rate and drafted-vs-verified
@@ -308,6 +386,19 @@ def main():
         summary["paged_cache_utilization"] = \
             util["cache_utilization_vs_fixed"]
         summary["paged_tokens_match_fixed"] = util["tokens_match_fixed"]
+        # hot shared system prompt at batch >= 16: refcounted prefix pages
+        # held once vs the per-slot paged baseline
+        share = bench_prefix_sharing(api, params, n_requests=16,
+                                     page_size=min(args.page_size, 4),
+                                     max_new=20 if args.quick else 24,
+                                     backend=args.backend)
+        rows.append(share)
+        print(json.dumps(share), flush=True)
+        summary["prefix_hit_rate"] = share["prefix_hit_rate"]
+        summary["prefix_resident_bytes_vs_baseline"] = \
+            share["resident_bytes_vs_baseline"]
+        summary["prefix_pages_held_once"] = share["prefix_pages_held_once"]
+        summary["prefix_tokens_match"] = share["tokens_match_baseline"]
     if args.speculate:
         if args.backend != "bitplane":
             raise SystemExit("--speculate requires --backend bitplane")

@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from .contracts import (validate_allocation, validate_decode_state,
-                        validate_draft_truncation, validate_serving_tree)
+                        validate_draft_truncation, validate_scheduler,
+                        validate_serving_tree)
 from .footprint import (CompileSig, chunk_widths, footprint_findings,
                         generate_signatures, scheduler_footprint,
                         serve_signatures)
@@ -45,7 +46,8 @@ __all__ = [
     "generate_signatures", "lint_engine", "lint_sharding",
     "lint_traced_fn", "production_mesh_shape", "scheduler_footprint",
     "serve_signatures", "validate_allocation", "validate_decode_state",
-    "validate_draft_truncation", "validate_serving_tree",
+    "validate_draft_truncation", "validate_scheduler",
+    "validate_serving_tree",
 ]
 
 
@@ -151,6 +153,39 @@ def lint_engine(engine, prompt_len: int = 16, n_slots: int = 4,
                 fn_name="chunk", backend=engine.backend,
                 attn_backend=engine.attn_backend))
         report.extend(check_decode_donation(engine, tokens, state, index))
+
+    # -- scheduler ledger (PX1-PX3) ----------------------------------------
+    # Build a real Scheduler (host-side ledgers only — no device state) and
+    # stage a synthetic admission: one slot owning pages with one page
+    # registered in the refcounted prefix cache.  validate_scheduler must
+    # come back clean, proving the allocator / cache / block-table
+    # accounting closes before any workload runs.
+    if page_size:
+        import numpy as np
+        from ..serve.sampling import Request as _Req
+        from ..serve.sampling import SamplingParams as _SP
+        from ..serve.scheduler import Scheduler, _Slot
+        shareable = cfg.family in ("dense", "moe")
+        sched = Scheduler(engine, n_slots=n_slots, max_len=max_len,
+                          page_size=page_size, n_pages=engine.n_pages,
+                          overcommit=2.0, prefix_cache=shareable)
+        req = _Req(uid=0,
+                   inputs={"tokens": np.zeros((1, page_size + 1), np.int32)},
+                   sampling=_SP(max_new_tokens=4, priority=1))
+        owned = sched.allocator.alloc(2)
+        slot = _Slot(req=req, index=page_size + 1, last_tok=0, generated=[],
+                     admitted_tick=0, pages=list(owned), reserve_left=0)
+        if sched.prefix_cache is not None:
+            sched.prefix_cache.register(b"lint-smoke", slot.pages.pop(0))
+            slot.shared_pages.append(owned[0])
+            slot.prefix_hashes.append(b"lint-smoke")
+        sched.slots[0] = slot
+        sched.tables[0, :slot.n_blocks] = slot.block_pages
+        report.extend(validate_scheduler(sched))
+        report.add("info", "contracts", "PX-smoke", "scheduler",
+                   f"ledger smoke ran: {len(owned)} pages, prefix cache "
+                   f"{'on' if sched.prefix_cache is not None else 'off'}, "
+                   f"overcommit {sched.overcommit}")
 
     # -- compile footprint -------------------------------------------------
     sigs = serve_signatures(

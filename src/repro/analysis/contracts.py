@@ -28,7 +28,8 @@ Rules (cross-referenced by the contract appendix in ``kernels/ops.py``):
   leading dims; ``table`` is integer (stack, n_slots, nb).
 * ``PC2``  block tables: every entry in [0, n_pages); page 0 is the
   reserved trash page; a non-zero page owned by two slots is flagged
-  (no refcounted sharing yet — see ROADMAP prefix caching).
+  unless a refcount ledger (the scheduler's ``PrefixCache``) accounts
+  for the sharing.
 * ``PC3``  quantized pools carry their per-token scale leaves.
 * ``PA1``  fused-kernel pool layout: ``k``/``v`` agree on dtype and full
   shape; scale leaves match the payload's (stack, n_pages, page, KV)
@@ -39,6 +40,20 @@ Rules (cross-referenced by the contract appendix in ``kernels/ops.py``):
 * ``PA3``  concrete block tables: each slot's live (non-zero) pages form
   a contiguous prefix of its row — the kernel walks blocks 0..nb-1 and
   relies on the fill level masking only the trash-page *tail*.
+* ``PX1``  refcount consistency (:func:`validate_scheduler`): every
+  prefix-cache refcount equals the number of live slots aliasing that
+  page, every slot-shared page is registered, and the allocator's
+  ``in_use`` equals the distinct pages owned by live slots + the cache
+  (so parked snapshots hold NO pool pages and the pool drains to zero).
+* ``PX2``  no write to a shared page: each slot's write frontier
+  (``index``) sits at or past the end of its shared-prefix region —
+  shared pages are read-only by construction (the hashed region stops
+  at least one token before the first writable position), and
+  copy-on-write is the enforcement backstop.
+* ``PX3``  parked-slot table hygiene: a free or parked slot's block
+  table row is all trash-page zeros, and a live slot's row mirrors its
+  book-kept (shared + owned) pages exactly — a parked request's pages
+  live only in its host snapshot, never in the device tables.
 * ``AT1``  an autotuned assignment respects its byte budget exactly per
   ``weight_stream_bytes`` (:func:`validate_allocation`).
 * ``AT2``  a speculative draft tree is a pure top-k mask-truncation view
@@ -275,7 +290,8 @@ def validate_serving_tree(params: Any) -> List[Finding]:
 # ---------------------------------------------------------------------------
 
 def _walk_paged(cache, path, findings: List[Finding],
-                n_slots: Optional[int]) -> None:
+                n_slots: Optional[int],
+                refcounts: Optional[dict] = None) -> None:
     if not isinstance(cache, dict):
         return
     if "table" in cache:
@@ -364,10 +380,13 @@ def _walk_paged(cache, path, findings: List[Finding],
             live = tval[0][tval[0] != 0]          # stack dim 0 is broadcast
             uniq, counts = np.unique(live, return_counts=True)
             shared = uniq[counts > 1]
-            if shared.size:
+            ledger = refcounts or {}
+            unbooked = [int(p) for p in shared if int(p) not in ledger]
+            if unbooked:
                 c.warn("PC2", f"non-zero pages owned by multiple slots "
-                              f"(no refcounting yet): "
-                              f"{[int(p) for p in shared[:8]]}", "['table']")
+                              f"with no refcount ledger entry (enable "
+                              f"prefix_cache for safe sharing): "
+                              f"{unbooked[:8]}", "['table']")
             # PA3: live pages must be a contiguous per-row prefix — the
             # fused kernel walks blocks 0..nb-1 and only the *tail* may
             # point at the trash page (masked by the fill level)
@@ -380,25 +399,101 @@ def _walk_paged(cache, path, findings: List[Finding],
                              f"contiguous prefix of the row", "['table']")
         return
     for key, sub in cache.items():
-        _walk_paged(sub, f"{path}['{key}']", findings, n_slots)
+        _walk_paged(sub, f"{path}['{key}']", findings, n_slots, refcounts)
 
 
-def validate_decode_state(state: Any,
-                          n_slots: Optional[int] = None) -> List[Finding]:
+def validate_decode_state(state: Any, n_slots: Optional[int] = None,
+                          refcounts: Optional[dict] = None) -> List[Finding]:
     """Contract-check a decode state's paged KV sub-trees (PC1-PC3).
 
     Contiguous states have nothing paged to check and validate trivially;
-    corrupted paged trees produce path-qualified findings, not crashes."""
+    corrupted paged trees produce path-qualified findings, not crashes.
+    ``refcounts`` (page id -> count, from the scheduler's prefix cache)
+    marks pages whose multi-slot ownership is deliberate — shared pages
+    *outside* the ledger still warn under PC2."""
     findings: List[Finding] = []
     cache = state.get("cache", state) if isinstance(state, dict) else state
     try:
-        _walk_paged(cache, "state['cache']", findings, n_slots)
+        _walk_paged(cache, "state['cache']", findings, n_slots, refcounts)
     except Exception as e:
         findings.append(Finding(
             severity="error", pass_name="contracts", rule="PC0",
             path="state['cache']",
             message=f"validator could not walk this cache tree "
                     f"({type(e).__name__}: {e})"))
+    return findings
+
+
+def validate_scheduler(sched) -> List[Finding]:
+    """PX1-PX3: live-scheduler ledger checks (duck-typed on
+    :class:`repro.serve.scheduler.Scheduler`).
+
+    These validate the *host-side* book-keeping the device tables are
+    written from — refcount consistency between the prefix cache and the
+    slots aliasing its pages (PX1), the shared-region/write-frontier
+    separation that makes shared pages read-only (PX2), and block-table
+    hygiene for free/parked rows (PX3).  Non-paged schedulers validate
+    trivially."""
+    findings: List[Finding] = []
+    c = _Ctx(findings, "scheduler")
+    if not getattr(sched, "paged", False) or sched.tables is None:
+        return findings
+    ps = sched.page_size
+    live = {i: s for i, s in enumerate(sched.slots) if s is not None}
+    # -- PX1: refcounts mirror live aliases; pool accounting closes -------
+    owned: dict = {}
+    for i, s in live.items():
+        for p in s.pages:
+            owned[p] = owned.get(p, 0) + 1
+    held: dict = {}
+    for i, s in live.items():
+        for p in s.shared_pages:
+            held[p] = held.get(p, 0) + 1
+    if sched.prefix_cache is not None:
+        refs = sched.prefix_cache.refcounts
+        for p, n in refs.items():
+            if held.get(p, 0) != n:
+                c.err("PX1", f"page {p} has refcount {n} but "
+                             f"{held.get(p, 0)} live slot(s) alias it")
+        for p in held:
+            if p not in refs:
+                c.err("PX1", f"slot-shared page {p} is not registered in "
+                             f"the prefix cache")
+        for p in refs:
+            owned[p] = owned.get(p, 0) + 1
+    else:
+        for p, n in held.items():
+            owned[p] = owned.get(p, 0) + n
+    multi = sorted(p for p, n in owned.items() if n > 1)
+    if multi:
+        c.err("PX1", f"pages owned more than once (slot-private lists / "
+                     f"cache registry overlap): {multi[:8]}")
+    if sched.allocator.in_use != len(owned):
+        c.err("PX1", f"allocator reports {sched.allocator.in_use} pages in "
+                     f"use but live slots + prefix cache own {len(owned)} "
+                     f"(parked snapshots must hold no pool pages)")
+    # -- PX2: shared prefix strictly behind the write frontier ------------
+    for i, s in live.items():
+        if s.n_shared and s.index < s.n_shared * ps:
+            c.err("PX2", f"slot {i} write frontier {s.index} falls inside "
+                         f"its shared-prefix region [0, {s.n_shared * ps}) "
+                         f"— a decode/prefill write would corrupt a page "
+                         f"other requests alias")
+    # -- PX3: device tables mirror the ledger; parked rows are zeroed -----
+    for i in range(sched.n_slots):
+        row = np.asarray(sched.tables[i])
+        s = sched.slots[i]
+        if s is None:
+            stale = sorted(set(int(p) for p in row[row != 0]))
+            if stale:
+                c.err("PX3", f"free/parked slot row {i} still references "
+                             f"pages {stale[:8]}; swapped-out state lives "
+                             f"in the host snapshot only")
+        else:
+            bp = [int(p) for p in s.block_pages]
+            if [int(p) for p in row[:len(bp)]] != bp or row[len(bp):].any():
+                c.err("PX3", f"slot {i} table row {row.tolist()} does not "
+                             f"mirror its book-kept pages {bp}")
     return findings
 
 

@@ -71,6 +71,14 @@ lint"):
   slot row (``PA2``); a slot's live pages are a contiguous prefix of
   its table row — the kernel walks blocks in order and the fill level
   masks only the trash tail (``PA3``).
+* ``PX1``-``PX3`` — live-scheduler ledger invariants
+  (``analysis.contracts.validate_scheduler``): prefix-cache refcounts
+  equal the live slots aliasing each shared page and the allocator's
+  in-use count closes against slot + cache ownership (``PX1``, so a
+  parked snapshot holds no pool pages); every slot's write frontier
+  sits at or past its shared-prefix region — shared pages are
+  read-only (``PX2``); free/parked block-table rows are all zeros and
+  live rows mirror the host ledger exactly (``PX3``).
 * ``AT1`` — an autotuned assignment respects its byte budget exactly:
   ``weight_stream_bytes(tree) <= budget`` under the same occupancy
   accounting the allocator optimized against (no double bookkeeping).

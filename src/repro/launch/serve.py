@@ -5,6 +5,15 @@ serving weights (BWQ deployment), and decodes either as one static batch
 (default) or as staggered requests through the continuous-batching
 scheduler (``--requests``).  ``--kv-bits {4,8}`` selects the
 quantized-at-rest KV cache; ``--temperature``/``--top-k`` enable sampling.
+
+Scheduler production knobs (``--requests`` + ``--page-size`` mode):
+``--priority`` assigns cycling per-request priority classes,
+``--overcommit`` admits past pool capacity (preempting victims to host
+memory when growth runs dry), ``--prefix-cache`` shares identical prompt
+prefix pages by content hash, ``--shared-prefix N`` makes the first N
+prompt tokens a common system prompt across the batch, and
+``--stats-out`` dumps the scheduler's cache/preemption/prefix stats as
+JSON for CI smoke assertions.
 """
 import argparse
 
@@ -78,6 +87,26 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="insert prompts in chunks this wide, interleaved "
                          "with decode (0 = monolithic prefill)")
+    ap.add_argument("--priority", default="",
+                    help="comma-separated priority classes cycled over the "
+                         "batch, e.g. '0,1' alternates low/high ('' = all "
+                         "equal); higher admits first, parks last")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="admit worst-case page reservations up to this "
+                         "multiple of pool capacity; > 1 preempts (parks "
+                         "to host memory) lowest-priority victims when "
+                         "decode growth exhausts the free list")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed prompt-prefix page sharing: "
+                         "identical full prompt pages are held once, "
+                         "refcounted, across concurrent requests")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="make the first N prompt tokens identical across "
+                         "the batch (a shared system prompt) to exercise "
+                         "--prefix-cache")
+    ap.add_argument("--stats-out", default="",
+                    help="write the scheduler stats JSON (cache report + "
+                         "preemption / prefix-hit counters) to this file")
     ap.add_argument("--lint", action="store_true",
                     help="run the static serving-graph lint before serving "
                          "and abort if it reports errors")
@@ -105,6 +134,11 @@ def main():
         print(f"deployed: {layout} int{args.deploy_bits} serving weights")
 
     batch = _prompts(cfg, args)
+    if args.shared_prefix:
+        import numpy as np
+        toks = np.array(batch["tokens"])
+        toks[:, :args.shared_prefix] = toks[0, :args.shared_prefix]
+        batch["tokens"] = jnp.asarray(toks)
 
     if args.autotune_budget_bytes:
         from ..serve.autotune import autotune_params
@@ -123,6 +157,8 @@ def main():
                       page_size=args.page_size,
                       n_pages=args.n_pages or None,
                       prefill_chunk=args.prefill_chunk,
+                      overcommit=args.overcommit,
+                      prefix_cache=args.prefix_cache,
                       speculate_planes=args.speculate_planes,
                       draft_gamma=args.draft_gamma)
 
@@ -137,13 +173,15 @@ def main():
             raise SystemExit("serving-graph lint failed; aborting launch")
 
     if args.requests:
+        prios = [int(p) for p in args.priority.split(",") if p != ""] or [0]
         reqs = [Request(uid=i,
                         inputs={k: v[i:i + 1] for k, v in batch.items()},
                         sampling=SamplingParams(
                             max_new_tokens=args.max_new,
                             temperature=args.temperature,
                             top_k=args.top_k, eos_id=args.eos_id,
-                            seed=args.seed + i),
+                            seed=args.seed + i,
+                            priority=prios[i % len(prios)]),
                         arrival=i * args.arrival_gap)
                 for i in range(args.batch)]
         sched = eng.make_scheduler(reqs, n_slots=args.n_slots or args.batch)
@@ -152,9 +190,15 @@ def main():
             print(f"[{r.uid}] arrived@{reqs[r.uid].arrival} "
                   f"admitted@{r.admitted_tick} done@{r.finished_tick} "
                   f"({r.finish_reason}): {r.tokens}")
-        if args.page_size:
+        if args.page_size or args.stats_out:
             import json
-            print(json.dumps(sched.cache_report()))
+            stats = sched.cache_report()
+            print(json.dumps(stats))
+            if args.stats_out:
+                findings = sched.validate()
+                stats["contract_findings"] = [f.format() for f in findings]
+                with open(args.stats_out, "w") as f:
+                    json.dump(stats, f, indent=2)
         if args.speculate_planes:
             print(f"speculative: {sched.spec_stats}")
         return

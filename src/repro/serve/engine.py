@@ -86,6 +86,8 @@ class ServeEngine:
     page_size: int = 0            # >0: paged KV cache (tokens per page)
     n_pages: Optional[int] = None  # page-pool capacity (None = worst case)
     prefill_chunk: int = 0        # >0: insert prompts in chunks this wide
+    overcommit: float = 1.0       # >1: admit past capacity, park victims
+    prefix_cache: bool = False    # share full prompt pages by content hash
     donate_state: bool = True     # donate decode state (no double-buffer)
     validate: bool = True         # contract-check deployed leaves on build
     speculate_planes: int = 0     # >0: self-speculative decode, top-k draft
@@ -321,6 +323,81 @@ class ServeEngine:
         with use_mesh(self.mesh):
             return self._verify_j(self.params, tokens, state, index)
 
+    # ---- preemption / prefix-cache state plumbing ------------------------
+    def park_slot(self, state: Any, slot: int, pages) -> Dict[str, Any]:
+        """Snapshot everything batch row ``slot`` holds to host memory:
+        its pool pages (in ``pages``/block order) from every paged KV
+        sub-dict, its row of every non-paged per-slot cache leaf
+        (recurrent state), and its encoder buffer row if the family has
+        one.  Pure ``np.asarray`` of the stored representation —
+        quantized-at-rest payloads and scales cross as raw bytes, no
+        dequantization — so :meth:`restore_slot` round-trips
+        bit-identically (the PX1/PX3 contracts and the preemption leg of
+        the stress suite rely on this)."""
+        ids = np.asarray(pages, np.int32)
+        rec: Dict[str, Any] = {"pages": {}, "rows": {}, "enc_out": None,
+                               "n_pages": len(ids)}
+
+        def walk(cache, path):
+            if isinstance(cache, dict):
+                if "table" in cache:
+                    for name, leaf in cache["pages"].items():
+                        rec["pages"][f"{path}.{name}"] = \
+                            np.asarray(leaf[:, ids])
+                    return
+                for k, v in cache.items():
+                    walk(v, f"{path}.{k}")
+                return
+            rec["rows"][path] = np.asarray(cache[:, slot])
+
+        walk(state["cache"], "cache")
+        if "enc_out" in state:
+            rec["enc_out"] = np.asarray(state["enc_out"][slot])
+        return rec
+
+    def restore_slot(self, state: Any, slot: int, pages,
+                     record: Dict[str, Any]) -> Any:
+        """Write a :meth:`park_slot` snapshot back into batch row ``slot``,
+        landing the parked pool pages on the freshly allocated ``pages``
+        (same count, any ids — the caller rewrites its block-table row to
+        match).  The inverse of parking, bit for bit."""
+        if len(pages) != record["n_pages"]:
+            raise ValueError(f"snapshot holds {record['n_pages']} pages, "
+                             f"restore got {len(pages)} page ids")
+        ids = jnp.asarray(np.asarray(pages, np.int32))
+
+        def walk(cache, path):
+            if isinstance(cache, dict):
+                if "table" in cache:
+                    new = {name: (leaf.at[:, ids].set(
+                                      jnp.asarray(record["pages"]
+                                                  [f"{path}.{name}"]))
+                                  if record["n_pages"] else leaf)
+                           for name, leaf in cache["pages"].items()}
+                    return dict(cache, pages=new)
+                return {k: walk(v, f"{path}.{k}") for k, v in cache.items()}
+            return cache.at[:, slot].set(jnp.asarray(record["rows"][path]))
+
+        out = dict(state, cache=walk(state["cache"], "cache"))
+        if record.get("enc_out") is not None and "enc_out" in state:
+            out["enc_out"] = state["enc_out"].at[slot].set(
+                jnp.asarray(record["enc_out"]))
+        return out
+
+    def copy_pool_page(self, state: Any, src: int, dst: int) -> Any:
+        """Copy pool page ``src`` onto ``dst`` in every paged KV sub-dict
+        (payloads and scales alike) — the scheduler's copy-on-write
+        primitive for diverging from a shared prefix page."""
+        def walk(cache):
+            if isinstance(cache, dict):
+                if "table" in cache:
+                    return dict(cache, pages={
+                        name: leaf.at[:, dst].set(leaf[:, src])
+                        for name, leaf in cache["pages"].items()})
+                return {k: walk(v) for k, v in cache.items()}
+            return cache
+        return dict(state, cache=walk(state["cache"]))
+
     def prompt_width(self, batch: Dict[str, jnp.ndarray]) -> int:
         """Cache positions a prompt occupies (tokens + VLM vision prefix)."""
         p = batch["tokens"].shape[1]
@@ -418,15 +495,19 @@ class ServeEngine:
                        max_len: Optional[int] = None,
                        page_size: Optional[int] = None,
                        n_pages: Optional[int] = None,
-                       prefill_chunk: Optional[int] = None):
+                       prefill_chunk: Optional[int] = None,
+                       overcommit: Optional[float] = None,
+                       prefix_cache: Optional[bool] = None):
         """Continuous-batching scheduler sized for ``requests``.
 
         ``max_len`` (total per-slot cache width) defaults to the widest
         request's prompt plus 64-rounded generation headroom — the same
         rounding ``generate`` uses, so both paths compile identical decode
-        shapes.  ``page_size`` / ``n_pages`` / ``prefill_chunk`` default to
-        the engine's settings (0 = contiguous slots / monolithic prefill).
-        The scheduler is the stats surface too (``cache_report()``)."""
+        shapes.  ``page_size`` / ``n_pages`` / ``prefill_chunk`` /
+        ``overcommit`` / ``prefix_cache`` default to the engine's settings
+        (0 = contiguous slots / monolithic prefill; 1.0 = reservation-safe
+        admission; False = no prompt-page sharing).  The scheduler is the
+        stats surface too (``cache_report()``)."""
         from .scheduler import Scheduler
         if max_len is None:
             max_len = max(self.prompt_width(r.inputs) +
@@ -437,16 +518,22 @@ class ServeEngine:
             page_size=self.page_size if page_size is None else page_size,
             n_pages=self.n_pages if n_pages is None else n_pages,
             prefill_chunk=(self.prefill_chunk if prefill_chunk is None
-                           else prefill_chunk))
+                           else prefill_chunk),
+            overcommit=self.overcommit if overcommit is None else overcommit,
+            prefix_cache=(self.prefix_cache if prefix_cache is None
+                          else prefix_cache))
 
     def serve(self, requests, n_slots: int = 8,
               max_len: Optional[int] = None,
               page_size: Optional[int] = None,
               n_pages: Optional[int] = None,
-              prefill_chunk: Optional[int] = None):
+              prefill_chunk: Optional[int] = None,
+              overcommit: Optional[float] = None,
+              prefix_cache: Optional[bool] = None):
         """Run ``requests`` through a continuous-batching scheduler (see
         :meth:`make_scheduler`); results come back in submission order."""
         return self.make_scheduler(
             requests, n_slots=n_slots, max_len=max_len,
             page_size=page_size, n_pages=n_pages,
-            prefill_chunk=prefill_chunk).run(requests)
+            prefill_chunk=prefill_chunk, overcommit=overcommit,
+            prefix_cache=prefix_cache).run(requests)

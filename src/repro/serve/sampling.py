@@ -21,12 +21,16 @@ class SamplingParams:
     ``temperature <= 0`` is greedy argmax (deterministic);  ``top_k > 0``
     restricts sampling to the k highest-probability tokens.  ``eos_id``
     retires the request early ('stop'); otherwise it runs to
-    ``max_new_tokens`` ('length')."""
+    ``max_new_tokens`` ('length').  ``priority`` orders scheduler
+    admission and preemption: higher values admit first and are parked
+    last when an overcommitted page pool runs dry (ties break by arrival
+    tick, then submission order)."""
     max_new_tokens: int = 16
     temperature: float = 0.0
     top_k: int = 0
     eos_id: Optional[int] = None
     seed: int = 0
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -61,6 +65,10 @@ def sample_token(logits: jnp.ndarray, sp: SamplingParams, key) -> jnp.ndarray:
         return jnp.argmax(logits, -1).astype(jnp.int32)
     l = logits.astype(jnp.float32) / sp.temperature
     if sp.top_k > 0 and sp.top_k < l.shape[-1]:
-        kth = jnp.sort(l, axis=-1)[..., -sp.top_k, None]
-        l = jnp.where(l < kth, -jnp.inf, l)
+        # rank-based mask so EXACTLY k candidates survive: a `l < kth`
+        # threshold keeps every logit tied with the k-th value, silently
+        # widening the filter past top_k; stable double-argsort breaks
+        # ties by token id instead
+        rank = jnp.argsort(jnp.argsort(-l, axis=-1), axis=-1)
+        l = jnp.where(rank < sp.top_k, l, -jnp.inf)
     return jax.random.categorical(key, l).astype(jnp.int32)

@@ -28,8 +28,7 @@ token-identical to it):
   block boundaries (drawing from its reservation — mid-decode exhaustion
   is impossible by construction), and returns everything on retirement —
   so resident cache bytes track the tokens actually held, not
-  ``n_slots * max_len`` worst case.  When the pool lacks headroom,
-  admission waits (head-of-line) until pages free up.
+  ``n_slots * max_len`` worst case.
 
 * ``prefill_chunk > 0`` — **chunked prefill**: prompts longer than the
   chunk width are inserted over several ticks (one chunk per tick via
@@ -39,6 +38,40 @@ token-identical to it):
   chunk width so chunk shapes compile once; padded positions are masked
   until decode overwrites them.
 
+Three production extensions on top of the paged pool (all token-identical
+to the baseline paths):
+
+* **priority classes** — ``SamplingParams.priority`` orders the waiting
+  queue (higher first, ties by arrival tick then submission order), and
+  admission *skips over* requests the pool cannot host yet instead of
+  head-of-line stalling behind one oversized request.
+
+* ``overcommit > 1`` — **reservation overcommit with preemption**:
+  admission may promise up to ``overcommit x`` the pool's physical
+  capacity in worst-case reservations.  When decode growth then finds
+  the free list empty, the lowest-priority / most recently admitted
+  victim slot is **parked**: its pool pages and per-slot state rows are
+  snapshotted to host memory bit-for-bit (``ServeEngine.park_slot`` — a
+  plain ``np.asarray`` of the quantized-at-rest pages, no dequant), its
+  pages return to the free list, and the request rejoins the waiting
+  queue to resume later through the same block-table insert path
+  (``restore_slot``).  The parked round-trip is bit-identical, so
+  resumed requests keep exact token parity.
+
+* ``prefix_cache=True`` — **content-addressed prefix caching**: every
+  *complete* prompt page (all ``page_size`` tokens inside the prompt,
+  never written again) is keyed by a chained token-content hash in a
+  refcounted :class:`PrefixCache`.  A later request whose prompt starts
+  with the same tokens aliases the shared read-only pages through its
+  block table and prefills only the remaining suffix — a hot system
+  prompt costs ONE set of pool pages across every concurrent request
+  using it.  Writes can never land on a shared page (the hashed region
+  always ends at least one token before the first decode write); a
+  defensive copy-on-write guard (``_cow_from``) backs the invariant and
+  the ``PX2`` contract rule proves it.  Refcounts drop at retirement /
+  parking; a page whose count reaches zero returns to the free list, so
+  the pool still drains leak-free.
+
 Time is measured in scheduler *ticks* (one decode step per tick), which
 keeps admission order deterministic and lets tests/benchmarks replay
 staggered arrival traces exactly.
@@ -46,6 +79,8 @@ staggered arrival traces exactly.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import heapq
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -67,10 +102,58 @@ class _Slot:
     reserve_left: int = 0         # growth pages still drawable from pool
     # queued prompt chunks: (inputs, start, last-logit column or None)
     chunks: List[tuple] = dataclasses.field(default_factory=list)
+    # refcounted prefix-cache pages aliased at the block-table head; the
+    # slot's own pages follow at blocks [n_shared, n_shared + len(pages))
+    shared_pages: List[int] = dataclasses.field(default_factory=list)
+    # chained content hashes of the prompt's sharable full pages
+    prefix_hashes: List[bytes] = dataclasses.field(default_factory=list)
 
     @property
     def key(self):
         return jax.random.PRNGKey(self.req.sampling.seed)
+
+    @property
+    def n_shared(self) -> int:
+        return len(self.shared_pages)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.shared_pages) + len(self.pages)
+
+    @property
+    def block_pages(self) -> List[int]:
+        return self.shared_pages + self.pages
+
+
+@dataclasses.dataclass
+class _Parked:
+    """A preempted request waiting to resume: the bit-exact host snapshot
+    of everything its slot held (pool pages + per-slot state rows), plus
+    the book-keeping to pick up decoding where it stopped."""
+    req: Request
+    index: int
+    last_tok: int
+    generated: List[int]
+    admitted_tick: int
+    chunks: List[tuple]
+    prefix_hashes: List[bytes]
+    n_blocks: int                 # block-table entries the snapshot holds
+    reserve_need: int             # growth pages still needed after resume
+    record: Any                   # ServeEngine.park_slot host snapshot
+
+
+def _entry_req(entry) -> Request:
+    return entry.req if isinstance(entry, _Parked) else entry
+
+
+def _queue_key(seq_of: Dict[int, int]):
+    """Waiting-queue order: priority desc, arrival asc, submission asc.
+    Parked requests keep their original request's key (no re-queue
+    penalty, no queue jumping)."""
+    def key(entry):
+        r = _entry_req(entry)
+        return (-r.sampling.priority, r.arrival, seq_of[r.uid])
+    return key
 
 
 class PageAllocator:
@@ -78,24 +161,30 @@ class PageAllocator:
 
     Page 0 is reserved as the trash page (parked-slot scratch writes and
     unallocated block-table entries), so capacity ``n_pages`` serves at
-    most ``n_pages - 1`` live pages.  Pops lowest-id-first so allocation
-    traces are deterministic and replayable.
+    most ``n_pages - 1`` live pages.  The free list is a min-heap, so
+    allocation pops the globally lowest free id no matter how slots
+    churned — traces are deterministic and replayable.
 
     Admission control is *reservation*-based: a request only enters a slot
     when its worst-case page total (prompt + generation budget) fits in
-    ``free - reserved``, and its not-yet-drawn tail is recorded in
+    the reservation headroom, and its not-yet-drawn tail is recorded in
     ``reserved``.  Pages are still *allocated* lazily (prompt pages at
     admission, decode pages one block at a time), so ``in_use``/
-    ``peak_in_use`` track tokens actually held — but mid-decode growth can
-    never exhaust the pool, and EOS-early retirement hands its unused
-    reservation straight back."""
+    ``peak_in_use`` track tokens actually held.  With the default
+    ``overcommit=1.0`` the headroom is physical (``free - reserved``) and
+    mid-decode growth can never exhaust the pool; ``overcommit > 1``
+    admits up to that multiple of physical capacity in promises, and the
+    scheduler parks victims when :meth:`alloc` then comes up empty."""
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, overcommit: float = 1.0):
         if n_pages < 2:
             raise ValueError(f"page pool needs >= 2 pages (one is the "
                              f"reserved trash page), got {n_pages}")
+        if overcommit < 1.0:
+            raise ValueError(f"overcommit must be >= 1.0, got {overcommit}")
         self.n_pages = n_pages
-        self._free = list(range(n_pages - 1, 0, -1))
+        self.overcommit = overcommit
+        self._free = list(range(1, n_pages))        # already heap-ordered
         self.reserved = 0          # promised to live slots, not yet drawn
         self.peak_in_use = 0
 
@@ -107,8 +196,13 @@ class PageAllocator:
     def in_use(self) -> int:
         return self.n_pages - 1 - len(self._free)
 
-    def can_admit(self, total_pages: int) -> bool:
-        return total_pages <= len(self._free) - self.reserved
+    def can_admit(self, total_pages: int, now: int = 0) -> bool:
+        """``total_pages`` new worst-case promises fit the (possibly
+        overcommitted) reservation budget, and the ``now`` pages needed
+        immediately are physically on the free list."""
+        cap = int((self.n_pages - 1) * self.overcommit)
+        return (total_pages + self.in_use + self.reserved <= cap
+                and now <= len(self._free))
 
     def alloc(self, n: int, from_reserve: int = 0) -> Optional[List[int]]:
         """n pages (releasing ``from_reserve`` of the caller's
@@ -116,13 +210,82 @@ class PageAllocator:
         if n > len(self._free):
             return None
         self.reserved -= from_reserve
-        pages = [self._free.pop() for _ in range(n)]
+        pages = [heapq.heappop(self._free) for _ in range(n)]
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return pages
 
     def release(self, pages: List[int], from_reserve: int = 0) -> None:
         self.reserved -= from_reserve
-        self._free.extend(sorted(pages, reverse=True))
+        for p in pages:
+            heapq.heappush(self._free, p)
+
+
+class PrefixCache:
+    """Content-addressed, refcounted registry of read-only prompt pages.
+
+    Keys are *chained* hashes: page j's key digests page j-1's key plus
+    page j's tokens, so a hit at block j certifies the whole prefix
+    [0, (j+1) * page_size) matches and lookups stop at the first miss
+    (shared blocks are always a contiguous table-row prefix, which the
+    ``PA3``/``PX2`` contracts rely on).  Ownership of a registered page
+    transfers here: the registering slot holds one reference like any
+    later aliaser, and :meth:`release` hands the page id back to the
+    caller (for the allocator's free list) once the last reference
+    drops — so a drained scheduler always ends at zero refcounts and
+    zero live pages."""
+
+    def __init__(self):
+        self._page_of: Dict[bytes, int] = {}
+        self._hash_of: Dict[int, bytes] = {}
+        self._refs: Dict[int, int] = {}
+        self.hits = 0              # page-granular hit counter
+        self.lookups = 0
+
+    def __len__(self) -> int:
+        return len(self._page_of)
+
+    @property
+    def refcounts(self) -> Dict[int, int]:
+        return dict(self._refs)
+
+    @property
+    def outstanding_refs(self) -> int:
+        return sum(self._refs.values())
+
+    @staticmethod
+    def chain(prev: bytes, tokens: np.ndarray) -> bytes:
+        return hashlib.sha256(
+            prev + np.ascontiguousarray(tokens, np.int32).tobytes()).digest()
+
+    def lookup(self, h: bytes) -> Optional[int]:
+        self.lookups += 1
+        page = self._page_of.get(h)
+        if page is not None:
+            self.hits += 1
+        return page
+
+    def acquire(self, page: int) -> None:
+        self._refs[page] += 1
+
+    def register(self, h: bytes, page: int) -> None:
+        """Publish ``page`` under ``h``; the registering slot holds the
+        first reference."""
+        if h in self._page_of:
+            raise ValueError(f"hash already registered to page "
+                             f"{self._page_of[h]}")
+        self._page_of[h] = page
+        self._hash_of[page] = h
+        self._refs[page] = 1
+
+    def release(self, page: int) -> bool:
+        """Drop one reference; True when the page just became free (the
+        caller returns it to the allocator)."""
+        self._refs[page] -= 1
+        if self._refs[page] > 0:
+            return False
+        del self._refs[page]
+        del self._page_of[self._hash_of.pop(page)]
+        return True
 
 
 def _paged_pool_bytes(cache) -> int:
@@ -145,6 +308,13 @@ def _kv_resident_bytes(cache) -> int:
     return 0
 
 
+# families whose paged KV cache is purely positional AND whose prompts are
+# token-only: prefix pages can be shared by token-content hash alone.
+# (vlm prompts embed per-request vision K/V in the hashed region; enc-dec
+# carries a per-slot encoder buffer; ssm/hybrid carry recurrent rows.)
+_PREFIX_CACHE_FAMILIES = ("dense", "moe")
+
+
 class Scheduler:
     """Continuous batching over a :class:`ServeEngine`.
 
@@ -155,11 +325,19 @@ class Scheduler:
     tree — cache layout, enc-dec encoder buffer — comes straight from the
     model's own prefill).  Paged / chunked modes build a zeroed state via
     ``ModelAPI.init_decode_state`` instead and insert every prompt —
-    including the first — through the same block-table write path."""
+    including the first — through the same block-table write path.
+
+    ``overcommit`` (> 1, paged only) admits more worst-case reservations
+    than the pool physically holds and parks victims on exhaustion;
+    ``prefix_cache`` (paged only) shares complete prompt pages across
+    requests by content hash.  Both are token-identical to the baseline
+    (tests/test_serving_stress.py drives randomized workloads through
+    them against one-shot ``generate``)."""
 
     def __init__(self, engine, n_slots: int = 8, max_len: int = 256,
                  page_size: int = 0, n_pages: Optional[int] = None,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, overcommit: float = 1.0,
+                 prefix_cache: bool = False):
         self.engine = engine
         self.n_slots = n_slots
         self.max_len = max_len
@@ -182,33 +360,57 @@ class Scheduler:
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk
         self.paged = page_size > 0
+        if overcommit > 1.0 and not self.paged:
+            raise ValueError("overcommit > 1 needs a paged cache "
+                             "(page_size > 0): preemption parks pool "
+                             "pages, fixed-width slots have none")
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache needs a paged cache "
+                             "(page_size > 0): sharing happens through "
+                             "the block table")
+        if prefix_cache and cfg.family not in _PREFIX_CACHE_FAMILIES:
+            import warnings
+            warnings.warn(
+                f"prefix_cache needs a purely positional token-only KV "
+                f"cache; family {cfg.family!r} carries per-request "
+                f"vision/encoder/recurrent state — disabled", stacklevel=3)
+            prefix_cache = False
+        self.overcommit = overcommit
         if self.paged:
             self.nb = -(-max_len // page_size)
             self.total_len = self.nb * page_size
-            self.allocator = PageAllocator(n_pages or
-                                           1 + n_slots * self.nb)
+            self.allocator = PageAllocator(n_pages or 1 + n_slots * self.nb,
+                                           overcommit=overcommit)
             self.tables = np.zeros((n_slots, self.nb), np.int32)
         else:
             self.nb = 0
             self.total_len = max_len
             self.allocator = None
             self.tables = None
+        self.prefix_cache: Optional[PrefixCache] = \
+            PrefixCache() if prefix_cache else None
         self._tables_dirty = False
         # paged / chunked prompts go through the zero-state insertion path
         self._insert_path = self.paged or prefill_chunk > 0
         self.state: Any = None
         self.slots: List[Optional[_Slot]] = [None] * n_slots
-        self.waiting: List[Request] = []
+        self.waiting: List[Any] = []       # Request | _Parked, queue-ordered
+        self._seq_of: Dict[int, int] = {}  # uid -> submission sequence
         self.tick = 0
         self.results: Dict[int, GenerationResult] = {}
         # speculative-decode accounting (acceptance rate, bench rows)
         self.spec_stats: Dict[str, int] = {
             "rounds": 0, "drafted": 0, "accepted_drafts": 0, "emitted": 0}
+        # priority / preemption / prefix-cache accounting
+        self.sched_stats: Dict[str, int] = {
+            "preemptions": 0, "resumes": 0, "cow_copies": 0,
+            "prefix_lookups": 0, "prefix_hits": 0, "prefix_hit_tokens": 0,
+            "prefix_pages_registered": 0}
 
     # ---- submission ------------------------------------------------------
     def submit(self, req: Request) -> None:
         if req.uid in self.results or \
-                any(r.uid == req.uid for r in self.waiting) or \
+                any(_entry_req(e).uid == req.uid for e in self.waiting) or \
                 any(s is not None and s.req.uid == req.uid
                     for s in self.slots):
             raise ValueError(f"duplicate request uid {req.uid}")
@@ -223,9 +425,14 @@ class Scheduler:
             if pages > self.allocator.n_pages - 1:
                 raise ValueError(
                     f"request {req.uid} needs {pages} pages, pool capacity "
-                    f"is {self.allocator.n_pages - 1} live pages")
+                    f"is {self.allocator.n_pages - 1} live pages "
+                    f"(overcommit promises concurrency, not capacity)")
+        self._seq_of[req.uid] = len(self._seq_of)
         self.waiting.append(req)
-        self.waiting.sort(key=lambda r: r.arrival)
+        self._sort_waiting()
+
+    def _sort_waiting(self) -> None:
+        self.waiting.sort(key=_queue_key(self._seq_of))
 
     # ---- admission -------------------------------------------------------
     def _first_token(self, slot: _Slot, logits_row) -> None:
@@ -240,7 +447,7 @@ class Scheduler:
             self.state = self.engine.set_tables(self.state, self.tables)
             self._tables_dirty = False
 
-    def _plan_chunks(self, req: Request) -> List[tuple]:
+    def _plan_chunks(self, req: Request, skip: int = 0) -> List[tuple]:
         """Split a prompt into (inputs, start, last-col) insertion chunks.
 
         The vision prefix / encoder frames ride the first chunk (which
@@ -249,6 +456,14 @@ class Scheduler:
         Only the final chunk reports a logits column (the last *real*
         token — the final chunk is zero-padded to the chunk width so every
         chunk compiles to one shape).
+
+        ``skip > 0`` (prefix-cache hit) drops the first ``skip`` tokens:
+        their K/V already sit in aliased shared pages, so insertion
+        starts at cache position ``skip`` and attends over the shared
+        prefix exactly as later chunks attend over earlier ones.  Hits
+        only happen for token-only positional-KV families, so the
+        vision/frames first-chunk and recurrent-state special cases never
+        meet a non-zero ``skip``.
 
         Recurrent-state families (ssm, hybrid) always insert monolithic:
         their state has no fill-level masking, so padded tokens would
@@ -261,12 +476,14 @@ class Scheduler:
         cw = self.prefill_chunk
         cfg = self.engine.api.cfg
         tv = cfg.vision_tokens if cfg.family == "vlm" else 0
+        if skip and (cw <= 0 or p - skip <= cw):
+            return [({"tokens": jnp.asarray(toks[:, skip:])}, skip, None)]
         if cw <= 0 or p <= cw or cfg.family in ("ssm", "hybrid"):
             return [(inputs, 0, None)]
         chunks = []
-        n_c = -(-p // cw)
+        n_c = -(-(p - skip) // cw)
         for c in range(n_c):
-            lo, hi = c * cw, min((c + 1) * cw, p)
+            lo, hi = skip + c * cw, min(skip + (c + 1) * cw, p)
             w = hi - lo
             ct = toks[:, lo:hi]
             last = c == n_c - 1
@@ -278,14 +495,63 @@ class Scheduler:
                 padded = min(cw, self.total_len - (tv + lo))
                 ct = np.pad(ct, ((0, 0), (0, padded - w)))
             b = {"tokens": jnp.asarray(ct)}
-            if c == 0:
+            first = c == 0 and skip == 0
+            if first:
                 for extra in ("vision_embeds", "frames"):
                     if extra in inputs:
                         b[extra] = inputs[extra]
-            start = 0 if c == 0 else tv + lo
-            col = ((tv if c == 0 else 0) + w - 1) if last else None
+            start = 0 if first else tv + lo
+            col = ((tv if first else 0) + w - 1) if last else None
             chunks.append((b, start, col))
         return chunks
+
+    # ---- prefix cache ----------------------------------------------------
+    def _prefix_hashes(self, req: Request) -> List[bytes]:
+        """Chained content hashes of the prompt's *sharable* full pages.
+
+        A page is sharable iff its whole ``page_size``-token range lies
+        inside the prompt AND strictly before the last prompt token — the
+        final position must always be recomputed to produce the request's
+        first-token logits, so the hashed region ends at the largest page
+        boundary <= prompt_width - 1 and no write (suffix prefill at
+        ``skip`` or decode at ``prompt_width``) can ever land on a shared
+        page."""
+        toks = np.asarray(req.inputs["tokens"])
+        pw = toks.shape[1]
+        ps = self.page_size
+        limit = ((pw - 1) // ps) * ps
+        hashes, h = [], b""
+        for j in range(limit // ps):
+            h = PrefixCache.chain(h, toks[:, j * ps:(j + 1) * ps])
+            hashes.append(h)
+        return hashes
+
+    def _register_prompt_pages(self, i: int) -> None:
+        """Publish slot ``i``'s freshly prefetched full prompt pages into
+        the prefix cache (called once its prompt is fully inserted —
+        earlier registration would let another slot alias pages whose
+        content hasn't been written yet).  Ownership of each registered
+        page moves to the cache; the slot keeps one reference, so its
+        block layout (shared prefix, then owned pages) stays contiguous."""
+        if self.prefix_cache is None:
+            return
+        s = self.slots[i]
+        for j in range(s.n_shared, len(s.prefix_hashes)):
+            h = s.prefix_hashes[j]
+            if self.prefix_cache._page_of.get(h) is not None:
+                # a same-prefix sibling registered this page range first
+                # (both admitted before either finished prefill); keep
+                # ours private — a later register would break the
+                # hash -> one-page mapping
+                break
+            page = s.pages.pop(0)
+            self.prefix_cache.register(h, page)
+            s.shared_pages.append(page)
+            self.sched_stats["prefix_pages_registered"] += 1
+
+    def _decref(self, page: int) -> None:
+        if self.prefix_cache.release(page):
+            self.allocator.release([page])
 
     def _admit_into(self, i: int, req: Request) -> bool:
         """Place ``req`` into free slot ``i``; False if the page pool
@@ -305,24 +571,44 @@ class Scheduler:
                     "enc-dec slot insertion needs the same encoder length "
                     f"as the live batch: {inputs['frames'].shape[1]} != "
                     f"{self.state['enc_out'].shape[1]}")
-            reserve = 0
+            reserve, hits, hashes = 0, [], []
             if self.paged:
+                if self.prefix_cache is not None:
+                    hashes = self._prefix_hashes(req)
+                    for h in hashes:
+                        page = self.prefix_cache.lookup(h)
+                        self.sched_stats["prefix_lookups"] += 1
+                        if page is None:
+                            break
+                        hits.append(page)
                 need = pw + req.sampling.max_new_tokens - 1
                 total = -(-need // self.page_size)
                 prompt_pages = min(-(-pw // self.page_size), total)
-                if not self.allocator.can_admit(total):
+                fresh = prompt_pages - len(hits)
+                if not self.allocator.can_admit(total - len(hits),
+                                                now=fresh):
                     return False
-                pages = self.allocator.alloc(prompt_pages)
+                pages = self.allocator.alloc(fresh)
+                for page in hits:
+                    self.prefix_cache.acquire(page)
+                if hits:
+                    self.sched_stats["prefix_hits"] += len(hits)
+                    self.sched_stats["prefix_hit_tokens"] += \
+                        len(hits) * self.page_size
                 reserve = total - prompt_pages
                 self.allocator.reserved += reserve
-                self.tables[i, :len(pages)] = pages
+                self.tables[i, :len(hits)] = hits
+                self.tables[i, len(hits):prompt_pages] = pages
                 self._tables_dirty = True
             else:
                 pages = []
+            skip = len(hits) * self.page_size
             self.slots[i] = _Slot(req=req, index=pw, last_tok=0,
                                   generated=[], admitted_tick=self.tick,
                                   pages=pages, reserve_left=reserve,
-                                  chunks=self._plan_chunks(req))
+                                  chunks=self._plan_chunks(req, skip=skip),
+                                  shared_pages=list(hits),
+                                  prefix_hashes=hashes)
             return True
         # ---- legacy fixed-width path (monolithic prefill) ---------------
         if self.state is None:
@@ -354,19 +640,60 @@ class Scheduler:
         self._maybe_retire(i)
         return True
 
+    def _resume_into(self, i: int, pk: _Parked) -> bool:
+        """Restore a parked request into free slot ``i``: re-allocate its
+        block pages, write the host snapshot back bit-for-bit, and pick
+        up decoding (or remaining prefill chunks) where it stopped."""
+        if not self.allocator.can_admit(pk.n_blocks + pk.reserve_need,
+                                        now=pk.n_blocks):
+            return False
+        pages = self.allocator.alloc(pk.n_blocks)
+        self.allocator.reserved += pk.reserve_need
+        self.state = self.engine.restore_slot(self.state, i, pages,
+                                              pk.record)
+        self.tables[i, :] = 0
+        self.tables[i, :len(pages)] = pages
+        self._tables_dirty = True
+        # resumed pages are private even if some were shared before the
+        # park (their refs were dropped then; the snapshot carried the
+        # content instead), so the slot re-enters fully owned
+        self.slots[i] = _Slot(req=pk.req, index=pk.index,
+                              last_tok=pk.last_tok, generated=pk.generated,
+                              admitted_tick=pk.admitted_tick, pages=pages,
+                              reserve_left=pk.reserve_need,
+                              chunks=pk.chunks,
+                              prefix_hashes=pk.prefix_hashes)
+        self.sched_stats["resumes"] += 1
+        return True
+
     def _admit(self) -> None:
-        for i in range(self.n_slots):
-            if not self.waiting or self.waiting[0].arrival > self.tick:
+        """Fill free slots from the priority/arrival-ordered queue.
+
+        Requests the pool cannot host yet are *skipped over* — a blocked
+        oversized (or parked) request must not head-of-line stall
+        admissible ones behind it; it stays queued at its priority rank
+        and is retried every tick."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.waiting:
+            return
+        for entry in list(self.waiting):
+            if not free:
                 return
-            if self.slots[i] is None:
-                if not self._admit_into(i, self.waiting[0]):
-                    return          # head-of-line blocked on free pages
-                self.waiting.pop(0)
+            if _entry_req(entry).arrival > self.tick:
+                continue
+            if isinstance(entry, _Parked):
+                ok = self._resume_into(free[0], entry)
+            else:
+                ok = self._admit_into(free[0], entry)
+            if ok:
+                free.pop(0)
+                self.waiting.remove(entry)
 
     # ---- chunked / paged prompt insertion --------------------------------
     def _advance_prefills(self) -> None:
         """One prompt chunk per mid-prefill slot per tick; the final chunk
-        samples the request's first token (as monolithic admission does)."""
+        samples the request's first token (as monolithic admission does)
+        and publishes the prompt's full pages to the prefix cache."""
         for i, s in enumerate(self.slots):
             if s is None or not s.chunks:
                 continue
@@ -375,30 +702,114 @@ class Scheduler:
             logits, self.state = self.engine.prefill_chunk_at(
                 batch, self.state, i, start)
             if not s.chunks:
+                self._register_prompt_pages(i)
                 self._first_token(s, logits[0, -1 if col is None else col])
                 self._maybe_retire(i)
 
+    # ---- preemption ------------------------------------------------------
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Lowest-priority live slot (ties: most recently admitted, then
+        highest row) other than ``exclude`` — the request that loses the
+        least progress and outranks the fewest others."""
+        candidates = [i for i, s in enumerate(self.slots)
+                      if s is not None and i != exclude]
+        if not candidates:
+            return None
+        return min(candidates,
+                   key=lambda i: (self.slots[i].req.sampling.priority,
+                                  -self.slots[i].admitted_tick, -i))
+
+    def _park(self, i: int) -> None:
+        """Swap slot ``i`` out to host memory: snapshot its pool pages and
+        per-slot state rows bit-for-bit (quantized at-rest bytes copied
+        as-is — no dequant round trip), return its pages + reservation to
+        the allocator, drop its shared-page refs (the snapshot carries
+        their content, so resume never depends on cache survival), and
+        re-queue the request at its original priority/arrival rank."""
+        s = self.slots[i]
+        rec = self.engine.park_slot(self.state, i, s.block_pages)
+        for page in s.shared_pages:
+            self._decref(page)
+        self.allocator.release(s.pages, from_reserve=s.reserve_left)
+        self.tables[i, :] = 0
+        self._tables_dirty = True
+        need = self.engine.prompt_width(s.req.inputs) + \
+            s.req.sampling.max_new_tokens - 1
+        nb_total = -(-need // self.page_size)
+        self.waiting.append(_Parked(
+            req=s.req, index=s.index, last_tok=s.last_tok,
+            generated=s.generated, admitted_tick=s.admitted_tick,
+            chunks=s.chunks, prefix_hashes=s.prefix_hashes,
+            n_blocks=s.n_blocks, reserve_need=nb_total - s.n_blocks,
+            record=rec))
+        self._sort_waiting()
+        self.slots[i] = None
+        self.sched_stats["preemptions"] += 1
+
+    # ---- copy-on-write ---------------------------------------------------
+    def _cow_from(self, i: int, blk: int) -> None:
+        """Divergent-write guard: copy slot ``i``'s shared blocks
+        ``blk..`` into fresh private pages before a write can land there.
+        Structurally unreachable under the hashed-region rule (shared
+        pages always end before the first writable position — PX2), but
+        kept as the enforcement backstop the contract describes."""
+        s = self.slots[i]
+        moved = []
+        for j in range(blk, s.n_shared):
+            src = s.shared_pages[j]
+            page = self.allocator.alloc(1)
+            assert page is not None, "copy-on-write needs a free page"
+            self.state = self.engine.copy_pool_page(self.state, src,
+                                                    page[0])
+            self.tables[i, j] = page[0]
+            self._tables_dirty = True
+            moved.append(page[0])
+            self._decref(src)
+            self.sched_stats["cow_copies"] += 1
+        s.pages = moved + s.pages
+        del s.shared_pages[blk:]
+
     # ---- paged growth ----------------------------------------------------
-    def _grow_pages(self, live: List[int], lookahead: int = 0) -> None:
+    def _grow_pages(self, live: List[int], lookahead: int = 0) -> List[int]:
         """Allocate pages for every slot whose upcoming writes cross block
-        boundaries.  Plain decode advances one token per tick (at most one
-        page per slot); a speculative round writes up to ``lookahead``
-        positions past the fill level in one tick, so growth may claim
-        several pages — all from the slot's admission-time reservation,
-        because the round's draft depth is clamped to the slot's remaining
-        token budget (the free list can never come up short here)."""
+        boundaries; returns the slots still live afterwards.  Plain decode
+        advances one token per tick (at most one page per slot); a
+        speculative round writes up to ``lookahead`` positions past the
+        fill level in one tick, so growth may claim several pages — all
+        from the slot's admission-time reservation.  Under ``overcommit
+        <= 1`` the free list can never come up short here; beyond it, an
+        empty free list parks the lowest-priority victim (or, when every
+        other page is this slot's own, the slot itself) and retries."""
+        still = []
         for i in live:
             s = self.slots[i]
+            if s is None:
+                continue           # parked as a victim earlier this tick
+            wb = s.index // self.page_size
+            if wb < s.n_shared:
+                self._cow_from(i, wb)
             blk_hi = (s.index + lookahead) // self.page_size
-            while len(s.pages) <= blk_hi:
-                blk = len(s.pages)
+            parked_self = False
+            while s.n_blocks <= blk_hi:
                 page = self.allocator.alloc(1, from_reserve=1)
-                assert page is not None and s.reserve_left > 0, \
+                if page is None:   # failed alloc leaves `reserved` intact
+                    victim = self._pick_victim(exclude=i)
+                    if victim is None:
+                        self._park(i)
+                        parked_self = True
+                        break
+                    self._park(victim)
+                    continue
+                assert s.reserve_left > 0, \
                     f"reservation accounting broke for slot {i}"
                 s.reserve_left -= 1
+                blk = s.n_blocks
                 s.pages += page
                 self.tables[i, blk] = page[0]
                 self._tables_dirty = True
+            if not parked_self:
+                still.append(i)
+        return [i for i in still if self.slots[i] is not None]
 
     # ---- retirement ------------------------------------------------------
     def _maybe_retire(self, i: int) -> None:
@@ -413,7 +824,9 @@ class Scheduler:
                 prompt_len=slot.req.inputs["tokens"].shape[1],
                 admitted_tick=slot.admitted_tick,
                 finished_tick=self.tick)
-            if self.paged and (slot.pages or slot.reserve_left):
+            if self.paged and (slot.block_pages or slot.reserve_left):
+                for page in slot.shared_pages:
+                    self._decref(page)
                 self.allocator.release(slot.pages,
                                        from_reserve=slot.reserve_left)
                 self.tables[i, :] = 0
@@ -442,7 +855,9 @@ class Scheduler:
         if g < 1:
             return False
         if self.paged:
-            self._grow_pages(live, lookahead=g)
+            live = self._grow_pages(live, lookahead=g)
+            if not live:
+                return True        # every slot parked; the tick still ran
         self._flush_tables()
         toks = np.zeros((self.n_slots, 1), np.int32)
         # parked rows write masked scratch at the last position (paged:
@@ -493,9 +908,9 @@ class Scheduler:
             if self._spec_tick(live):
                 self.tick += 1
                 return
+        if live and self.paged:
+            live = self._grow_pages(live)
         if live:
-            if self.paged:
-                self._grow_pages(live)
             self._flush_tables()
             toks = np.zeros((self.n_slots, 1), np.int32)
             # parked rows write their (ignored) K/V at the last position —
@@ -531,6 +946,21 @@ class Scheduler:
         from ..analysis.footprint import scheduler_footprint
         return scheduler_footprint(self, prompt_widths)
 
+    def validate(self):
+        """Contract-check the live scheduler state: the paged decode tree
+        (PC*/PA*) plus the refcount / shared-write / parked-hygiene rules
+        (PX1-PX3, ``analysis.contracts.validate_scheduler``)."""
+        from ..analysis.contracts import (validate_decode_state,
+                                          validate_scheduler)
+        findings = list(validate_scheduler(self))
+        if self.state is not None:
+            refcounted = None if self.prefix_cache is None else \
+                self.prefix_cache.refcounts
+            findings += validate_decode_state(self.state,
+                                              n_slots=self.n_slots,
+                                              refcounts=refcounted)
+        return findings
+
     def cache_report(self) -> Dict[str, Any]:
         """Resident-cache accounting (the paged-vs-fixed-width headline).
 
@@ -547,7 +977,7 @@ class Scheduler:
         pool_bytes = _paged_pool_bytes(self.state["cache"])
         cap = self.allocator.n_pages
         page_bytes = pool_bytes // cap
-        return {
+        rep = {
             "paged": True,
             "page_size": self.page_size,
             "pool_capacity_pages": cap,
@@ -555,9 +985,18 @@ class Scheduler:
             "peak_pages_in_use": self.allocator.peak_in_use,
             "page_bytes": page_bytes,
             "bytes_in_use_peak": self.allocator.peak_in_use * page_bytes,
-            "fixed_equiv_bytes": page_bytes * self.n_slots *
-            self.max_len // self.page_size,
+            # ceil block count: a fixed layout rounds every slot's row up
+            # to whole pages too (max_len // page_size undercounts
+            # whenever page_size does not divide max_len)
+            "fixed_equiv_bytes": page_bytes * self.n_slots * self.nb,
+            "overcommit": self.overcommit,
+            **{k: v for k, v in self.sched_stats.items()},
         }
+        if self.prefix_cache is not None:
+            rep["prefix_cached_pages"] = len(self.prefix_cache)
+            rep["prefix_outstanding_refs"] = \
+                self.prefix_cache.outstanding_refs
+        return rep
 
     # ---- drive to completion --------------------------------------------
     def run(self, requests: List[Request]) -> List[GenerationResult]:
@@ -565,6 +1004,22 @@ class Scheduler:
         come back in the order the requests were given."""
         for r in requests:
             self.submit(r)
+        idle = 0
         while self.waiting or any(s is not None for s in self.slots):
+            before = len(self.results)
             self.step()
+            if any(s is not None for s in self.slots) or \
+                    len(self.results) != before or \
+                    any(_entry_req(e).arrival >= self.tick
+                        for e in self.waiting):
+                idle = 0
+            else:
+                idle += 1          # nothing live, nothing admissible
+                if idle > len(self.waiting) + 2:
+                    free = self.allocator.free_count if self.paged else "n/a"
+                    rsv = self.allocator.reserved if self.paged else 0
+                    raise RuntimeError(
+                        f"admission deadlock: {len(self.waiting)} queued "
+                        f"requests, none admissible (free={free}, "
+                        f"reserved={rsv})")
         return [self.results[r.uid] for r in requests]

@@ -31,7 +31,8 @@ from repro.analysis import (ShapeOnlyMesh, chunk_widths,
                             footprint_findings, generate_signatures,
                             lint_engine, lint_sharding, lint_traced_fn,
                             production_mesh_shape, serve_signatures,
-                            validate_decode_state, validate_serving_tree)
+                            validate_decode_state, validate_scheduler,
+                            validate_serving_tree)
 from repro.configs import REGISTRY
 from repro.dist.hlo_analysis import input_output_aliases, shape_census
 from repro.dist.sharding import (ShardingDropWarning, collect_spec_events,
@@ -218,6 +219,102 @@ def test_wrong_slot_count_is_pc1():
     table = np.zeros((1, 3, 4), np.int32)
     assert _errors(validate_decode_state(_paged_state(table), n_slots=2),
                    "PC1")
+
+
+def test_refcounted_shared_page_is_not_pc2():
+    """Multi-slot ownership is deliberate when the prefix cache's
+    refcount ledger books the page — PC2 stays silent."""
+    table = np.zeros((1, 2, 4), np.int32)
+    table[0, 0, 0] = table[0, 1, 0] = 3
+    findings = validate_decode_state(_paged_state(table), n_slots=2,
+                                     refcounts={3: 2})
+    assert not [f for f in findings if f.rule == "PC2"]
+
+
+# ---------------------------------------------------------------------------
+# scheduler ledger validation (PX1-PX3)
+# ---------------------------------------------------------------------------
+
+def _ledger_sched():
+    """Duck-typed scheduler fixture: slot 0 aliases one registered shared
+    page and owns one private page, slot 1 is free — every ledger closes."""
+    import types
+
+    from repro.serve.scheduler import PageAllocator, PrefixCache, _Slot
+    alloc = PageAllocator(16)
+    shared, private = alloc.alloc(2)
+    pc = PrefixCache()
+    pc.register(b"h0", shared)
+    slot = _Slot(req=None, index=6, last_tok=0, generated=[],
+                 admitted_tick=0, pages=[private], shared_pages=[shared],
+                 prefix_hashes=[b"h0"])
+    tables = np.zeros((2, 4), np.int32)
+    tables[0, :2] = [shared, private]
+    return types.SimpleNamespace(paged=True, page_size=4, n_slots=2,
+                                 tables=tables, slots=[slot, None],
+                                 allocator=alloc, prefix_cache=pc)
+
+
+def test_scheduler_ledger_clean():
+    assert not validate_scheduler(_ledger_sched())
+
+
+def test_refcount_mismatch_is_px1():
+    sched = _ledger_sched()
+    sched.prefix_cache.acquire(1)          # phantom reference, no aliaser
+    errs = _errors(validate_scheduler(sched), "PX1")
+    assert errs and "refcount" in errs[0].message
+
+
+def test_unregistered_shared_page_is_px1():
+    sched = _ledger_sched()
+    pc = sched.prefix_cache
+    page = pc._page_of.pop(b"h0")          # drop the registry entry only
+    pc._hash_of.pop(page), pc._refs.pop(page)
+    assert any("not registered" in f.message
+               for f in _errors(validate_scheduler(sched), "PX1"))
+
+
+def test_double_owned_page_is_px1():
+    from repro.serve.scheduler import _Slot
+    sched = _ledger_sched()
+    thief = _Slot(req=None, index=4, last_tok=0, generated=[],
+                  admitted_tick=1, pages=[sched.slots[0].pages[0]])
+    sched.slots[1] = thief
+    sched.tables[1, 0] = thief.pages[0]
+    assert any("more than once" in f.message
+               for f in _errors(validate_scheduler(sched), "PX1"))
+
+
+def test_allocator_drift_is_px1():
+    sched = _ledger_sched()
+    sched.allocator.alloc(1)               # drawn but booked nowhere
+    assert any("allocator" in f.message
+               for f in _errors(validate_scheduler(sched), "PX1"))
+
+
+def test_write_frontier_inside_shared_region_is_px2():
+    sched = _ledger_sched()
+    sched.slots[0].index = 3               # shared region is [0, 4)
+    assert _errors(validate_scheduler(sched), "PX2")
+
+
+def test_stale_parked_row_is_px3():
+    sched = _ledger_sched()
+    sched.tables[1, 0] = 5                 # free slot still references it
+    assert _errors(validate_scheduler(sched), "PX3")
+
+
+def test_table_ledger_mismatch_is_px3():
+    sched = _ledger_sched()
+    sched.tables[0, [0, 1]] = sched.tables[0, [1, 0]]   # swapped order
+    assert _errors(validate_scheduler(sched), "PX3")
+
+
+def test_nonpaged_scheduler_validates_trivially():
+    import types
+    sched = types.SimpleNamespace(paged=False, tables=None)
+    assert not validate_scheduler(sched)
 
 
 # ---------------------------------------------------------------------------

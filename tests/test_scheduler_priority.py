@@ -1,0 +1,274 @@
+"""Priority scheduling, preemption, and prefix-cache unit tests.
+
+Fast-tier companions to the randomized stress legs in
+tests/test_serving_stress.py:
+
+* :class:`PageAllocator` free-list determinism (min-heap: allocation
+  always returns the globally lowest free id, even after churn) and
+  overcommit admission arithmetic;
+* ``cache_report`` charges the fixed-width equivalent its *ceil* block
+  count (``max_len`` not divisible by ``page_size`` rounds up, exactly
+  as a fixed layout would);
+* priority classes order admission (higher first, ties by arrival then
+  submission) and blocked requests are skipped over, not head-of-line
+  stalled;
+* ``park_slot``/``restore_slot`` round-trip a slot's pool pages and
+  state rows bit-identically through host memory;
+* the copy-on-write guard privatizes shared prefix pages without
+  perturbing tokens, refcounts, or pool accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.models.api import build
+from repro.models.common import QuantConfig
+from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve.scheduler import PageAllocator, PrefixCache
+
+_ENGINES = {}
+
+
+def _engine(kv_bits=8):
+    if kv_bits not in _ENGINES:
+        cfg = REGISTRY["phi3-mini-3.8b"].tiny(dtype="float32").with_quant(
+            QuantConfig(mode="fake", n_bits=8, act_bits=8))
+        api = build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        _ENGINES[kv_bits] = ServeEngine(api, params, kv_quant_bits=kv_bits)
+    return _ENGINES[kv_bits]
+
+
+def _req(uid, n_tokens, max_new=4, arrival=0, priority=0, seed=None,
+         tokens=None):
+    cfg = _engine().api.cfg
+    if tokens is None:
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(seed if seed is not None else 40 + uid),
+            (1, n_tokens), 0, cfg.vocab).astype(jnp.int32)
+    return Request(uid=uid, inputs={"tokens": tokens},
+                   sampling=SamplingParams(max_new_tokens=max_new,
+                                           priority=priority),
+                   arrival=arrival)
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator: min-ordered free list + overcommit arithmetic
+# ---------------------------------------------------------------------------
+
+def test_allocator_always_pops_lowest_free_id():
+    """Regression: release() used to append released ids to the tail of
+    the free list, so the next alloc returned the just-released pages
+    instead of the globally lowest id — churn made traces
+    order-dependent.  The min-heap must always pop the lowest."""
+    a = PageAllocator(10)
+    first = a.alloc(5)
+    assert first == [1, 2, 3, 4, 5]
+    a.release([2, 4])
+    assert a.alloc(3) == [2, 4, 6], "released ids must re-sort into place"
+    a.release([1, 5, 3])
+    # lowest-first across releases from different eras, in one alloc
+    assert a.alloc(4) == [1, 3, 5, 7]
+    a.release([6, 2, 7, 1, 3, 4, 5])
+    assert a.alloc(2) == [1, 2]
+
+
+def test_allocator_release_order_does_not_change_allocation():
+    """The same multiset of frees yields the same allocations regardless
+    of release order (the determinism the class docstring promises)."""
+    def churn(release_order):
+        a = PageAllocator(8)
+        a.alloc(7)
+        for p in release_order:
+            a.release([p])
+        return a.alloc(4)
+    assert churn([3, 1, 7, 5, 2]) == churn([7, 5, 3, 2, 1]) \
+        == churn([1, 2, 3, 5, 7]) == [1, 2, 3, 5]
+
+
+def test_allocator_overcommit_admission():
+    a = PageAllocator(5, overcommit=2.0)       # 4 live pages, cap 8
+    assert a.can_admit(8) and not a.can_admit(9)
+    assert not a.can_admit(5, now=5), "immediate need is physical"
+    a.reserved += 6
+    assert a.can_admit(2) and not a.can_admit(3)
+    strict = PageAllocator(5)                  # overcommit 1.0 = old rule
+    assert strict.can_admit(4) and not strict.can_admit(5)
+    with pytest.raises(ValueError, match="overcommit"):
+        PageAllocator(5, overcommit=0.5)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache ledger
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_refcounts_and_release():
+    pc = PrefixCache()
+    h1 = PrefixCache.chain(b"", np.arange(4))
+    h2 = PrefixCache.chain(h1, np.arange(4, 8))
+    assert h1 != h2
+    pc.register(h1, 3)
+    pc.register(h2, 5)
+    assert pc.lookup(h1) == 3 and pc.lookup(b"missing") is None
+    pc.acquire(3)
+    assert pc.refcounts == {3: 2, 5: 1}
+    assert pc.release(3) is False              # one ref left
+    assert pc.release(5) is True               # page freed to the caller
+    assert pc.release(3) is True
+    assert len(pc) == 0 and pc.outstanding_refs == 0
+    assert pc.hits == 1 and pc.lookups == 2
+    with pytest.raises(ValueError, match="already registered"):
+        pc.register(h1, 7)
+        pc.register(h1, 8)
+
+
+# ---------------------------------------------------------------------------
+# cache_report: ceil fixed-width equivalent
+# ---------------------------------------------------------------------------
+
+def test_cache_report_fixed_equiv_uses_ceil_blocks():
+    """Regression: ``fixed_equiv_bytes`` used floor division
+    (``max_len // page_size``), understating the fixed layout whenever
+    the page size does not divide max_len — a fixed cache rounds every
+    row up to whole pages too."""
+    eng = _engine()
+    reqs = [_req(0, 4, max_new=3)]
+    sched = eng.make_scheduler(reqs, n_slots=2, max_len=10, page_size=4)
+    sched.run(reqs)
+    rep = sched.cache_report()
+    assert sched.nb == 3                       # ceil(10 / 4)
+    assert rep["fixed_equiv_bytes"] == rep["page_bytes"] * 2 * 3, \
+        "floor division would charge only 2 blocks per slot"
+
+
+# ---------------------------------------------------------------------------
+# priority classes + skip-over admission
+# ---------------------------------------------------------------------------
+
+def test_higher_priority_admitted_first():
+    """Both requests visible on tick 0 with one slot: the later-submitted
+    high-priority request decodes first; ties fall back to submission
+    order."""
+    eng = _engine()
+    lo = _req(0, 4, max_new=3, priority=0)
+    hi = _req(1, 4, max_new=3, priority=5)
+    sched = eng.make_scheduler([lo, hi], n_slots=1, page_size=4)
+    res = {r.uid: r for r in sched.run([lo, hi])}
+    assert res[1].admitted_tick < res[0].admitted_tick
+    ref = {u: np.asarray(eng.generate(
+        {"tokens": [lo, hi][u].inputs["tokens"]},
+        max_new=3))[0].tolist() for u in (0, 1)}
+    assert res[0].tokens == ref[0] and res[1].tokens == ref[1]
+    tie_a, tie_b = _req(0, 4, max_new=2), _req(1, 4, max_new=2)
+    sched = eng.make_scheduler([tie_a, tie_b], n_slots=1, page_size=4)
+    res = {r.uid: r for r in sched.run([tie_a, tie_b])}
+    assert res[0].admitted_tick < res[1].admitted_tick
+
+
+def test_blocked_request_does_not_stall_queue():
+    """A high-priority request whose pages don't fit yet must be skipped
+    over, not block admission of requests behind it (the old scheduler
+    stalled head-of-line)."""
+    eng = _engine()
+    # big needs ceil((8 + 8 - 1) / 4) = 4 pages; each small promises 2
+    big = _req(0, 8, max_new=8, priority=9)
+    smalls = [_req(i, 2, max_new=4, priority=0) for i in (1, 2)]
+    # pool of 4 live pages: big fits ONLY into an empty pool
+    sched = eng.make_scheduler([big] + smalls, n_slots=2, page_size=4,
+                               n_pages=5, max_len=16)
+    # occupy the pool so big is blocked at tick 0
+    sched.submit(smalls[0])
+    sched.step()
+    assert sched.slots[0] is not None
+    sched.submit(big)
+    sched.submit(smalls[1])
+    sched.step()
+    # big (priority 9) heads the queue but cannot fit; small #2 must have
+    # been admitted past it into the second slot
+    assert any(s is not None and s.req.uid == 2 for s in sched.slots), \
+        "blocked high-priority request stalled the queue"
+    assert all(not (s is not None and s.req.uid == 0)
+               for s in sched.slots)
+    while sched.waiting or any(s is not None for s in sched.slots):
+        sched.step()
+    assert sched.results[0].tokens == np.asarray(eng.generate(
+        {"tokens": big.inputs["tokens"]}, max_new=8))[0].tolist()
+    assert sched.allocator.free_count == 4 and sched.allocator.reserved == 0
+
+
+# ---------------------------------------------------------------------------
+# park / restore: bit-identical host round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_park_restore_roundtrip_bit_identical(kv_bits):
+    """Snapshot a mid-decode slot to host memory, corrupt its pool pages
+    and state row on device, restore — every leaf must come back
+    bit-identical (quantized payloads cross as raw bytes, no dequant)."""
+    eng = _engine(kv_bits)
+    reqs = [_req(0, 6, max_new=8), _req(1, 3, max_new=8)]
+    sched = eng.make_scheduler(reqs, n_slots=2, page_size=4)
+    for r in reqs:
+        sched.submit(r)
+    for _ in range(4):
+        sched.step()
+    s = sched.slots[0]
+    assert s is not None and s.pages
+    before = jax.tree_util.tree_map(np.asarray, sched.state)
+    rec = eng.park_slot(sched.state, 0, s.block_pages)
+    corrupted = sched.state
+    for p in s.block_pages:                    # trash-page bytes over it
+        corrupted = eng.copy_pool_page(corrupted, 0, p)
+    restored = eng.restore_slot(corrupted, 0, s.block_pages, rec)
+    after = jax.tree_util.tree_map(np.asarray, restored)
+    flat_b, _ = jax.tree_util.tree_flatten(before)
+    flat_a, _ = jax.tree_util.tree_flatten(after)
+    for xb, xa in zip(flat_b, flat_a):
+        assert xb.dtype == xa.dtype and np.array_equal(xb, xa), \
+            "park/restore round trip is not bit-identical"
+    with pytest.raises(ValueError, match="snapshot holds"):
+        eng.restore_slot(corrupted, 0, s.block_pages[:-1], rec)
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write guard
+# ---------------------------------------------------------------------------
+
+def test_cow_privatizes_shared_pages_without_token_drift():
+    """Force the (structurally unreachable) divergent-write path: after a
+    second request aliases the first's prompt pages, privatize them via
+    ``_cow_from`` mid-flight — refcounts drop, the block table repoints
+    at fresh copies, and the emitted tokens still match one-shot."""
+    eng = _engine()
+    cfg = eng.api.cfg
+    shared = jax.random.randint(jax.random.PRNGKey(5), (1, 9), 0,
+                                cfg.vocab).astype(jnp.int32)
+    reqs = [_req(0, 0, max_new=6, tokens=shared),
+            _req(1, 0, max_new=6, arrival=1, tokens=shared)]
+    refs = [np.asarray(eng.generate({"tokens": shared},
+                                    max_new=6))[0].tolist()] * 2
+    sched = eng.make_scheduler(reqs, n_slots=2, page_size=4,
+                               prefix_cache=True)
+    for r in reqs:
+        sched.submit(r)
+    sched.step()                               # uid 0 admits + registers
+    sched.step()                               # uid 1 admits with 2 hits
+    follower = next(i for i, s in enumerate(sched.slots)
+                    if s is not None and s.req.uid == 1)
+    s = sched.slots[follower]
+    assert s.n_shared == 2, "prefix hit did not alias the shared pages"
+    in_use = sched.allocator.in_use
+    sched._cow_from(follower, 0)
+    assert s.n_shared == 0 and len(s.pages) == s.n_blocks
+    assert sched.sched_stats["cow_copies"] == 2
+    assert sched.allocator.in_use == in_use + 2    # private copies added
+    assert not sched.validate(), sched.validate()
+    while sched.waiting or any(sl is not None for sl in sched.slots):
+        sched.step()
+    for uid in (0, 1):
+        assert sched.results[uid].tokens == refs[uid], \
+            "copy-on-write perturbed decode"
+    assert sched.allocator.in_use == 0
+    assert sched.prefix_cache.outstanding_refs == 0

@@ -171,6 +171,36 @@ def test_sampling_reproducible_and_respects_top_k():
     assert len(r1[0].tokens) == len(greedy[0].tokens) == 6
 
 
+def test_top_k_keeps_exactly_k_on_tied_logits():
+    """Regression: the old ``l < kth`` threshold mask kept EVERY logit
+    tied with the k-th value, so a plateau of equal logits widened the
+    filter past top_k.  The rank mask must keep exactly k candidates,
+    breaking ties by token id."""
+    from repro.serve.sampling import sample_token
+    v = 12
+    # logits [9, 9, 9, 9, 8, 8, 8, 0, ...]: with k=2 the old mask kept 4
+    # (tiers one logit apart so every survivor is drawn with probability
+    # >= ~8% — 400 seeds cover the full surviving set with margin)
+    logits = jnp.asarray([9., 9., 9., 9., 8., 8., 8.] + [0.] * (v - 7))
+    sp = SamplingParams(temperature=1.0, top_k=2)
+    hits = set()
+    for s in range(200):
+        hits.add(int(sample_token(logits, sp, jax.random.PRNGKey(s))))
+    assert hits == {0, 1}, f"tied logits leaked past top_k: {hits}"
+    # plateau straddling the cut: k=5 must stop inside the 8s, by token id
+    sp5 = SamplingParams(temperature=1.0, top_k=5)
+    hits5 = set()
+    for s in range(400):
+        hits5.add(int(sample_token(logits, sp5, jax.random.PRNGKey(s))))
+    assert hits5 == {0, 1, 2, 3, 4}, hits5
+    # untied logits: unchanged behavior (the k best survive)
+    distinct = jnp.asarray([float(i) for i in range(v)])
+    hits_d = set()
+    for s in range(400):
+        hits_d.add(int(sample_token(distinct, sp5, jax.random.PRNGKey(s))))
+    assert hits_d <= {v - 1, v - 2, v - 3, v - 4, v - 5}, hits_d
+
+
 # ---------------------------------------------------------------------------
 # quantized-at-rest cache
 # ---------------------------------------------------------------------------

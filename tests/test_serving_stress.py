@@ -179,6 +179,83 @@ def test_bitplane_backend_randomized_serving(case):
     assert (sched.tables == 0).all(), "block table not returned to trash"
 
 
+# ---------------------------------------------------------------------------
+# preemption + shared-prefix leg: overcommitted admission parks victims to
+# host memory and resumes them bit-identically, while duplicated prompt
+# prefixes ride the refcounted prefix cache — tokens must still match
+# one-shot generate, and the drained pool must hold zero pages AND zero
+# outstanding refcounts
+# ---------------------------------------------------------------------------
+
+@st.composite
+def preemption_workload(draw):
+    arch = draw(st.sampled_from(["phi3-mini-3.8b", "granite-moe-3b-a800m"]))
+    kv_bits = draw(st.sampled_from([32, 8, 4]))
+    n_slots = draw(st.integers(2, 4))
+    page_size = draw(st.sampled_from([3, 4]))          # always paged
+    prefill_chunk = draw(st.sampled_from([0, 4]))
+    overcommit = draw(st.sampled_from([1.5, 2.0, 3.0]))
+    shared_len = draw(st.sampled_from([5, 8, 9]))      # duplicated prefix
+    n_req = draw(st.integers(4, 7))
+    reqs = [dict(tail_len=draw(st.integers(1, 6)),
+                 shared=draw(st.booleans()),
+                 max_new=draw(st.integers(1, 8)),
+                 arrival=draw(st.integers(0, 6)),
+                 priority=draw(st.integers(0, 2)),
+                 seed=draw(st.integers(0, 2 ** 16)))
+            for _ in range(n_req)]
+    return (arch, kv_bits, n_slots, page_size, prefill_chunk, overcommit,
+            shared_len, reqs)
+
+
+@given(preemption_workload())
+@settings(max_examples=4, deadline=None)
+def test_randomized_preemption_and_prefix_sharing(case):
+    (arch, kv_bits, n_slots, page_size, prefill_chunk, overcommit,
+     shared_len, specs) = case
+    eng = _engine(arch, kv_bits)
+    cfg = eng.api.cfg
+    shared = jax.random.randint(jax.random.PRNGKey(99), (1, shared_len), 0,
+                                cfg.vocab).astype(jnp.int32)
+    requests, expected, worst = [], [], 0
+    for uid, spec in enumerate(specs):
+        tail = jax.random.randint(jax.random.PRNGKey(spec["seed"]),
+                                  (1, spec["tail_len"]), 0,
+                                  cfg.vocab).astype(jnp.int32)
+        toks = jnp.concatenate([shared, tail], 1) if spec["shared"] else tail
+        expected.append(np.asarray(eng.generate(
+            {"tokens": toks}, max_new=spec["max_new"]))[0].tolist())
+        requests.append(Request(
+            uid=uid, inputs={"tokens": toks},
+            sampling=SamplingParams(max_new_tokens=spec["max_new"],
+                                    priority=spec["priority"]),
+            arrival=spec["arrival"]))
+        worst = max(worst, -(-(toks.shape[1] + spec["max_new"] - 1)
+                             // page_size))
+    # pool sized to the single largest request plus one page: admission
+    # stays possible for everything, but concurrent decode growth under
+    # overcommit MUST preempt
+    sched = eng.make_scheduler(requests, n_slots=n_slots,
+                               page_size=page_size, n_pages=worst + 2,
+                               prefill_chunk=prefill_chunk,
+                               overcommit=overcommit, prefix_cache=True)
+    results = sched.run(requests)
+    for r, ref in zip(results, expected):
+        assert r.tokens == ref, (
+            f"uid {r.uid}: {r.tokens} != one-shot {ref} "
+            f"(slots={n_slots} page={page_size} chunk={prefill_chunk} "
+            f"kv={kv_bits} overcommit={overcommit} "
+            f"preemptions={sched.sched_stats['preemptions']})")
+    rep = sched.cache_report()
+    assert rep["pages_in_use"] == 0, f"leaked pages: {rep}"
+    assert sched.allocator.free_count == sched.allocator.n_pages - 1
+    assert sched.allocator.reserved == 0, "leaked page reservations"
+    assert (sched.tables == 0).all(), "block table not returned to trash"
+    assert rep["prefix_outstanding_refs"] == 0, f"leaked refcounts: {rep}"
+    assert len(sched.prefix_cache) == 0, "drained cache still holds pages"
+    assert not sched.validate(), sched.validate()
+
+
 def test_tight_pool_blocks_admission_then_drains():
     """A pool far smaller than worst case forces head-of-line waiting;
     every request must still finish with exact tokens and no page leaks."""
