@@ -27,9 +27,9 @@ from typing import Any, Dict, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .contracts import (validate_allocation, validate_decode_state,
-                        validate_draft_truncation, validate_scheduler,
-                        validate_serving_tree)
+from .contracts import (validate_allocation, validate_checkpoint,
+                        validate_decode_state, validate_draft_truncation,
+                        validate_scheduler, validate_serving_tree)
 from .footprint import (CompileSig, chunk_widths, footprint_findings,
                         generate_signatures, scheduler_footprint,
                         serve_signatures)
@@ -45,9 +45,9 @@ __all__ = [
     "example_batch", "fallback_leaf_paths", "footprint_findings",
     "generate_signatures", "lint_engine", "lint_sharding",
     "lint_traced_fn", "production_mesh_shape", "scheduler_footprint",
-    "serve_signatures", "validate_allocation", "validate_decode_state",
-    "validate_draft_truncation", "validate_scheduler",
-    "validate_serving_tree",
+    "serve_signatures", "validate_allocation", "validate_checkpoint",
+    "validate_decode_state", "validate_draft_truncation",
+    "validate_scheduler", "validate_serving_tree",
 ]
 
 

@@ -60,6 +60,17 @@ Rules (cross-referenced by the contract appendix in ``kernels/ops.py``):
   of the deployed tree: shared payloads, each block keeping the
   contiguous top run of its min(k, occupancy) highest live planes
   (:func:`validate_draft_truncation`).
+* ``CK1``  checkpoint META is well-formed (:func:`validate_checkpoint`):
+  known format, manifest entries carry (key, shape, dtype, spec), every
+  spec axis exists in ``mesh_axes`` and its axis group divides the dim
+  (chunking must tile each leaf exactly), sanitized npz keys are unique.
+* ``CK2``  shard set is complete: every ``shard_*-of-*.npz`` file META
+  promises exists and every manifest leaf's owning shards hold a chunk
+  of exactly the expected shape and dtype — a torn or elastically
+  mis-assembled save is caught before restore.
+* ``CK3``  no orphans: shard files hold no arrays absent from the
+  manifest, and the checkpoint directory has no stale ``.tmp``/``.old``
+  commit debris (warning — a crashed save's leftovers).
 """
 from __future__ import annotations
 
@@ -494,6 +505,146 @@ def validate_scheduler(sched) -> List[Finding]:
             if [int(p) for p in row[:len(bp)]] != bp or row[len(bp):].any():
                 c.err("PX3", f"slot {i} table row {row.tolist()} does not "
                              f"mirror its book-kept pages {bp}")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# checkpoint shard-manifest validation (CK1-CK3)
+# ---------------------------------------------------------------------------
+
+def validate_checkpoint(path: str) -> List[Finding]:
+    """CK1-CK3: validate a sharded checkpoint directory on disk.
+
+    Static (META vs. file set vs. npz headers) — no leaf is assembled,
+    so it is cheap even for multi-GB checkpoints.  Legacy (format 1)
+    monolithic checkpoints validate trivially."""
+    import json
+    import math
+    import os
+    import re as _re
+
+    findings: List[Finding] = []
+    c = _Ctx(findings, path)
+    meta_path = os.path.join(path, "META")
+    if not os.path.exists(meta_path):
+        c.err("CK1", "no META file: not a checkpoint directory")
+        return findings
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except Exception as e:
+        c.err("CK1", f"META is not valid JSON ({type(e).__name__}: {e})")
+        return findings
+    fmt = meta.get("format", 1)
+    if fmt == 1:
+        if not os.path.exists(os.path.join(path, "arrays.npz")):
+            c.err("CK2", "legacy checkpoint is missing arrays.npz")
+        return findings
+    if fmt != 2:
+        c.err("CK1", f"unknown checkpoint format {fmt!r}")
+        return findings
+    manifest = meta.get("manifest")
+    mesh_axes = meta.get("mesh_axes", {})
+    axes = meta.get("shard_axes", [])
+    hosts = meta.get("hosts", [])
+    n = meta.get("n_shards", 0)
+    if not isinstance(manifest, dict) or not isinstance(hosts, list) \
+            or len(hosts) != n:
+        c.err("CK1", f"META manifest/hosts malformed "
+                     f"(n_shards={n}, hosts={len(hosts) if isinstance(hosts, list) else '?'})")
+        return findings
+    from ..ckpt.checkpoint import _chunk_slices
+    sanitized: dict = {}
+    for key, ent in manifest.items():
+        sub = f"[{key!r}]"
+        if not all(f in ent for f in ("key", "shape", "dtype", "spec")):
+            c.err("CK1", f"manifest entry lacks key/shape/dtype/spec fields",
+                  sub)
+            continue
+        sk = ent["key"]
+        if sk in sanitized:
+            c.err("CK1", f"sanitized npz key {sk!r} collides with "
+                         f"{sanitized[sk]!r}", sub)
+        sanitized[sk] = key
+        shape, spec = ent["shape"], ent["spec"]
+        if len(spec) != len(shape):
+            c.err("CK1", f"spec has {len(spec)} entries for a rank-"
+                         f"{len(shape)} leaf", sub)
+            continue
+        for dim, entry in zip(shape, spec):
+            if not entry:
+                continue
+            group = 1
+            for a in entry:
+                if a not in mesh_axes:
+                    c.err("CK1", f"spec axis {a!r} not in the saving "
+                                 f"mesh axes {sorted(mesh_axes)}", sub)
+                    group = 0
+                    break
+                group *= mesh_axes[a]
+            if group and dim % group:
+                c.err("CK1", f"dim {dim} is not divisible by its axis "
+                             f"group {entry} (size {group}): chunks "
+                             f"cannot tile the leaf", sub)
+    # -- CK2: every promised shard file exists and holds the right chunks
+    shard_files = {h: f"shard_{h:05d}-of-{n:05d}.npz" for h in range(n)}
+    headers: dict = {}
+    for h, name in shard_files.items():
+        fp = os.path.join(path, name)
+        if not os.path.exists(fp):
+            c.err("CK2", f"missing shard file {name} "
+                         f"(host {hosts[h] if h < len(hosts) else '?'})")
+            continue
+        try:
+            z = np.load(fp)
+            headers[h] = {k: (z[k].shape, str(z[k].dtype)) for k in z.files}
+            z.close()
+        except Exception as e:
+            c.err("CK2", f"unreadable shard file {name} "
+                         f"({type(e).__name__}: {e})")
+    coord_maps = [dict(zip(axes, co)) for co in hosts]
+    for key, ent in manifest.items():
+        if not all(f in ent for f in ("key", "shape", "dtype", "spec")):
+            continue
+        shape = tuple(ent["shape"])
+        for h, coords in enumerate(coord_maps):
+            if h not in headers:
+                continue
+            sl = _chunk_slices(shape, ent["spec"], mesh_axes, coords)
+            if sl is None:
+                if ent["key"] in headers[h]:
+                    c.err("CK3", f"shard {h} holds a chunk of "
+                                 f"[{key!r}] it does not own")
+                continue
+            got = headers[h].get(ent["key"])
+            want = tuple(len(range(*s.indices(d)))
+                         for s, d in zip(sl, shape))
+            if got is None:
+                c.err("CK2", f"shard {h} is missing its chunk of "
+                             f"[{key!r}]")
+            elif got != (want, ent["dtype"]):
+                c.err("CK2", f"shard {h} chunk of [{key!r}] is "
+                             f"{got[1]}{got[0]}, expected "
+                             f"{ent['dtype']}{want}")
+    # -- CK3: orphan arrays + commit debris
+    expected = {ent["key"] for ent in manifest.values() if "key" in ent}
+    for h, hdr in headers.items():
+        orphans = sorted(set(hdr) - expected)
+        if orphans:
+            c.err("CK3", f"shard {h} holds {len(orphans)} arrays absent "
+                         f"from the manifest: {orphans[:4]}")
+    parent = os.path.dirname(os.path.abspath(path))
+    base = os.path.basename(os.path.abspath(path))
+    for name in os.listdir(parent):
+        if _re.fullmatch(_re.escape(base) + r"\.(tmp|old)\.[0-9a-f]{8}",
+                         name):
+            c.warn("CK3", f"stale commit debris {name!r} next to the "
+                          f"checkpoint (crashed save; gc will sweep it)")
+    if not findings:
+        findings.append(Finding(
+            severity="info", pass_name="contracts", rule="CK0",
+            path=path, message=f"checkpoint valid: {len(manifest)} leaves "
+                               f"across {n} shard(s), mesh {mesh_axes}"))
     return findings
 
 

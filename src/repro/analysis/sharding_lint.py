@@ -11,8 +11,14 @@ pass replays the full spec derivation under
 :func:`~repro.dist.sharding.collect_spec_events` and turns every drop
 into a path-qualified finding:
 
+* ``axis-padded`` (info) — the mesh axis does not divide the dim but
+  padded sharding keeps it: the placement boundary zero-pads and the
+  consumer masks (the healthy resolution of what used to be an
+  ``axis-indivisible`` drop).
 * ``axis-indivisible`` (warning) — the mesh axis exists but does not
-  divide the dim; the padded-sharding follow-up's worklist (ROADMAP).
+  divide the dim AND padding was disabled for that call site (in-graph
+  ``with_sharding_constraint``, batch placement): the dim serves
+  replicated.
 * ``axis-absent`` / ``axis-used`` (info) — expected degradation when
   linting a smaller mesh than the rules target.
 * ``mesh-axis-unused`` (warning) — a >1-sized mesh axis no parameter
@@ -89,7 +95,13 @@ def lint_sharding(params: Any, mesh, batch: Any = None, state: Any = None,
             batch_pspecs(batch)
         if state is not None:
             cache_pspecs(state, n_slots)
+    from ..dist.sharding import SpecPad
     for d in events:
+        if isinstance(d, SpecPad):
+            findings.append(Finding(severity="info", pass_name="sharding",
+                                    rule="axis-padded", path=d.label,
+                                    message=d.message()))
+            continue
         severity, rule = _DROP_RULES.get(d.reason, ("warning", "axis-drop"))
         findings.append(Finding(severity=severity, pass_name="sharding",
                                 rule=rule, path=d.label,

@@ -1,1 +1,2 @@
-from .checkpoint import CheckpointManager, restore_tree, save_tree
+from .checkpoint import (CheckpointManager, CheckpointMismatchError,
+                         CheckpointReader, restore_tree, save_tree)

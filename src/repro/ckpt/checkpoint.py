@@ -1,13 +1,40 @@
-"""Fault-tolerant checkpointing with atomic commit + elastic resharding.
+"""Crash-safe sharded checkpointing with elastic restore.
 
-Layout: ``<dir>/step_<N>/{arrays.npz, META}``.  Writes go to a temp dir and
-are renamed into place only after fsync — a crash mid-write never corrupts
-the latest checkpoint.  Restore maps saved arrays onto a *template* pytree
-(from ``api.abstract_params()``) by path, then (optionally) device_puts each
-leaf with the sharding of the *currently live* mesh — which is what lets a
-job restart on a different mesh shape (elastic scaling).  Static pytree
-structure (QuantizedTensor specs etc.) comes from the template, so only
-array data lives on disk.
+Layout (format 2)::
+
+    <dir>/step_<N>/
+        META                          # JSON: manifest + mesh + extra
+        shard_00000-of-0000M.npz      # one file per (emulated) host
+
+``save_tree`` splits every array leaf into per-mesh-coordinate chunks by
+its fitted PartitionSpec and writes each chunk exactly once, into the
+shard file of the host that owns it (hosts are enumerated over the mesh
+axes any leaf actually uses; with no mesh there is a single shard file).
+META records, per leaf, the true shape, dtype, spec entries, and the
+saving mesh's axis sizes — so ``restore_tree`` re-assembles each leaf
+from the shard manifests and re-places it onto a *different* live mesh
+(elastic scaling), never needing the saving topology.
+
+Commit protocol (crash-safe at every point):
+
+1. write everything into a uniquely named ``<path>.tmp.<nonce>`` dir,
+   ``fsync`` each file and the tmp dir itself;
+2. if ``<path>`` exists, atomically move it aside to
+   ``<path>.old.<nonce>`` (never deleted before the new data is live);
+3. ``rename(tmp, path)`` and ``fsync`` the parent directory so the
+   rename itself is durable;
+4. only then delete the old copy.
+
+A crash between (2) and (3) leaves both the complete tmp dir and the
+old copy on disk — no window ever destroys the only copy of a step.
+``CheckpointManager._gc`` sweeps stale ``.tmp.*`` / ``.old.*`` debris.
+
+Restore maps saved arrays onto a *template* pytree by path; a
+template/manifest disagreement raises :class:`CheckpointMismatchError`
+listing the missing and extra keys (``partial=True`` opts into keeping
+template values for missing keys and ignoring extras — the schema-drift
+escape hatch).  Static pytree structure (QuantizedTensor specs etc.)
+comes from the template, so only array data lives on disk.
 """
 from __future__ import annotations
 
@@ -16,79 +43,360 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import uuid
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+CKPT_FORMAT = 2
 
-def _flatten_with_paths(tree) -> Dict[str, Any]:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+def _flatten_with_paths(tree, is_leaf=None) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
     return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
 
 
 def _sanitize(key: str) -> str:
-    return re.sub(r"[^A-Za-z0-9_.]", "_", key)
+    """Collision-free npz key: every char outside [A-Za-z0-9.] becomes
+    ``_xx`` (two hex digits), and ``_`` itself escapes to ``_5f`` — an
+    injective encoding, so distinct tree paths (``['a b']`` vs
+    ``['a_b']``) can never share an npz entry."""
+    return re.sub(r"[^A-Za-z0-9.]",
+                  lambda m: f"_{ord(m.group(0)):02x}", key)
 
 
-def save_tree(tree: Any, path: str, extra_meta: Optional[Dict] = None):
-    """Atomic write of all array leaves of ``tree`` to ``path``."""
-    tmp = path + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp, exist_ok=True)
-    flat = _flatten_with_paths(tree)
-    arrays, manifest = {}, {}
-    for k, v in flat.items():
-        sk = _sanitize(k)
-        manifest[k] = sk
-        arrays[sk] = np.asarray(jax.device_get(v))
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    with open(os.path.join(tmp, "META"), "w") as f:
-        json.dump({"manifest": manifest, "extra": extra_meta or {}}, f)
-    # fsync the directory contents before the atomic rename
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_tree(tmp: str) -> None:
     for name in os.listdir(tmp):
         fd = os.open(os.path.join(tmp, name), os.O_RDONLY)
-        os.fsync(fd)
-        os.close(fd)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+    _fsync_dir(tmp)
+
+
+def _commit_dir(tmp: str, path: str) -> None:
+    """Atomically make ``tmp`` live at ``path`` (see module docstring)."""
+    old = None
     if os.path.exists(path):
-        shutil.rmtree(path)
+        old = f"{path}.old.{uuid.uuid4().hex[:8]}"
+        os.rename(path, old)
     os.rename(tmp, path)
+    _fsync_dir(os.path.dirname(os.path.abspath(path)) or ".")
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+# --------------------------------------------------------------------------
+# sharded layout
+# --------------------------------------------------------------------------
+
+def _spec_entries(ps) -> List[Any]:
+    """JSON-able spec: one entry per dim — None or a list of axis names."""
+    out: List[Any] = []
+    for entry in tuple(ps):
+        if entry is None:
+            out.append(None)
+        else:
+            out.append(list(entry) if isinstance(entry, tuple)
+                       else [entry])
+    return out
+
+
+def _leaf_specs(flat: Dict[str, Any], mesh, specs) -> Dict[str, List[Any]]:
+    """Fitted, divisible (pad=False) spec entries per leaf keystr.
+
+    Chunking must tile each leaf exactly, so saving always fits with the
+    legacy drop rule — a padded-sharded *placement* still saves its true
+    (unpadded) array, which is what elastic restore wants."""
+    from ..dist.sharding import _leaf_spec, fit_spec, use_mesh
+    if mesh is None:
+        return {k: [None] * np.ndim(v) for k, v in flat.items()}
+    if specs is None:
+        # parameter path rules, keyed by the original tree keystr
+        with use_mesh(mesh):
+            return {k: _spec_entries(_leaf_spec(k, v, pad=False))
+                    for k, v in flat.items()}
+    spec_flat = _flatten_with_paths(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    out = {}
+    for k, v in flat.items():
+        ps = spec_flat.get(k)
+        shape = tuple(np.shape(v))
+        if ps is None:
+            out[k] = [None] * len(shape)
+        else:
+            out[k] = _spec_entries(fit_spec(ps, shape, mesh, label=k,
+                                            pad=False))
+    return out
+
+
+def _used_axes(leaf_specs: Dict[str, List[Any]]) -> List[str]:
+    axes: List[str] = []
+    for entries in leaf_specs.values():
+        for entry in entries:
+            for a in entry or ():
+                if a not in axes:
+                    axes.append(a)
+    return sorted(axes)
+
+
+def _host_grid(mesh_axes: Dict[str, int],
+               axes: Sequence[str]) -> List[Dict[str, int]]:
+    """One emulated host per coordinate tuple over ``axes`` (the mesh
+    axes any leaf spec uses).  A single-process save stands in for every
+    host of a real fleet; on a multi-process runtime each process would
+    write exactly its own coordinates' file."""
+    hosts: List[Dict[str, int]] = [{}]
+    for a in axes:
+        hosts = [dict(h, **{a: i}) for h in hosts
+                 for i in range(mesh_axes.get(a, 1))]
+    return hosts
+
+
+def _chunk_slices(shape: Sequence[int], entries: List[Any],
+                  mesh_axes: Dict[str, int],
+                  coords: Dict[str, int]) -> Optional[Tuple[slice, ...]]:
+    """The sub-slice of a leaf that the host at ``coords`` owns, or None
+    when another host owns the (replicated-dim) copy.  Ownership: the
+    host whose coordinates are 0 on every axis the leaf does NOT shard
+    over writes the chunk; sharded dims index by the host's coords."""
+    sl: List[slice] = []
+    used: set = set()
+    for dim, entry in zip(shape, entries):
+        if not entry:
+            sl.append(slice(None))
+            continue
+        size = 1
+        idx = 0
+        for a in entry:
+            idx = idx * mesh_axes[a] + coords[a]
+            size *= mesh_axes[a]
+            used.add(a)
+        step = dim // size
+        sl.append(slice(idx * step, (idx + 1) * step))
+    for a, c in coords.items():
+        if a not in used and c != 0:
+            return None
+    return tuple(sl)
+
+
+def save_tree(tree: Any, path: str, extra_meta: Optional[Dict] = None,
+              mesh=None, specs: Any = None):
+    """Atomic sharded write of all array leaves of ``tree`` to ``path``.
+
+    With ``mesh`` (defaults to the single-shard layout when None), every
+    leaf is chunked by its fitted PartitionSpec — ``specs`` (a matching
+    tree of specs) overrides the parameter rules — and each chunk lands
+    in the shard file of the host that owns it.  META carries the spec +
+    mesh-shape metadata that makes restore topology-independent."""
+    flat = _flatten_with_paths(tree)
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    mesh_axes = dict(getattr(mesh, "shape", {}) or {}) if mesh is not None \
+        else {}
+    leaf_specs = _leaf_specs(flat, mesh, specs)
+    axes = _used_axes(leaf_specs)
+    hosts = _host_grid(mesh_axes, axes)
+    n = len(hosts)
+
+    manifest: Dict[str, Dict[str, Any]] = {}
+    shard_arrays: List[Dict[str, np.ndarray]] = [{} for _ in range(n)]
+    seen: Dict[str, str] = {}
+    for k, v in flat.items():
+        sk = _sanitize(k)
+        if sk in seen:                      # _sanitize is injective, so
+            raise ValueError(               # this is pure belt-and-braces
+                f"sanitized key collision: {k!r} and {seen[sk]!r} both "
+                f"map to {sk!r}")
+        seen[sk] = k
+        entries = leaf_specs[k]
+        manifest[k] = {"key": sk, "shape": list(v.shape),
+                       "dtype": str(v.dtype), "spec": entries}
+        for h, coords in enumerate(hosts):
+            sl = _chunk_slices(v.shape, entries, mesh_axes, coords)
+            if sl is not None:
+                shard_arrays[h][sk] = v[sl]
+
+    tmp = f"{path}.tmp.{uuid.uuid4().hex[:8]}"
+    os.makedirs(tmp)
+    for h in range(n):
+        np.savez(os.path.join(tmp, f"shard_{h:05d}-of-{n:05d}.npz"),
+                 **shard_arrays[h])
+    with open(os.path.join(tmp, "META"), "w") as f:
+        json.dump({"format": CKPT_FORMAT, "manifest": manifest,
+                   "mesh_axes": mesh_axes, "shard_axes": axes,
+                   "n_shards": n,
+                   "hosts": [[hst.get(a, 0) for a in axes]
+                             for hst in hosts],
+                   "extra": extra_meta or {}}, f)
+    _fsync_tree(tmp)
+    _commit_dir(tmp, path)
+
+
+class CheckpointMismatchError(ValueError):
+    """Template and checkpoint manifest disagree on the set of leaves.
+
+    ``missing`` — template keys the checkpoint does not hold;
+    ``extra`` — checkpoint keys the template does not expect."""
+
+    def __init__(self, path: str, missing: List[str], extra: List[str]):
+        self.path = path
+        self.missing = list(missing)
+        self.extra = list(extra)
+        lines = [f"checkpoint {path!r} does not match the restore template "
+                 f"({len(missing)} missing, {len(extra)} extra):"]
+        for k in missing[:8]:
+            lines.append(f"  missing from checkpoint: {k}")
+        for k in extra[:8]:
+            lines.append(f"  extra in checkpoint:     {k}")
+        if len(missing) > 8 or len(extra) > 8:
+            lines.append("  ...")
+        lines.append("pass partial=True to keep template values for "
+                     "missing keys and ignore extras")
+        super().__init__("\n".join(lines))
+
+
+class CheckpointReader:
+    """Lazy reader over a (sharded or legacy) checkpoint directory.
+
+    Assembles one leaf at a time from its shard chunks — the streaming
+    primitive behind both :func:`restore_tree` and the direct
+    checkpoint→serving deployment, which must never materialize the
+    whole f32 tree on one host."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(os.path.join(path, "META")) as f:
+            self.meta = json.load(f)
+        self.extra = self.meta.get("extra", {})
+        self._files: Dict[str, Any] = {}
+        if self.meta.get("format", 1) >= 2:
+            self.manifest: Dict[str, Dict[str, Any]] = self.meta["manifest"]
+            self._legacy = False
+        else:                                 # v1: monolithic arrays.npz
+            self.manifest = {k: {"key": sk} for k, sk
+                             in self.meta["manifest"].items()}
+            self._legacy = True
+
+    def keys(self) -> List[str]:
+        return list(self.manifest)
+
+    def _file(self, name: str):
+        if name not in self._files:
+            self._files[name] = np.load(os.path.join(self.path, name))
+        return self._files[name]
+
+    def close(self) -> None:
+        for f in self._files.values():
+            f.close()
+        self._files.clear()
+
+    def _hosts(self) -> List[Dict[str, int]]:
+        axes = self.meta["shard_axes"]
+        return [dict(zip(axes, c)) for c in self.meta["hosts"]]
+
+    def read(self, key: str) -> np.ndarray:
+        """Assemble one leaf from its shard chunks (or the legacy npz)."""
+        ent = self.manifest[key]
+        if self._legacy:
+            return self._file("arrays.npz")[ent["key"]]
+        mesh_axes = self.meta["mesh_axes"]
+        entries = ent["spec"]
+        shape = tuple(ent["shape"])
+        out: Optional[np.ndarray] = None
+        n = self.meta["n_shards"]
+        for h, coords in enumerate(self._hosts()):
+            sl = _chunk_slices(shape, entries, mesh_axes, coords)
+            if sl is None:
+                continue
+            chunk = self._file(f"shard_{h:05d}-of-{n:05d}.npz")[ent["key"]]
+            if out is None:
+                if all(s == slice(None) for s in sl):
+                    out = chunk           # replicated leaf: single owner
+                    break
+                out = np.empty(shape, dtype=ent["dtype"])
+            out[sl] = chunk
+        if out is None:
+            raise KeyError(f"{key!r} has no chunks in {self.path!r}")
+        return out
+
+    def iter_arrays(self) -> Iterator[Tuple[str, np.ndarray]]:
+        for k in self.manifest:
+            yield k, self.read(k)
 
 
 def restore_tree(template: Any, path: str, mesh=None,
-                 shardings: Any = None) -> Any:
-    """Load arrays onto ``template``'s structure; reshard onto ``mesh``."""
-    with open(os.path.join(path, "META")) as f:
-        meta = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    manifest = meta["manifest"]
+                 shardings: Any = None, partial: bool = False) -> Any:
+    """Load arrays onto ``template``'s structure; reshard onto ``mesh``.
 
-    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-    shard_flat = None
-    if shardings is not None:
-        shard_flat = jax.tree_util.tree_flatten(shardings)[0]
-    leaves = []
-    for i, (p, leaf) in enumerate(flat):
-        k = jax.tree_util.keystr(p)
-        arr = data[manifest[k]]
-        if hasattr(leaf, "dtype"):
-            arr = arr.astype(leaf.dtype)
-        if shard_flat is not None:
-            leaves.append(jax.device_put(arr, shard_flat[i]))
-        else:
-            leaves.append(jax.numpy.asarray(arr))
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+    Leaves assemble one at a time from the shard manifests, then each is
+    ``device_put`` with its sharding under the *currently live* mesh —
+    saving under a 1-host mesh and restoring under a 16-host one (or
+    vice versa) is the supported elastic path.  A template/manifest
+    key-set mismatch raises :class:`CheckpointMismatchError` unless
+    ``partial=True`` (missing keys keep their template values, extra
+    checkpoint keys are skipped)."""
+    reader = CheckpointReader(path)
+    try:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        keys = [jax.tree_util.keystr(p) for p, _ in flat]
+        missing = [k for k in keys if k not in reader.manifest]
+        extra = [k for k in reader.manifest if k not in set(keys)]
+        if (missing or extra) and not partial:
+            raise CheckpointMismatchError(path, missing, extra)
+
+        shard_flat = None
+        if shardings is not None:
+            shard_flat = jax.tree_util.tree_flatten(shardings)[0]
+        elif mesh is not None:
+            from ..dist.sharding import param_pspecs, use_mesh
+            from jax.sharding import NamedSharding
+            with use_mesh(mesh):
+                spec_tree = param_pspecs(template, pad=False)
+            shard_flat = [NamedSharding(mesh, s) for s in
+                          jax.tree_util.tree_leaves(
+                              spec_tree,
+                              is_leaf=lambda x: isinstance(
+                                  x, jax.sharding.PartitionSpec))]
+
+        leaves = []
+        for i, ((p, leaf), k) in enumerate(zip(flat, keys)):
+            if k not in reader.manifest:
+                leaves.append(leaf)          # partial: keep template value
+                continue
+            arr = reader.read(k)
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            if shard_flat is not None:
+                leaves.append(jax.device_put(arr, shard_flat[i]))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+    finally:
+        reader.close()
 
 
 class CheckpointManager:
-    """Rolling checkpoints + async save thread + latest-step discovery."""
+    """Rolling checkpoints + async save thread + latest-step discovery.
+
+    A failed async save is never silent: the exception is captured and
+    re-raised from the next :meth:`wait` or :meth:`save` call."""
 
     def __init__(self, directory: str, keep: int = 3, use_async: bool = True):
         self.dir = directory
         self.keep = keep
         self.use_async = use_async
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     def _step_dirs(self):
@@ -104,11 +412,17 @@ class CheckpointManager:
         return dirs[-1][0] if dirs else None
 
     def wait(self):
+        """Join any in-flight async save; re-raise its failure, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint save failed: {err!r}") from err
 
-    def save(self, step: int, tree: Any, extra_meta: Optional[Dict] = None):
+    def save(self, step: int, tree: Any, extra_meta: Optional[Dict] = None,
+             mesh=None, specs: Any = None):
         self.wait()
         # device_get synchronously (cheap vs. training step), write async
         tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)),
@@ -116,21 +430,34 @@ class CheckpointManager:
         path = os.path.join(self.dir, f"step_{step}")
 
         def work():
-            save_tree(tree, path, extra_meta)
-            self._gc()
+            try:
+                save_tree(tree, path, extra_meta, mesh=mesh, specs=specs)
+                self._gc()
+            except BaseException as e:       # surfaced by the next wait()
+                self._error = e
 
         if self.use_async:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
         else:
             work()
+            if self._error is not None:
+                self.wait()                  # re-raise immediately
 
     def _gc(self):
         dirs = self._step_dirs()
-        for _, p in dirs[:-self.keep]:
+        # NOT dirs[:-keep]: keep=0 must prune everything; clamp so fewer
+        # dirs than ``keep`` prunes nothing (negative slice bites the tail)
+        cut = max(0, len(dirs) - self.keep)
+        for _, p in dirs[:cut]:
             shutil.rmtree(p, ignore_errors=True)
+        for name in os.listdir(self.dir):    # crash debris from _commit_dir
+            if re.search(r"\.(tmp|old)\.[0-9a-f]{8}$", name):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
-    def restore_latest(self, template: Any, mesh=None, shardings=None):
+    def restore_latest(self, template: Any, mesh=None, shardings=None,
+                       partial: bool = False):
         self.wait()
         step = self.latest_step()
         if step is None:
@@ -138,5 +465,6 @@ class CheckpointManager:
         path = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(path, "META")) as f:
             extra = json.load(f)["extra"]
-        tree = restore_tree(template, path, mesh, shardings)
+        tree = restore_tree(template, path, mesh, shardings,
+                            partial=partial)
         return (step, extra), tree

@@ -17,8 +17,17 @@ Conventions (see DESIGN.md and tests/test_sharding_rules.py):
     axis present, in ('pod', 'data') order.
 
 Every emitted spec is passed through :func:`fit_spec`, which drops mesh
-axes that are absent or do not divide the corresponding dim — so rules are
-written for the *production* mesh and degrade per-tensor everywhere else.
+axes that are absent or already consumed — so rules are written for the
+*production* mesh and degrade per-tensor everywhere else.  Axes that
+exist but do not divide the dim are handled by **padded sharding**
+(``PADDED``): the axis is kept, a :class:`SpecPad` event is recorded, and
+the *placement boundary* (``pad_leaf`` before ``device_put``) zero-pads
+the dim to the next multiple of the mesh-axis product; the consumer
+masks by slicing back to the true shape in-graph (``unpad_leaf``).  Only
+boundaries pad — in-graph ``with_sharding_constraint`` sites keep the
+legacy drop rule (``pad=False``) because GSPMD silently *replicates*
+uneven constraint specs on this jax, which would claim sharding it does
+not deliver.
 """
 from __future__ import annotations
 
@@ -67,6 +76,12 @@ DATA_AXES: Tuple[str, ...] = ("pod", "data")
 # benchmarks/hillclimb.py flips "enabled" around lowering variants.
 FSDP = {"enabled": True, "min_bytes": 1 << 20}
 
+# Padded-sharding toggle: a mesh axis that does not divide a dim keeps
+# the dim sharded via ceil-division padding instead of being dropped
+# (vocab / kv-head dims no longer waste the whole model axis).  Callers
+# can override per-call with ``fit_spec(..., pad=...)``.
+PADDED = {"enabled": True}
+
 
 def batch_axes(mesh=None) -> Tuple[str, ...]:
     """The data-parallel mesh axes present in ``mesh`` (pod-major)."""
@@ -107,8 +122,9 @@ class SpecDrop:
 
     ``reason`` is ``'absent'`` (axis not in the mesh), ``'used'`` (axis
     already consumed by an earlier dim) or ``'indivisible'`` (the axis
-    group's combined size does not divide the dim — the case the padded-
-    sharding follow-up needs a worklist for; see ROADMAP)."""
+    group's combined size does not divide the dim AND padding was
+    disabled for the call — with :data:`PADDED` on, indivisible dims
+    record a :class:`SpecPad` instead and stay sharded)."""
     label: str                 # leaf keystr, or '<unlabeled>'
     dim: int                   # which dim of the shape
     axis: str                  # the dropped mesh axis
@@ -129,15 +145,37 @@ class SpecDrop:
                 f"{self.axis!r}, already used by an earlier dim")
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecPad:
+    """One dim kept sharded by ceil-division padding.
+
+    Recorded by :func:`fit_spec` when a requested mesh-axis group does
+    not divide the dim but padded sharding is active: the placement
+    boundary zero-pads ``dim_size`` up to ``padded_size`` (the next
+    multiple of ``group_size``) and the consumer slices back."""
+    label: str                 # leaf keystr, or '<unlabeled>'
+    dim: int                   # which dim of the shape
+    axes: Tuple[str, ...]      # the mesh axes kept on this dim
+    dim_size: int
+    padded_size: int
+    group_size: int            # combined size of the kept axes
+
+    def message(self) -> str:
+        return (f"{self.label}: dim {self.dim} (size {self.dim_size}) "
+                f"pads to {self.padded_size} for mesh axes "
+                f"{'x'.join(self.axes)} (size {self.group_size}); "
+                f"sharded via ceil-division, masked at the consumer")
+
+
 @contextlib.contextmanager
 def collect_spec_events():
-    """Capture every :class:`SpecDrop` recorded by :func:`fit_spec` in
-    the dynamic extent (innermost collector wins; the sharding lint's
-    event source)."""
+    """Capture every :class:`SpecDrop` / :class:`SpecPad` recorded by
+    :func:`fit_spec` in the dynamic extent (innermost collector wins;
+    the sharding lint's event source)."""
     stack = getattr(_STATE, "spec_events", None)
     if stack is None:
         stack = _STATE.spec_events = []
-    events: List[SpecDrop] = []
+    events: List[Any] = []          # SpecDrop | SpecPad
     stack.append(events)
     try:
         yield events
@@ -162,6 +200,16 @@ def _record_drop(label: Optional[str], dim: int, axis: str, reason: str,
             warnings.warn(ShardingDropWarning(drop.message()), stacklevel=3)
 
 
+def _record_pad(label: Optional[str], dim: int, axes: Tuple[str, ...],
+                dim_size: int, padded_size: int, group_size: int) -> None:
+    stack = getattr(_STATE, "spec_events", None)
+    if stack:
+        stack[-1].append(SpecPad(label=label or "<unlabeled>", dim=dim,
+                                 axes=axes, dim_size=dim_size,
+                                 padded_size=padded_size,
+                                 group_size=group_size))
+
+
 def spec(*logical: Optional[str]) -> P:
     """Logical axis names -> PartitionSpec against the active mesh.
 
@@ -178,20 +226,25 @@ def spec(*logical: Optional[str]) -> P:
 
 
 def fit_spec(ps: P, shape: Sequence[int], mesh=None,
-             label: Optional[str] = None) -> P:
-    """Fit ``ps`` to ``shape`` under ``mesh``: drop axes that are not in the
-    mesh, already used by an earlier dim, or whose combined size does not
-    divide the dim.  Always returns a spec of ``len(shape)`` entries.
+             label: Optional[str] = None, pad: Optional[bool] = None) -> P:
+    """Fit ``ps`` to ``shape`` under ``mesh``: drop axes that are not in
+    the mesh or already used by an earlier dim.  Always returns a spec of
+    ``len(shape)`` entries.
 
-    Every dropped axis is recorded as a :class:`SpecDrop` (to the active
-    :func:`collect_spec_events` collector, if any) and an *indivisible*
-    drop — the rules asked for sharding the mesh cannot honor — warns
-    once per (label, dim, axis) with :class:`ShardingDropWarning`.
-    ``label`` names the tensor in those diagnostics (callers with tree
-    paths pass the leaf keystr)."""
+    An axis group whose combined size does not divide the dim is kept
+    via **ceil-division padded sharding** when ``pad`` is true (default:
+    the :data:`PADDED` toggle) — the returned spec then describes the
+    *padded* layout and placement must go through :func:`pad_leaf` /
+    :func:`unpad_leaf`.  With ``pad=False`` the legacy rule applies: the
+    axes are dropped, recorded as :class:`SpecDrop` events (to the
+    active :func:`collect_spec_events` collector, if any), and an
+    *indivisible* drop warns once per (label, dim, axis) with
+    :class:`ShardingDropWarning`.  ``label`` names the tensor in those
+    diagnostics (callers with tree paths pass the leaf keystr)."""
     mesh = mesh if mesh is not None else get_mesh()
     if mesh is None:
         return P(*([None] * len(shape)))
+    do_pad = PADDED["enabled"] if pad is None else pad
     used: set = set()
     out: List[Any] = []
     for i, dim in enumerate(shape):
@@ -208,7 +261,13 @@ def fit_spec(ps: P, shape: Sequence[int], mesh=None,
             else:
                 axes.append(a)
         size = math.prod(mesh.shape[a] for a in axes)
-        if not axes or size == 0 or dim % size:
+        if axes and size > 1 and dim % size and do_pad:
+            # keep sharded: the boundary zero-pads dim -> next multiple
+            _record_pad(label, i, tuple(axes), dim,
+                        -(-dim // size) * size, size)
+            used.update(axes)
+            out.append(tuple(axes) if len(axes) > 1 else axes[0])
+        elif not axes or size == 0 or dim % size:
             for a in axes:
                 _record_drop(label, i, a, "indivisible", dim, mesh.shape[a])
             out.append(None)
@@ -218,13 +277,68 @@ def fit_spec(ps: P, shape: Sequence[int], mesh=None,
     return P(*out)
 
 
+# --------------------------------------------------------------------------
+# padded placement helpers
+# --------------------------------------------------------------------------
+
+def _group_size(entry, mesh) -> int:
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    return math.prod(mesh.shape[a] for a in axes if a in mesh.shape)
+
+
+def padded_shape(ps: P, shape: Sequence[int], mesh=None) -> Tuple[int, ...]:
+    """The ceil-division padded shape ``ps`` implies for ``shape``:
+    every sharded dim rounds up to the next multiple of its mesh-axis
+    group size (identical to ``shape`` when everything divides)."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return tuple(shape)
+    out = []
+    for i, dim in enumerate(shape):
+        entry = ps[i] if i < len(ps) else None
+        if entry is None:
+            out.append(dim)
+            continue
+        size = _group_size(entry, mesh)
+        out.append(-(-dim // size) * size if size > 1 else dim)
+    return tuple(out)
+
+
+def pad_leaf(x, ps: P, mesh=None):
+    """Zero-pad ``x`` to :func:`padded_shape` so an uneven spec becomes
+    placeable with ``device_put`` (identity when nothing pads)."""
+    import numpy as np
+    shape = tuple(x.shape)
+    target = padded_shape(ps, shape, mesh)
+    if target == shape:
+        return x
+    widths = [(0, t - s) for s, t in zip(shape, target)]
+    if isinstance(x, np.ndarray):
+        return np.pad(x, widths)
+    return jax.numpy.pad(x, widths)
+
+
+def unpad_leaf(x, true_shape: Sequence[int]):
+    """Slice a padded leaf back to its true shape (in-graph safe: the
+    mask-at-the-consumer side of padded sharding).  Identity when the
+    shapes already match."""
+    shape = tuple(true_shape)
+    if tuple(x.shape) == shape:
+        return x
+    return x[tuple(slice(0, s) for s in shape)]
+
+
 def constraint(x, *logical: Optional[str]):
     """``with_sharding_constraint`` by logical axis names; identity with no
-    active mesh.  Trailing dims beyond ``logical`` stay replicated."""
+    active mesh.  Trailing dims beyond ``logical`` stay replicated.
+
+    Always fits with ``pad=False``: an in-graph constraint cannot pad
+    its operand, and GSPMD silently replicates uneven constraint specs
+    on this jax — dropping the axis is the honest equivalent."""
     mesh = get_mesh()
     if mesh is None:
         return x
-    ps = fit_spec(spec(*logical), x.shape, mesh)
+    ps = fit_spec(spec(*logical), x.shape, mesh, pad=False)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))
 
 
@@ -270,7 +384,7 @@ def _leaf_bytes(leaf) -> int:
         return 0
 
 
-def _leaf_spec(path: str, leaf) -> P:
+def _leaf_spec(path: str, leaf, pad: Optional[bool] = None) -> P:
     """PartitionSpec for one parameter leaf, keyed by its keystr path.
 
     ``path`` is a ``jax.tree_util.keystr`` string such as
@@ -296,19 +410,23 @@ def _leaf_spec(path: str, leaf) -> P:
         if FSDP["enabled"] and "data" in mesh.shape \
                 and _leaf_bytes(leaf) >= FSDP["min_bytes"]:
             dims[fsdp_dim] = "data"
-    return fit_spec(P(*dims), shape, mesh, label=path)
+    return fit_spec(P(*dims), shape, mesh, label=path, pad=pad)
 
 
-def param_pspecs(params) -> Any:
+def param_pspecs(params, pad: Optional[bool] = None) -> Any:
     """Tree of PartitionSpecs mirroring ``params`` (works on any pytree,
     including TrainState — optimizer moments inherit their weight's rule
-    because the weight's dict key appears in their path too)."""
+    because the weight's dict key appears in their path too).
+
+    ``pad`` selects padded sharding for indivisible dims (default: the
+    :data:`PADDED` toggle); a padded spec must be placed through
+    :func:`pad_leaf` and consumed through :func:`unpad_leaf`."""
     mesh = get_mesh()
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     if mesh is None:
         specs = [P() for _ in flat]
     else:
-        specs = [_leaf_spec(jax.tree_util.keystr(path), leaf)
+        specs = [_leaf_spec(jax.tree_util.keystr(path), leaf, pad=pad)
                  for path, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
 
@@ -319,7 +437,7 @@ def shard_params_tree(params):
     mesh = get_mesh()
     if mesh is None:
         return params
-    specs = param_pspecs(params)
+    specs = param_pspecs(params, pad=False)   # in-graph wsc cannot pad
     return jax.tree_util.tree_map(
         lambda x, ps: jax.lax.with_sharding_constraint(
             x, NamedSharding(mesh, ps)),
@@ -331,7 +449,11 @@ def shard_params_tree(params):
 # --------------------------------------------------------------------------
 
 def batch_pspecs(batch) -> Any:
-    """Shard dim 0 (the global batch) of every leaf across the data axes."""
+    """Shard dim 0 (the global batch) of every leaf across the data axes.
+
+    Always fits with ``pad=False``: a batch tensor is placed as-is every
+    tick — padding it would fabricate tokens — so an indivisible batch
+    serves replicated like before."""
     mesh = get_mesh()
     flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
 
@@ -342,18 +464,21 @@ def batch_pspecs(batch) -> Any:
         dims: List[Any] = [None] * len(shape)
         dims[0] = _batch_entry(mesh)
         return fit_spec(P(*dims), shape, mesh,
-                        label=jax.tree_util.keystr(path))
+                        label=jax.tree_util.keystr(path), pad=False)
 
     return jax.tree_util.tree_unflatten(
         treedef, [leaf(path, x) for path, x in flat])
 
 
-def cache_pspecs(state, batch_size: int) -> Any:
+def cache_pspecs(state, batch_size: int, pad: Optional[bool] = None) -> Any:
     """Decode-state specs: the batch dim (identified by ``batch_size``; the
     leading dim is the stacked layer axis) shards on the data axes, and the
     KV-head dim of rank>=5 ``(L, B, T, KV, dh)`` cache leaves shards on
-    'model' — fitted, so e.g. 2 KV heads on a 16-way model axis degrade to
-    replicated instead of failing.
+    'model' — fitted per ``pad`` (default: the :data:`PADDED` toggle), so
+    e.g. 2 KV heads on a 16-way model axis pad-shard under padded mode
+    and degrade to replicated with ``pad=False`` (the live engine's
+    choice: decode state round-trips through the donated step and cannot
+    carry placement padding).
 
     Paged caches are recognized by path: pool leaves under ``'pages'``
     (stack, P, page, KV, ...) shard their *page* axis on the data axes (the
@@ -380,7 +505,7 @@ def cache_pspecs(state, batch_size: int) -> Any:
             dims[1] = _batch_entry(mesh)
             if len(shape) >= 5:
                 dims[-2] = "model"
-            return fit_spec(P(*dims), shape, mesh, label=label)
+            return fit_spec(P(*dims), shape, mesh, label=label, pad=pad)
         # rank>=4 leaves are stacked (L, B, ...): dim 0 is the layer axis,
         # so never batch-shard it even when n_layers == batch_size.
         start = 1 if len(shape) >= 4 else 0
@@ -390,7 +515,7 @@ def cache_pspecs(state, batch_size: int) -> Any:
                 break
         if len(shape) >= 5 and dims[-2] is None:
             dims[-2] = "model"
-        return fit_spec(P(*dims), shape, mesh, label=label)
+        return fit_spec(P(*dims), shape, mesh, label=label, pad=pad)
 
     specs = [leaf(path, x) for path, x in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)

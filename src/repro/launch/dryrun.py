@@ -28,8 +28,8 @@ from ..configs import REGISTRY
 from ..configs.base import ModelConfig, ShapeCell, cells_for
 from ..dist.hlo_analysis import (collective_stats, dominant_term,
                                  roofline_terms)
-from ..dist.sharding import (batch_pspecs, cache_pspecs, param_pspecs,
-                             use_mesh)
+from ..dist.sharding import (batch_pspecs, cache_pspecs, padded_shape,
+                             param_pspecs, unpad_leaf, use_mesh)
 from ..models import moe as moe_mod
 from ..models.api import build
 from ..optim.optimizers import adamw
@@ -43,6 +43,36 @@ def _shardings(mesh, pspec_tree):
     return jax.tree_util.tree_map(
         lambda ps: jax.sharding.NamedSharding(mesh, ps), pspec_tree,
         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def _pad_abstract(tree, mesh):
+    """Padded-sharding boundary for abstract lowering: fit each leaf's
+    (padded-mode) spec, grow the ShapeDtypeStruct to the padded shape so
+    ``in_shardings`` stay divisible, and remember the true shapes for the
+    in-graph unpad.  Returns (padded_tree, spec_tree, true_shapes)."""
+    from jax.sharding import PartitionSpec as P
+    with use_mesh(mesh):
+        specs = param_pspecs(tree)
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    sflat = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    padded = jax.tree_util.tree_unflatten(treedef, [
+        jax.ShapeDtypeStruct(padded_shape(s, x.shape, mesh), x.dtype)
+        for x, s in zip(flat, sflat)])
+    return padded, specs, [tuple(x.shape) for x in flat]
+
+
+def _unpadding(fn, true_shapes):
+    """Wrap a step fn so its first arg (params) is sliced back to the true
+    shapes before the model sees it — the consumer mask of padded
+    placement, identical to ``ServeEngine._unpad_params``."""
+    def wrapped(params, *args, **kwargs):
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        params = jax.tree_util.tree_unflatten(
+            treedef, [unpad_leaf(x, s)
+                      for x, s in zip(flat, true_shapes)])
+        return fn(params, *args, **kwargs)
+    return wrapped
 
 
 def _cost_dict(compiled) -> Dict[str, float]:
@@ -100,12 +130,15 @@ def _lower_once(cfg: ModelConfig, cell: ShapeCell, mesh, microbatches: int,
             from ..serve.deploy import to_serving_params
             aparams = jax.eval_shape(
                 lambda p: to_serving_params(p, deploy_bits), aparams)
-        p_sh = _shardings(mesh, param_pspecs(aparams))
+        aparams_p, p_specs, p_shapes = _pad_abstract(aparams, mesh)
+        p_sh = _shardings(mesh, p_specs)
         if cell.kind == "train":
             opt = adamw()
             astate = jax.eval_shape(
                 lambda p: TrainState.create(p, opt), aparams)
-            s_sh = _shardings(mesh, param_pspecs(astate))
+            # the train state is donated and round-trips through the jit:
+            # it cannot carry placement padding, so fit with the drop rule
+            s_sh = _shardings(mesh, param_pspecs(astate, pad=False))
             batch = api.train_batch_spec(cell)
             b_sh = _shardings(mesh, batch_pspecs(batch))
 
@@ -128,21 +161,24 @@ def _lower_once(cfg: ModelConfig, cell: ShapeCell, mesh, microbatches: int,
             batch = api.train_batch_spec(cell)
             batch.pop("labels", None)
             b_sh = _shardings(mesh, batch_pspecs(batch))
-            jitted = jax.jit(api.prefill, in_shardings=(p_sh, b_sh))
-            lowered = jitted.lower(aparams, batch)
+            jitted = jax.jit(_unpadding(api.prefill, p_shapes),
+                             in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(aparams_p, batch)
         else:  # decode
             state_spec = api.decode_state_spec(cell)
+            # donated decode state round-trips: fit with the drop rule
             c_sh = _shardings(mesh, cache_pspecs(state_spec,
-                                                 cell.global_batch))
+                                                 cell.global_batch,
+                                                 pad=False))
             tok = api.decode_token_spec(cell)
             t_sh = _shardings(mesh, batch_pspecs({"t": tok}))["t"]
             idx = jax.ShapeDtypeStruct((), jnp.int32)
             i_sh = jax.sharding.NamedSharding(
                 mesh, jax.sharding.PartitionSpec())
-            jitted = jax.jit(api.decode_step,
+            jitted = jax.jit(_unpadding(api.decode_step, p_shapes),
                              in_shardings=(p_sh, t_sh, c_sh, i_sh),
                              out_shardings=(None, c_sh), donate_argnums=(2,))
-            lowered = jitted.lower(aparams, tok, state_spec, idx)
+            lowered = jitted.lower(aparams_p, tok, state_spec, idx)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower

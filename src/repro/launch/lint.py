@@ -14,7 +14,8 @@ import sys
 
 import jax
 
-from ..analysis import ShapeOnlyMesh, lint_engine, production_mesh_shape
+from ..analysis import (ShapeOnlyMesh, lint_engine, production_mesh_shape,
+                        validate_checkpoint)
 from ..configs import REGISTRY
 from ..models.api import build
 from ..models.common import QuantConfig
@@ -96,6 +97,9 @@ def main(argv=None) -> int:
     ap.add_argument("--speculate-planes", type=int, default=0,
                     help="build the top-k draft tree and check the AT2 "
                          "contract against the deployed tree")
+    ap.add_argument("--ckpt", default="",
+                    help="additionally validate a checkpoint directory's "
+                         "shard manifests (CK1-CK3 contracts)")
     args = ap.parse_args(argv)
 
     engine = build_engine(args.arch, args.backend, args.deploy_bits,
@@ -116,6 +120,8 @@ def main(argv=None) -> int:
                          budget=args.budget, mesh=mesh,
                          autotune_budget_bytes=(args.autotune_budget_bytes
                                                 or None))
+    if args.ckpt:
+        report.extend(validate_checkpoint(args.ckpt))
     if args.as_json:
         print(report.to_json())
     else:

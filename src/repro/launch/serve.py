@@ -3,7 +3,10 @@
 Loads (or initializes) a model, optionally converts it to packed integer
 serving weights (BWQ deployment), and decodes either as one static batch
 (default) or as staggered requests through the continuous-batching
-scheduler (``--requests``).  ``--kv-bits {4,8}`` selects the
+scheduler (``--requests``).  ``--ckpt DIR`` cold-starts straight from a
+sharded training checkpoint: each QAT leaf streams from its shard files
+into the serving wire format one at a time, so the dense f32 tree is
+never resident (the BWQ-H deployment unit is the packed artifact).  ``--kv-bits {4,8}`` selects the
 quantized-at-rest KV cache; ``--temperature``/``--top-k`` enable sampling.
 
 Scheduler production knobs (``--requests`` + ``--page-size`` mode):
@@ -41,6 +44,25 @@ def _prompts(cfg, args):
             jax.random.PRNGKey(2),
             (args.batch, args.prompt_len, cfg.d_model)) * 0.1
     return batch
+
+
+def resolve_ckpt_dir(path: str, step: int = -1) -> str:
+    """Resolve ``--ckpt`` to a concrete checkpoint directory: either the
+    path itself (it holds a META) or a ``step_<N>`` child of a
+    CheckpointManager directory (``step`` = -1 picks the latest)."""
+    import os
+    if os.path.exists(os.path.join(path, "META")):
+        return path
+    if step < 0:
+        from ..ckpt.checkpoint import CheckpointManager
+        latest = CheckpointManager(path).latest_step()
+        if latest is None:
+            raise SystemExit(f"--ckpt {path}: no step_N checkpoints found")
+        step = latest
+    out = os.path.join(path, f"step_{step}")
+    if not os.path.exists(os.path.join(out, "META")):
+        raise SystemExit(f"--ckpt: {out} is not a checkpoint directory")
+    return out
 
 
 def main():
@@ -119,6 +141,15 @@ def main():
                          "top-k live planes of each block (0 = off)")
     ap.add_argument("--draft-gamma", type=int, default=4,
                     help="draft tokens proposed per speculative round")
+    ap.add_argument("--ckpt", default="",
+                    help="cold-start from a checkpoint directory (a "
+                         "CheckpointManager dir or a single step_N dir): "
+                         "weights stream shard-by-shard straight into the "
+                         "serving wire format, never materializing the "
+                         "dense f32 tree")
+    ap.add_argument("--ckpt-step", type=int, default=-1,
+                    help="with --ckpt on a manager dir: the step to load "
+                         "(-1 = latest)")
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch]
@@ -126,12 +157,27 @@ def main():
         cfg = cfg.tiny(dtype="float32")
     cfg = cfg.with_quant(QuantConfig(mode="fake", n_bits=8, act_bits=8))
     api = build(cfg)
-    params = api.init(jax.random.PRNGKey(0))
     args.deploy_bits = default_deploy_bits(args.backend, args.deploy_bits)
-    if args.deploy_bits:
+    if args.ckpt:
+        path = resolve_ckpt_dir(args.ckpt, args.ckpt_step)
         layout = default_deploy_layout(args.backend)
-        params = to_serving_params(params, args.deploy_bits, layout=layout)
-        print(f"deployed: {layout} int{args.deploy_bits} serving weights")
+        stats = {}
+        params = to_serving_params(path, args.deploy_bits or 8,
+                                   layout=layout,
+                                   template=api.abstract_params(),
+                                   stats=stats)
+        print(f"cold-start: {path} -> {layout} "
+              f"int{args.deploy_bits or 8} serving weights "
+              f"(peak {stats['peak_host_bytes']} B host vs "
+              f"{stats['dense_tree_bytes']} B dense tree)")
+    else:
+        params = api.init(jax.random.PRNGKey(0))
+        if args.deploy_bits:
+            layout = default_deploy_layout(args.backend)
+            params = to_serving_params(params, args.deploy_bits,
+                                       layout=layout)
+            print(f"deployed: {layout} int{args.deploy_bits} "
+                  f"serving weights")
 
     batch = _prompts(cfg, args)
     if args.shared_prefix:

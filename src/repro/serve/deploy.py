@@ -159,9 +159,82 @@ def _quantize_leaf(w, scale, bitwidth, spec, n_bits, bits,
     return _pack_packed(wq, gscale, shape, spec, bits)
 
 
+def _convert_leaf(x, bits: int, layout: str):
+    if isinstance(x, QuantizedTensor):
+        from ..core.bitrep import compose
+        return _quantize_leaf(compose(x), x.scale,
+                              jnp.sum(x.mask, axis=0), x.spec,
+                              x.n_bits, bits, layout)
+    if isinstance(x, FakeQuantTensor):
+        return _quantize_leaf(x.w, x.scale, x.bitwidth, x.spec,
+                              x.n_bits, bits, layout)
+    return x
+
+
+def _is_quant(x) -> bool:
+    return isinstance(x, (QuantizedTensor, FakeQuantTensor))
+
+
+def _serving_params_from_ckpt(path: str, bits: int, layout: str,
+                              template: Any, stats: Any) -> Any:
+    """Stream a checkpoint straight into serving form, leaf by leaf.
+
+    One quantized leaf's f32 working set is resident at a time — the
+    dense tree is never materialized on the host, which is what makes a
+    fleet cold-start from a multi-GB checkpoint fit in serving-host RAM.
+    ``template`` is the *abstract* QAT tree (``api.abstract_params()``)
+    that carries the static structure (BlockingSpec, n_bits, ...) the
+    checkpoint does not store.  TrainState checkpoints are recognized by
+    their ``.params`` key prefix, so the optimizer state is never read."""
+    from ..ckpt.checkpoint import CheckpointReader
+    reader = CheckpointReader(path)
+    try:
+        keys = set(reader.keys())
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            template, is_leaf=_is_quant)
+        prefix = ""
+        probe = jax.tree_util.keystr(flat[0][0]) if flat else ""
+        if not any(k.startswith(probe) for k in keys) \
+                and any(k.startswith(".params") for k in keys):
+            prefix = ".params"
+
+        peak = in_flight = dense = 0
+        out_leaves = []
+        for p, leaf in flat:
+            base = prefix + jax.tree_util.keystr(p)
+            cflat, cdef = jax.tree_util.tree_flatten_with_path(leaf)
+            arrays = []
+            for cp, _ in cflat:
+                arr = reader.read(base + jax.tree_util.keystr(cp))
+                arrays.append(arr)
+                in_flight += arr.nbytes
+            peak = max(peak, in_flight)
+            rebuilt = jax.tree_util.tree_unflatten(
+                cdef, [jnp.asarray(a) for a in arrays])
+            out_leaves.append(_convert_leaf(rebuilt, bits, layout))
+            for arr in arrays:
+                in_flight -= arr.nbytes
+                dense += arr.nbytes
+            del arrays, rebuilt
+        if isinstance(stats, dict):
+            stats.update(peak_host_bytes=peak, dense_tree_bytes=dense,
+                         leaves=len(flat), source=path)
+        return jax.tree_util.tree_unflatten(treedef, out_leaves)
+    finally:
+        reader.close()
+
+
 def to_serving_params(params: Any, bits: int = 8, layout: str = "packed",
-                      validate: bool = True) -> Any:
+                      validate: bool = True, template: Any = None,
+                      stats: Any = None) -> Any:
     """Convert all quantized leaves to the chosen serving wire format.
+
+    ``params`` is either a live QAT tree or a **checkpoint directory
+    path** — the latter streams shard-by-shard through
+    :func:`_serving_params_from_ckpt` (requires ``template``, the
+    abstract QAT tree) without ever materializing the dense f32 tree;
+    ``stats`` (a dict, mutated in place) then reports
+    ``peak_host_bytes`` vs ``dense_tree_bytes``.
 
     ``validate`` contract-checks the result (``analysis.contracts``) so a
     packing bug is caught at deploy time with a path-qualified diagnostic
@@ -170,19 +243,17 @@ def to_serving_params(params: Any, bits: int = 8, layout: str = "packed",
         raise ValueError(f"unknown serving layout {layout!r}; "
                          f"choose from {SERVING_LAYOUTS}")
 
-    def conv(x):
-        if isinstance(x, QuantizedTensor):
-            from ..core.bitrep import compose
-            return _quantize_leaf(compose(x), x.scale,
-                                  jnp.sum(x.mask, axis=0), x.spec,
-                                  x.n_bits, bits, layout)
-        if isinstance(x, FakeQuantTensor):
-            return _quantize_leaf(x.w, x.scale, x.bitwidth, x.spec,
-                                  x.n_bits, bits, layout)
-        return x
-    out = jax.tree_util.tree_map(
-        conv, params,
-        is_leaf=lambda x: isinstance(x, (QuantizedTensor, FakeQuantTensor)))
+    if isinstance(params, str):
+        if template is None:
+            raise ValueError(
+                "to_serving_params(checkpoint_path, ...) needs template= "
+                "(the abstract QAT tree from api.abstract_params())")
+        out = _serving_params_from_ckpt(params, bits, layout, template,
+                                        stats)
+    else:
+        out = jax.tree_util.tree_map(
+            lambda x: _convert_leaf(x, bits, layout), params,
+            is_leaf=_is_quant)
     if validate:
         from ..analysis.contracts import validate_serving_tree
         bad = [f for f in validate_serving_tree(out)

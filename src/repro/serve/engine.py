@@ -13,7 +13,11 @@ burned O(cache) requant work per decoded token.
 When a ``dist.sharding`` mesh is active at construction, parameters are
 placed by ``param_pspecs`` and prompt/state tensors by ``batch_pspecs`` /
 ``cache_pspecs``, so prefill and decode run sharded (batch on the data
-axes, KV heads on the model axis) with no API change.
+axes, KV heads on the model axis) with no API change.  Under
+``padded_sharding`` (default) a dim the mesh does not divide is
+zero-padded to the next multiple at placement and sliced back to its
+true shape inside every jitted entry point — non-dividing vocab /
+kv-head dims shard instead of replicating (see ``dist.sharding``).
 
 ``backend`` selects how deployed (ServingWeight / BitplaneServingWeight)
 matmuls execute inside the jitted prefill/decode: ``dense`` dequantizes
@@ -64,7 +68,7 @@ warnings.filterwarnings(
     "ignore", message="Some donated buffers were not usable")
 
 from ..dist.sharding import (batch_pspecs, cache_pspecs, get_mesh,
-                             param_pspecs, use_mesh)
+                             pad_leaf, param_pspecs, unpad_leaf, use_mesh)
 from ..models.api import ModelAPI
 from ..models.attention import PAGED_ATTN_BACKENDS, paged_attn_backend
 from ..models.common import MATMUL_BACKENDS, matmul_backend
@@ -89,6 +93,7 @@ class ServeEngine:
     overcommit: float = 1.0       # >1: admit past capacity, park victims
     prefix_cache: bool = False    # share full prompt pages by content hash
     donate_state: bool = True     # donate decode state (no double-buffer)
+    padded_sharding: bool = True  # pad-place params on non-dividing axes
     validate: bool = True         # contract-check deployed leaves on build
     speculate_planes: int = 0     # >0: self-speculative decode, top-k draft
     draft_gamma: int = 4          # draft tokens proposed per round
@@ -140,6 +145,7 @@ class ServeEngine:
                                       kv_cache_bits=self.kv_quant_bits)
             self.api = ModelAPI(cfg)
         self.mesh = get_mesh()
+        self._pad_shapes = None   # true leaf shapes when params pad-placed
         self._prefill_j = self._jit(self.api.prefill,
                                     static_argnames=("extra_slots",))
         self._prefill_at_j = self._jit(self.api.prefill_at)
@@ -171,10 +177,9 @@ class ServeEngine:
                 self.api.verify_step,
                 **({"donate_argnums": (2,)} if self.donate_state else {}))
         if self.mesh is not None:
-            self.params = self._place(self.params, param_pspecs)
+            self.params = self._place_params(self.params)
             if self.draft_params is not None:
-                self.draft_params = self._place(self.draft_params,
-                                                param_pspecs)
+                self.draft_params = self._place_params(self.draft_params)
 
     def _has_packed_weights(self) -> bool:
         """True if the tree holds leaves this backend can accelerate:
@@ -197,9 +202,10 @@ class ServeEngine:
         backend, attn = self.backend, self.attn_backend
 
         @functools.wraps(fn)
-        def run(*args, **kwargs):
+        def run(params, *args, **kwargs):
+            params = self._unpad_params(params)
             with matmul_backend(backend), paged_attn_backend(attn):
-                return fn(*args, **kwargs)
+                return fn(params, *args, **kwargs)
         return jax.jit(run, **jit_kwargs)
 
     # ---- sharding helpers -----------------------------------------------
@@ -211,13 +217,47 @@ class ServeEngine:
             lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
             tree, specs)
 
+    def _place_params(self, tree):
+        """Padded param placement: fit specs with padding enabled, zero-pad
+        every leaf to its padded shape at the placement boundary, and
+        device_put evenly — so a non-dividing vocab/kv-head dim shards on
+        the model axis instead of replicating.  True shapes are remembered
+        and every jitted entry point slices back (``_unpad_params``)
+        before the model ever sees the tree."""
+        if not self.padded_sharding:
+            return self._place(tree, param_pspecs)
+        with use_mesh(self.mesh):
+            specs = param_pspecs(tree, pad=True)
+        if self._pad_shapes is None:
+            # flat list (tuples are pytrees, so not storable as leaves);
+            # draft_params share every leaf shape with params
+            self._pad_shapes = [tuple(x.shape)
+                                for x in jax.tree_util.tree_leaves(tree)]
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(
+                pad_leaf(x, s, self.mesh), NamedSharding(self.mesh, s)),
+            tree, specs)
+
+    def _unpad_params(self, params):
+        """In-graph mask side of padded placement: slice each leaf back to
+        its true shape (identity when nothing was padded)."""
+        if self._pad_shapes is None:
+            return params
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        return jax.tree_util.tree_unflatten(
+            treedef, [unpad_leaf(x, s)
+                      for x, s in zip(flat, self._pad_shapes)])
+
     def _shard_inputs(self, batch):
         return batch if self.mesh is None else self._place(batch,
                                                            batch_pspecs)
 
     def _shard_state(self, state, n_slots: int):
-        return state if self.mesh is None else \
-            self._place(state, cache_pspecs, n_slots)
+        # pad=False: the decode state round-trips through the donated step
+        # unchanged, so it cannot carry placement padding — an uneven
+        # KV-head dim serves replicated here (padded mode covers weights)
+        return state if self.mesh is None else self._place(
+            state, functools.partial(cache_pspecs, pad=False), n_slots)
 
     # ---- core ops (scheduler building blocks) ---------------------------
     def prefill(self, batch: Dict[str, jnp.ndarray], extra_slots: int = 0,

@@ -17,6 +17,7 @@ from typing import Any, Callable, Dict, Iterator, Optional
 
 
 from ..ckpt.checkpoint import CheckpointManager
+from ..dist.sharding import get_mesh
 from ..optim.optimizers import Optimizer
 from .state import TrainState
 from .step import build_maintenance_step, build_train_step
@@ -53,10 +54,13 @@ class Trainer:
 
     # -- fault tolerance -------------------------------------------------
     def try_restore(self, template_state: Optional[TrainState] = None) -> int:
+        """Resume from the latest checkpoint, resharding onto whatever
+        mesh is live *now* — the restore mesh need not match the saving
+        one (elastic restart)."""
         if self.ckpt is None:
             return 0
         template = template_state or self.state
-        meta, restored = self.ckpt.restore_latest(template)
+        meta, restored = self.ckpt.restore_latest(template, mesh=get_mesh())
         if restored is None:
             return 0
         self.state = restored
@@ -64,7 +68,10 @@ class Trainer:
 
     def _save(self, step: int):
         if self.ckpt is not None:
-            self.ckpt.save(step, self.state, dict(step=step))
+            # the active mesh shards the save: one file per host, chunked
+            # by each leaf's fitted spec (single-shard with no mesh)
+            self.ckpt.save(step, self.state, dict(step=step),
+                           mesh=get_mesh())
 
     # -- main loop ---------------------------------------------------------
     def run(self, data: Iterator, steps: Optional[int] = None,

@@ -522,10 +522,12 @@ def test_scheduler_compile_footprint(phi3, packed_params):
 # ---------------------------------------------------------------------------
 
 def test_fit_spec_records_and_warns_on_indivisible():
+    # pad=False call sites (donated in-graph buffers) keep the drop path
     mesh = ShapeOnlyMesh({"data": 2, "model": 4})
     with collect_spec_events() as events:
         with pytest.warns(ShardingDropWarning, match="w7"):
-            got = fit_spec(P("data", "model"), (7, 8), mesh, label="w7")
+            got = fit_spec(P("data", "model"), (7, 8), mesh, label="w7",
+                           pad=False)
     assert got == P(None, "model")
     drops = [d for d in events if d.reason == "indivisible"]
     assert len(drops) == 1
@@ -551,9 +553,11 @@ def test_lint_sharding_production_mesh(phi3, packed_params):
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", ShardingDropWarning)
         findings = lint_sharding(packed_params, mesh)
-    assert not _errors(findings)                   # drops degrade, not fail
-    # the tiny config's dims are not 16-divisible: drops must be surfaced
-    assert any(f.rule == "axis-indivisible" for f in findings)
+    assert not _errors(findings)                   # pads degrade, not fail
+    # the tiny config's dims are not 16-divisible: padded sharding keeps
+    # them on the axis and surfaces each pad as an info finding
+    assert any(f.rule == "axis-padded" for f in findings)
+    assert not any(f.rule == "axis-indivisible" for f in findings)
 
 
 def test_lint_sharding_clean_on_trivial_mesh(phi3, packed_params):

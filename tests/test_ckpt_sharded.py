@@ -1,0 +1,433 @@
+"""Sharded checkpoint format v2: collision-free key sanitization, crash-safe
+atomic commit, async-error surfacing, GC edge cases (keep=0/1), structured
+template-mismatch errors + partial restore, shard manifests + CK* contract
+validation, elastic cross-mesh restore (subprocess, 2 devices), padded-
+sharding numeric parity, and the direct checkpoint->serving cold-start that
+never materializes the dense f32 tree."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.ckpt.checkpoint as ckpt_mod
+from repro.analysis import validate_checkpoint
+from repro.ckpt import (CheckpointManager, CheckpointMismatchError,
+                        CheckpointReader, restore_tree, save_tree)
+from repro.ckpt.checkpoint import _sanitize
+
+
+class _Mesh12:
+    """Stand-in: fit_spec/chunking only read ``mesh.shape``, so a 2-way
+    model axis is testable on one device."""
+    shape = {"data": 1, "model": 2}
+
+
+# ---------------------------------------------------------------------------
+# key sanitization (regression: 'a b' and 'a_b' used to collide)
+# ---------------------------------------------------------------------------
+
+class TestSanitize:
+    def test_injective_on_collision_prone_keys(self):
+        assert _sanitize("['a b']") != _sanitize("['a_b']")
+        assert _sanitize("['a/b']") != _sanitize("['a_b']")
+        # underscore itself is escaped, so no crafted key can collide
+        assert _sanitize("a_62") != _sanitize("ab")
+
+    def test_roundtrip_keys_differing_only_in_punctuation(self):
+        tree = {"a b": jnp.arange(3.0), "a_b": jnp.arange(3.0) * 10,
+                "a/b": jnp.arange(3.0) * 100}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck")
+            save_tree(tree, p)
+            out = restore_tree(
+                jax.tree_util.tree_map(jnp.zeros_like, tree), p)
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(tree[k]))
+
+
+# ---------------------------------------------------------------------------
+# crash-safe commit (regression: the old path rmtree'd the previous
+# checkpoint before renaming the new one in)
+# ---------------------------------------------------------------------------
+
+class TestAtomicCommit:
+    def test_crash_before_commit_preserves_previous(self, monkeypatch):
+        tree1 = {"w": jnp.ones((4, 4))}
+        tree2 = {"w": jnp.ones((4, 4)) * 2}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck")
+            save_tree(tree1, p)
+
+            def boom(tmp):
+                raise OSError("injected crash before commit")
+
+            monkeypatch.setattr(ckpt_mod, "_fsync_tree", boom)
+            with pytest.raises(OSError, match="injected"):
+                save_tree(tree2, p)
+            monkeypatch.undo()
+            # the old checkpoint is untouched and fully readable
+            out = restore_tree({"w": jnp.zeros((4, 4))}, p)
+            np.testing.assert_array_equal(np.asarray(out["w"]), 1.0)
+            # the aborted write left only quarantined .tmp debris
+            debris = [n for n in os.listdir(d) if n != "ck"]
+            assert all(".tmp." in n for n in debris) and debris
+
+    def test_overwrite_commits_and_leaves_no_debris(self):
+        tree1 = {"w": jnp.ones(3)}
+        tree2 = {"w": jnp.ones(3) * 7}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck")
+            save_tree(tree1, p)
+            save_tree(tree2, p)
+            out = restore_tree({"w": jnp.zeros(3)}, p)
+            np.testing.assert_array_equal(np.asarray(out["w"]), 7.0)
+            assert os.listdir(d) == ["ck"]
+
+    def test_manager_crash_then_recovery_sweeps_debris(self, monkeypatch):
+        tree = {"w": jnp.arange(4.0)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=3, use_async=False)
+            mgr.save(1, tree)
+
+            def boom(tmp):
+                raise OSError("disk full")
+
+            monkeypatch.setattr(ckpt_mod, "_fsync_tree", boom)
+            with pytest.raises(RuntimeError, match="disk full"):
+                mgr.save(2, tree)
+            monkeypatch.undo()
+            # the failed step never becomes visible
+            assert mgr.latest_step() == 1
+            mgr.save(3, tree)
+            # recovery swept the crash debris
+            assert sorted(os.listdir(d)) == ["step_1", "step_3"]
+
+
+# ---------------------------------------------------------------------------
+# async save errors (regression: they were swallowed silently)
+# ---------------------------------------------------------------------------
+
+class TestAsyncErrors:
+    def test_wait_reraises_async_failure(self, monkeypatch):
+        def boom(*a, **k):
+            raise OSError("disk full")
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=3, use_async=True)
+            monkeypatch.setattr(ckpt_mod, "save_tree", boom)
+            mgr.save(1, {"w": jnp.ones(2)})
+            with pytest.raises(RuntimeError, match="disk full"):
+                mgr.wait()
+            # the error is consumed: the manager is usable again
+            monkeypatch.undo()
+            mgr.wait()
+            mgr.save(2, {"w": jnp.ones(2)})
+            mgr.wait()
+            assert mgr.latest_step() == 2
+
+    def test_next_save_reraises_async_failure(self, monkeypatch):
+        def boom(*a, **k):
+            raise OSError("quota exceeded")
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=3, use_async=True)
+            monkeypatch.setattr(ckpt_mod, "save_tree", boom)
+            mgr.save(1, {"w": jnp.ones(2)})
+            monkeypatch.undo()
+            with pytest.raises(RuntimeError, match="quota exceeded"):
+                mgr.save(2, {"w": jnp.ones(2)})
+
+
+# ---------------------------------------------------------------------------
+# GC edge cases (regression: keep=0 sliced dirs[:-0] == [] and kept all)
+# ---------------------------------------------------------------------------
+
+class TestGC:
+    def test_keep_zero_retains_nothing(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=0, use_async=False)
+            for step in (1, 2):
+                mgr.save(step, {"a": jnp.ones(2)})
+            assert mgr.latest_step() is None
+            assert os.listdir(d) == []
+
+    def test_keep_one_retains_only_latest(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=1, use_async=False)
+            for step in (1, 2, 3):
+                mgr.save(step, {"a": jnp.ones(2)})
+            assert mgr.latest_step() == 3
+            assert os.listdir(d) == ["step_3"]
+
+
+# ---------------------------------------------------------------------------
+# structured mismatch errors + partial restore (regression: bare KeyError)
+# ---------------------------------------------------------------------------
+
+class TestMismatch:
+    def test_missing_and_extra_listed(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck")
+            save_tree({"a": jnp.ones(2), "b": jnp.ones(2) * 2}, p)
+            template = {"b": jnp.zeros(2), "c": jnp.zeros(2)}
+            with pytest.raises(CheckpointMismatchError) as ei:
+                restore_tree(template, p)
+            assert ei.value.missing == ["['c']"]
+            assert ei.value.extra == ["['a']"]
+            assert "partial=True" in str(ei.value)
+
+    def test_partial_restore_keeps_template_values(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck")
+            save_tree({"a": jnp.ones(2), "b": jnp.ones(2) * 2}, p)
+            template = {"b": jnp.zeros(2), "c": jnp.full((2,), 9.0)}
+            out = restore_tree(template, p, partial=True)
+            np.testing.assert_array_equal(np.asarray(out["b"]), 2.0)
+            np.testing.assert_array_equal(np.asarray(out["c"]), 9.0)
+            assert "a" not in out
+
+
+# ---------------------------------------------------------------------------
+# sharded manifests + CK* contract validation
+# ---------------------------------------------------------------------------
+
+def _sharded_save(d):
+    tree = {"wo": np.arange(64, dtype=np.float32).reshape(8, 8),
+            "b": np.arange(3, dtype=np.float32)}
+    specs = {"wo": P("model", None), "b": P()}
+    p = os.path.join(d, "ck")
+    save_tree(tree, p, extra_meta={"step": 5}, mesh=_Mesh12(), specs=specs)
+    return p, tree
+
+
+class TestShardedFormat:
+    def test_one_shard_file_per_host_and_reassembly(self):
+        with tempfile.TemporaryDirectory() as d:
+            p, tree = _sharded_save(d)
+            names = sorted(os.listdir(p))
+            assert names == ["META", "shard_00000-of-00002.npz",
+                            "shard_00001-of-00002.npz"]
+            with open(os.path.join(p, "META")) as f:
+                meta = json.load(f)
+            assert meta["format"] == 2 and meta["n_shards"] == 2
+            assert meta["mesh_axes"] == {"data": 1, "model": 2}
+            assert meta["manifest"]["['wo']"]["spec"] == [["model"], None]
+            # each shard holds only its half of the row-parallel leaf
+            s0 = np.load(os.path.join(p, names[1]))
+            assert s0[_sanitize("['wo']")].shape == (4, 8)
+            reader = CheckpointReader(p)
+            np.testing.assert_array_equal(reader.read("['wo']"), tree["wo"])
+            np.testing.assert_array_equal(reader.read("['b']"), tree["b"])
+            assert reader.extra == {"step": 5}
+            reader.close()
+            out = restore_tree({"wo": jnp.zeros((8, 8)),
+                                "b": jnp.zeros(3)}, p)
+            np.testing.assert_array_equal(np.asarray(out["wo"]), tree["wo"])
+
+    def test_validate_checkpoint_clean(self):
+        with tempfile.TemporaryDirectory() as d:
+            p, _ = _sharded_save(d)
+            findings = validate_checkpoint(p)
+            assert not [f for f in findings if f.severity == "error"]
+            assert any(f.rule == "CK0" for f in findings)
+
+    def test_validate_checkpoint_missing_shard_is_ck2(self):
+        with tempfile.TemporaryDirectory() as d:
+            p, _ = _sharded_save(d)
+            os.remove(os.path.join(p, "shard_00001-of-00002.npz"))
+            findings = validate_checkpoint(p)
+            assert any(f.rule == "CK2" and f.severity == "error"
+                       for f in findings)
+
+    def test_validate_checkpoint_commit_debris_is_ck3(self):
+        with tempfile.TemporaryDirectory() as d:
+            p, _ = _sharded_save(d)
+            os.makedirs(p + ".tmp.deadbeef")
+            findings = validate_checkpoint(p)
+            assert any(f.rule == "CK3" and f.severity == "warning"
+                       for f in findings)
+
+    def test_legacy_v1_checkpoint_still_readable(self):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck")
+            os.makedirs(p)
+            arr = np.arange(6, dtype=np.float32).reshape(2, 3)
+            np.savez(os.path.join(p, "arrays.npz"), **{"_'w'_": arr})
+            with open(os.path.join(p, "META"), "w") as f:
+                json.dump({"manifest": {"['w']": "_'w'_"},
+                           "extra": {"step": 1}}, f)
+            out = restore_tree({"w": jnp.zeros((2, 3))}, p)
+            np.testing.assert_array_equal(np.asarray(out["w"]), arr)
+
+
+# ---------------------------------------------------------------------------
+# direct checkpoint -> serving cold-start (streamed, no dense f32 tree)
+# ---------------------------------------------------------------------------
+
+def _quant_setup(mode="bitplane"):
+    from repro.configs import REGISTRY
+    from repro.models.api import build
+    from repro.models.common import QuantConfig
+    cfg = REGISTRY["phi3-mini-3.8b"].tiny(dtype="float32").with_quant(
+        QuantConfig(mode=mode, n_bits=8, act_bits=8))
+    api = build(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+class TestColdStart:
+    def test_streamed_deploy_peak_below_dense_and_bit_identical(self):
+        from repro.serve.deploy import to_serving_params
+        cfg, api, params = _quant_setup()
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck")
+            save_tree(params, p)
+            stats = {}
+            sp = to_serving_params(p, 8, layout="bitplane",
+                                   template=api.abstract_params(),
+                                   stats=stats)
+        # the whole point: the f32 tree is never resident at once
+        assert 0 < stats["peak_host_bytes"] < stats["dense_tree_bytes"]
+        ref = to_serving_params(params, 8, layout="bitplane")
+        for a, b in zip(jax.tree_util.tree_leaves(sp),
+                        jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_trainstate_checkpoint_streams_params_only(self):
+        from repro.optim import sgd
+        from repro.serve.deploy import to_serving_params
+        from repro.train.state import TrainState
+        cfg, api, params = _quant_setup()
+        state = TrainState.create(params,
+                                  sgd(momentum=0.9, weight_decay=0.0), 0.0)
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck")
+            save_tree(state, p)
+            sp = to_serving_params(p, 8, layout="bitplane",
+                                   template=api.abstract_params())
+        ref = to_serving_params(params, 8, layout="bitplane")
+        for a, b in zip(jax.tree_util.tree_leaves(sp),
+                        jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_cold_start_engine_generates(self):
+        from repro.serve import ServeEngine
+        from repro.serve.deploy import to_serving_params
+        cfg, api, params = _quant_setup()
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck")
+            save_tree(params, p)
+            sp = to_serving_params(p, 8, layout="bitplane",
+                                   template=api.abstract_params())
+        eng = ServeEngine(api, sp, backend="bitplane")
+        batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+        out = eng.generate(batch, max_new=4)
+        assert out.shape == (2, 4)
+        ref_eng = ServeEngine(api, to_serving_params(
+            params, 8, layout="bitplane"), backend="bitplane")
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ref_eng.generate(batch, max_new=4)))
+
+    def test_resolve_ckpt_dir(self):
+        from repro.launch.serve import resolve_ckpt_dir
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, use_async=False)
+            mgr.save(3, {"w": jnp.ones(2)})
+            mgr.save(7, {"w": jnp.ones(2)})
+            step7 = os.path.join(d, "step_7")
+            assert resolve_ckpt_dir(d) == step7
+            assert resolve_ckpt_dir(d, step=3) == os.path.join(d, "step_3")
+            assert resolve_ckpt_dir(step7) == step7
+            with pytest.raises(SystemExit):
+                resolve_ckpt_dir(d, step=9)          # no such step
+            with tempfile.TemporaryDirectory() as empty:
+                with pytest.raises(SystemExit):
+                    resolve_ckpt_dir(empty)          # no checkpoints at all
+
+
+# ---------------------------------------------------------------------------
+# elastic cross-mesh restore + padded numeric parity (2 devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_ELASTIC_SCRIPT = r"""
+import dataclasses, json, os, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import REGISTRY
+from repro.models.api import build
+from repro.models.common import QuantConfig
+from repro.dist.sharding import use_mesh
+from repro.launch.mesh import make_mesh
+from repro.ckpt import restore_tree, save_tree
+
+assert jax.device_count() == 2, jax.device_count()
+cfg = REGISTRY["phi3-mini-3.8b"].tiny(dtype="float32").with_quant(
+    QuantConfig(mode="fake", n_bits=8, act_bits=8))
+api = build(cfg)
+params = api.init(jax.random.PRNGKey(0))
+template = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+def same(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+with tempfile.TemporaryDirectory() as d:
+    # save under a model-parallel 2-device mesh -> 2 shard files
+    mesh_a = make_mesh((1, 2), ("data", "model"))
+    p1 = os.path.join(d, "sharded")
+    with use_mesh(mesh_a):
+        save_tree(params, p1, mesh=mesh_a)
+    with open(os.path.join(p1, "META")) as f:
+        assert json.load(f)["n_shards"] == 2
+    # restore onto a *different* live mesh (elastic), and onto no mesh
+    mesh_b = make_mesh((2, 1), ("data", "model"))
+    with use_mesh(mesh_b):
+        same(params, restore_tree(template, p1, mesh=mesh_b))
+    same(params, restore_tree(template, p1))
+    # the reverse direction: unsharded save -> sharded restore
+    p2 = os.path.join(d, "mono")
+    save_tree(params, p2)
+    with use_mesh(mesh_a):
+        same(params, restore_tree(template, p2, mesh=mesh_a))
+print("ELASTIC_OK")
+
+# padded sharding: a prime vocab (251) cannot divide the 2-way model axis;
+# the engine zero-pads at placement and slices back in-graph, so tokens
+# must match the unsharded engine exactly
+from repro.serve import ServeEngine
+cfgp = dataclasses.replace(cfg, vocab=251)
+apip = build(cfgp)
+pp = apip.init(jax.random.PRNGKey(0))
+batch = {"tokens": jax.random.randint(
+    jax.random.PRNGKey(1), (4, 8), 0, 251).astype(jnp.int32)}
+ref = np.asarray(ServeEngine(apip, pp).generate(batch, max_new=6))
+for shape in [(1, 2), (2, 1)]:
+    with use_mesh(make_mesh(shape, ("data", "model"))):
+        out = np.asarray(ServeEngine(apip, pp).generate(batch, max_new=6))
+    assert (out == ref).all(), shape
+print("PADDED_OK")
+"""
+
+
+def test_elastic_restore_and_padded_parity_two_devices():
+    """Checkpoints written under one mesh restore bit-identically under
+    another (and under none), and padded parameter sharding of an
+    indivisible vocab decodes token-identically to single-device."""
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")] +
+                   sys.path))
+    out = subprocess.run([sys.executable, "-c", _ELASTIC_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ELASTIC_OK" in out.stdout
+    assert "PADDED_OK" in out.stdout

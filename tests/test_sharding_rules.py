@@ -119,17 +119,49 @@ def test_multipod_fit_and_cache_pspecs():
             {"k": jax.ShapeDtypeStruct((16, 16, 64, 2, 8), jnp.float32)},
             batch_size=16)
         assert cs2["k"][0] is None and cs2["k"][1] == ("pod", "data")
-    # a >1 mesh axis that does NOT divide the dim gets dropped; fit_spec
-    # only reads mesh.shape, so a stand-in covers >1 sizes on 1 device
+    # a >1 mesh axis that does NOT divide the dim: padded sharding (the
+    # default) keeps it — the placement boundary zero-pads the dim — and
+    # pad=False restores the legacy drop; fit_spec only reads mesh.shape,
+    # so a stand-in covers >1 sizes on 1 device
     class _Mesh22:
         shape = {"data": 2, "model": 2}
 
     mesh2 = _Mesh22()
-    assert fit_spec(P("data", "model"), (7, 8), mesh2) == P(None, "model")
-    assert fit_spec(P("data", "model"), (8, 7), mesh2) == P("data", None)
-    # axes absent from the mesh are dropped too
+    assert fit_spec(P("data", "model"), (7, 8), mesh2) == P("data", "model")
+    assert fit_spec(P("data", "model"), (7, 8), mesh2, pad=False) == \
+        P(None, "model")
+    assert fit_spec(P("data", "model"), (8, 7), mesh2, pad=False) == \
+        P("data", None)
+    # axes absent from the mesh are dropped regardless of padding
     assert fit_spec(P(("pod", "data"), None), (8, 8), mesh2) == \
         P("data", None)
+
+
+def test_padded_fit_spec_and_helpers():
+    """Ceil-division padded sharding: spec kept, SpecPad recorded, the
+    pad/unpad boundary helpers round-trip exactly."""
+    import numpy as np
+    from repro.dist.sharding import (SpecPad, collect_spec_events, pad_leaf,
+                                     padded_shape, unpad_leaf)
+
+    class _Mesh22:
+        shape = {"data": 2, "model": 2}
+
+    mesh = _Mesh22()
+    with collect_spec_events() as events:
+        ps = fit_spec(P("data", "model"), (7, 8), mesh, label="x")
+    assert ps == P("data", "model")
+    pads = [e for e in events if isinstance(e, SpecPad)]
+    assert len(pads) == 1 and pads[0].dim == 0 \
+        and pads[0].padded_size == 8 and pads[0].group_size == 2
+    assert padded_shape(ps, (7, 8), mesh) == (8, 8)
+    x = np.arange(7 * 8, dtype=np.float32).reshape(7, 8)
+    xp = pad_leaf(x, ps, mesh)
+    assert xp.shape == (8, 8) and not xp[7].any()
+    np.testing.assert_array_equal(unpad_leaf(xp, (7, 8)), x)
+    # in-graph / donated call sites opt out and keep the legacy drop
+    assert fit_spec(P("data", "model"), (7, 8), mesh,
+                    pad=False) == P(None, "model")
 
 
 def test_hlo_mixed_dtypes_and_no_collectives():
